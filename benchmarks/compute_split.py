@@ -1,0 +1,92 @@
+"""E5 — the paper's efficiency claim (contribution 2): the cut point moves
+the inference compute from client to server, and training communication is
+O(batch·image) instead of O(model) as in federated learning.
+
+Measured two ways: (a) analytic — per-step denoiser FLOPs × step counts;
+(b) wall-clock on CPU — timed server/client fori_loop segments at several
+cut points. Also reports the Alg.-1 payload bytes vs. what FedAvg would
+ship per round (full model weights)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json, time_call
+from repro.configs.ddpm_unet import SMALL
+from repro.core.collab import CollabConfig, build_denoiser
+from repro.core.protocol import make_payload
+from repro.core.sampler import client_denoise, server_denoise
+from repro.core.schedules import DiffusionSchedule
+from repro.core.splitting import CutPoint
+
+T = 60
+CUTS = [0, 12, 24, 48, 60]
+SHAPE = (8, 16, 16, 3)
+
+
+def unet_flops_per_call(apply_fn, params, shape):
+    x = jnp.zeros(shape)
+    t = jnp.zeros((shape[0],))
+    y = jnp.zeros((shape[0], 8))
+    c = jax.jit(apply_fn).lower(params, x, t, y).compile().cost_analysis()
+    return float(c.get("flops", 0.0)) if c else 0.0
+
+
+def main(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    ccfg = CollabConfig(T=T, t_cut=0, image_size=16, n_classes=8)
+    init_one, apply_fn = build_denoiser(key, ccfg)
+    params = init_one(key)
+    sched = DiffusionSchedule.linear(T)
+    per_call = unet_flops_per_call(apply_fn, params, SHAPE)
+
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    fl_bytes_per_round = n_params * 4  # FedAvg ships fp32 weights
+    y = jnp.zeros((SHAPE[0], 8))
+    cuts = CUTS if not quick else [0, 24, 60]
+
+    rows = []
+    for t_cut in cuts:
+        cut = CutPoint(T, t_cut)
+        client_flops = per_call * cut.n_client_steps * 1.0
+        server_flops = per_call * cut.n_server_steps * 1.0
+        share = client_flops / max(client_flops + server_flops, 1.0)
+
+        us_server = time_call(
+            jax.jit(lambda k: server_denoise(params, k, y, SHAPE, sched, cut,
+                                             apply_fn)), key, iters=3) \
+            if cut.n_server_steps else 0.0
+        x_cut = jax.random.normal(key, SHAPE)
+        us_client = time_call(
+            jax.jit(lambda k: client_denoise(params, k, x_cut, y, sched, cut,
+                                             apply_fn)), key, iters=3) \
+            if cut.n_client_steps else 0.0
+
+        x0 = jax.random.normal(key, SHAPE)
+        payload = make_payload(x0, y, key, sched, cut)
+        rows.append({
+            "t_cut": t_cut, "client_flops_share": share,
+            "client_us": us_client, "server_us": us_server,
+            "payload_bytes": payload.nbytes(),
+            "fedavg_bytes": fl_bytes_per_round,
+            "comm_reduction_vs_fl": fl_bytes_per_round / payload.nbytes(),
+        })
+        emit(f"compute_split/t_cut={t_cut}", us_client + us_server,
+             f"client_share={share:.3f};client_us={us_client:.0f};"
+             f"payload_B={payload.nbytes()};"
+             f"vs_fedavg_x{rows[-1]['comm_reduction_vs_fl']:.0f}")
+
+    summary = {
+        "rows": rows, "unet_flops_per_call": per_call, "n_params": n_params,
+        "claim_client_share_monotone": all(
+            rows[i]["client_flops_share"] <= rows[i + 1]["client_flops_share"]
+            for i in range(len(rows) - 1)),
+    }
+    save_json("compute_split", summary)
+    emit("compute_split/summary", 0.0,
+         f"client_share_monotone={summary['claim_client_share_monotone']}")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

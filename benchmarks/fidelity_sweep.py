@@ -1,0 +1,93 @@
+"""E1 + E2 — paper Fig. 4: client-side fidelity and server-side disclosure
+across cut points, vs. the GM (t_ζ=0) and ICM (t_ζ=T) baselines.
+
+Miniature faithful rerun of the paper's core experiment: k clients with
+non-IID attribute-partitioned data, Alg.-1 training per cut point, Alg.-2
+sampling, FD-proxy in both directions. Paper claims reproduced:
+  (1) small t_ζ beats ICM fidelity (often also GM),
+  (2) disclosure (similarity of the server handoff to real data) falls
+      monotonically as t_ζ grows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json, time_call
+from repro.core.collab import CollabConfig, sample_for_client, setup, train_round
+from repro.data.synthetic import SyntheticConfig, batches, make_client_datasets
+from repro.eval.fd_proxy import fd_proxy
+
+# CPU-budget miniature of the paper's protocol (T=1000 -> 80).
+T = 80
+CUTS = [0, 8, 16, 32, 56, 80]          # includes GM (0) and ICM (T)
+K = 2
+ROUNDS = 3
+STEPS = 24
+IMG = 8
+N_PER_CLIENT = 384
+N_EVAL = 96
+
+
+def train_one(t_cut: int, key, data):
+    ccfg = CollabConfig(n_clients=K, T=T, t_cut=t_cut, image_size=IMG,
+                        batch_size=8, n_classes=8)
+    state, step_fn, apply_fn = setup(key, ccfg)
+    for r in range(ROUNDS):
+        kr = jax.random.fold_in(key, 100 + r)
+        per_client = [list(batches(x, y, 8, jax.random.fold_in(kr, c)))[:STEPS]
+                      for c, (x, y) in enumerate(data)]
+        train_round(state, step_fn, per_client, kr)
+    return ccfg, state, apply_fn
+
+
+def main(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    dcfg = SyntheticConfig(image_size=IMG, n_attrs=8)
+    data = make_client_datasets(key, dcfg, K, N_PER_CLIENT, non_iid=True)
+    cuts = CUTS if not quick else [0, 16, T]
+
+    rows = []
+    for t_cut in cuts:
+        t0 = time.time()
+        ccfg, state, apply_fn = train_one(t_cut, key, data)
+        fid, dis = [], []
+        for c, (x, y) in enumerate(data):
+            ke = jax.random.fold_in(key, 999 + c)
+            samp, handoff = sample_for_client(
+                state, c, ke, y[:N_EVAL], ccfg, apply_fn, return_handoff=True)
+            fid.append(fd_proxy(x[:N_EVAL], samp))
+            dis.append(fd_proxy(x[:N_EVAL], handoff))
+        row = {"t_cut": t_cut, "fd_client": sum(fid) / len(fid),
+               "fd_disclosure": sum(dis) / len(dis),
+               "train_s": round(time.time() - t0, 1)}
+        rows.append(row)
+        emit(f"fidelity_sweep/t_cut={t_cut}", row["train_s"] * 1e6,
+             f"fd_client={row['fd_client']:.3f};"
+             f"fd_disclosure={row['fd_disclosure']:.3f}")
+
+    gm = next(r for r in rows if r["t_cut"] == 0)
+    icm = next(r for r in rows if r["t_cut"] == max(cuts))
+    collab = [r for r in rows if 0 < r["t_cut"] < max(cuts)]
+    best = min(collab, key=lambda r: r["fd_client"]) if collab else None
+    summary = {
+        "rows": rows,
+        "gm_fd": gm["fd_client"], "icm_fd": icm["fd_client"],
+        "best_collab_fd": best["fd_client"] if best else None,
+        "claim_small_cut_beats_icm":
+            bool(best and best["fd_client"] < icm["fd_client"]),
+        "claim_disclosure_monotone": all(
+            rows[i]["fd_disclosure"] <= rows[i + 1]["fd_disclosure"] + 0.05
+            for i in range(len(rows) - 1)),
+    }
+    save_json("fidelity_sweep", summary)
+    emit("fidelity_sweep/summary", 0.0,
+         f"beats_icm={summary['claim_small_cut_beats_icm']};"
+         f"disclosure_monotone={summary['claim_disclosure_monotone']}")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""E7 (beyond paper — the comparison the paper's §5 calls for): CollaFuse
+vs. FedAvg-DDPM at an EQUAL number of client gradient steps, on the same
+non-IID client datasets. Axes (paper §5): image quality (FD-proxy),
+client compute (training step cost ratio + inference FLOP share), and
+communication (bytes shipped per protocol).
+
+Expectations:
+  * FedAvg quality ~ GM-like (one global model; personalization lost),
+  * CollaFuse communication per step ≪ FedAvg per round (payload vs 2|θ|),
+  * CollaFuse client inference compute = t_ζ/T vs FedAvg's 1.0.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit, save_json
+from repro.core.collab import CollabConfig, sample_for_client, setup, train_round
+from repro.core.fedavg import (fedavg_round, fedavg_sample, fedavg_setup,
+                               make_local_step, params_nbytes)
+from repro.core.protocol import make_payload
+from repro.core.schedules import DiffusionSchedule
+from repro.data.synthetic import SyntheticConfig, batches, make_client_datasets
+from repro.eval.fd_proxy import fd_proxy
+from repro.optim.adamw import AdamWConfig
+
+T, T_CUT, K = 80, 16, 2
+ROUNDS, STEPS = 3, 24
+N_EVAL = 96
+
+
+def main(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    rounds = 2 if quick else ROUNDS
+    ccfg = CollabConfig(n_clients=K, T=T, t_cut=T_CUT, image_size=8,
+                        batch_size=8, n_classes=8)
+    dcfg = SyntheticConfig(image_size=8, n_attrs=8)
+    data = make_client_datasets(key, dcfg, K, 384, non_iid=True)
+    sched = DiffusionSchedule.linear(T)
+
+    def client_batches(kr):
+        return [list(batches(x, y, 8, jax.random.fold_in(kr, c)))[:STEPS]
+                for c, (x, y) in enumerate(data)]
+
+    # --- CollaFuse ---
+    state, step_fn, apply_fn = setup(key, ccfg)
+    t0 = time.time()
+    payload_bytes = 0
+    for r in range(rounds):
+        kr = jax.random.fold_in(key, r)
+        m = train_round(state, step_fn, client_batches(kr), kr)
+        payload_bytes += int(m[0]["payload_bytes"]) * STEPS * K
+    collab_s = time.time() - t0
+    fd_collab = []
+    for c, (x, y) in enumerate(data):
+        samp = sample_for_client(state, c, jax.random.fold_in(key, 77 + c),
+                                 y[:N_EVAL], ccfg, apply_fn)
+        fd_collab.append(fd_proxy(x[:N_EVAL], samp))
+
+    # --- FedAvg (equal client gradient steps, full-model training) ---
+    from repro.core.collab import build_denoiser
+    init_one, apply_fn2 = build_denoiser(key, ccfg)
+    fl = fedavg_setup(key, init_one, K)
+    local = jax.jit(make_local_step(sched, T, apply_fn2, AdamWConfig(lr=ccfg.lr)))
+    t0 = time.time()
+    for r in range(rounds):
+        kr = jax.random.fold_in(key, 1000 + r)
+        fm = fedavg_round(fl, local, client_batches(kr), kr)
+    fed_s = time.time() - t0
+    fd_fed = []
+    for c, (x, y) in enumerate(data):
+        samp = fedavg_sample(fl, c, jax.random.fold_in(key, 88 + c),
+                             y[:N_EVAL], ccfg.image_shape(N_EVAL), sched, T,
+                             apply_fn2)
+        fd_fed.append(fd_proxy(x[:N_EVAL], samp))
+
+    summary = {
+        "fd_collafuse": sum(fd_collab) / K,
+        "fd_fedavg": sum(fd_fed) / K,
+        "comm_collafuse_bytes": payload_bytes,
+        "comm_fedavg_bytes": fm["comm_bytes_total"],
+        "comm_ratio_fedavg_over_collafuse":
+            fm["comm_bytes_total"] / max(payload_bytes, 1),
+        "client_infer_share_collafuse": T_CUT / T,
+        "client_infer_share_fedavg": 1.0,
+        "train_wall_collafuse_s": collab_s,
+        "train_wall_fedavg_s": fed_s,
+        "model_bytes": params_nbytes(fl.global_params),
+    }
+    save_json("fl_comparison", summary)
+    emit("fl_comparison/collafuse", collab_s * 1e6,
+         f"fd={summary['fd_collafuse']:.3f};comm_B={payload_bytes}")
+    emit("fl_comparison/fedavg", fed_s * 1e6,
+         f"fd={summary['fd_fedavg']:.3f};comm_B={fm['comm_bytes_total']}")
+    emit("fl_comparison/summary", 0.0,
+         f"comm_x{summary['comm_ratio_fedavg_over_collafuse']:.2f};"
+         f"infer_share={T_CUT / T:.2f}_vs_1.0")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

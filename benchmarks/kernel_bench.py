@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: jnp-oracle wall time on CPU (the Pallas paths
+target TPU and are correctness-validated in interpret mode — wall-clock
+Pallas numbers on CPU would be meaningless). Derived column records the
+arithmetic intensity the kernel is designed around."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core.schedules import DiffusionSchedule
+from repro.kernels.ddpm_step.ops import ddpm_step
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.grouped_matmul.ops import grouped_matmul
+from repro.kernels.ssd_scan.ops import ssd_scan
+
+
+def main(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+
+    sched = DiffusionSchedule.linear(1000)
+    x = jax.random.normal(key, (16, 32, 32, 3))
+    f = jax.jit(lambda a, b, c: ddpm_step(a, b, c, sched, 500.0))
+    us = time_call(f, x, x, x)
+    emit("kernel/ddpm_step_16x32x32x3", us,
+         f"bytes={4 * x.size * 4};elementwise_fused=4ops")
+
+    B, H, S, dh = 2, 8, 512, 64
+    q = jax.random.normal(key, (B, H, S, dh))
+    kv = jax.random.normal(key, (B, 2, S, dh))
+    f = jax.jit(lambda a, b, c: flash_attention(a, b, c, causal=True))
+    us = time_call(f, q, kv, kv)
+    flops = 4 * B * H * S * S * dh / 2
+    emit("kernel/flash_attention_2x8x512x64", us, f"flops={flops:.3g}")
+
+    b, s, h, p, n = 2, 512, 8, 64, 64
+    xx = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(key, (b, s, h)))
+    A = -jnp.exp(jax.random.normal(key, (h,)))
+    Bm = jax.random.normal(key, (b, s, n))
+    f = jax.jit(lambda *a: ssd_scan(*a, chunk=64))
+    us = time_call(f, xx, dt, A, Bm, Bm)
+    emit("kernel/ssd_scan_2x512x8x64", us, f"state={h * p * n}el")
+
+    E, C, D, F = 8, 128, 256, 512
+    t = jax.random.normal(key, (E, C, D))
+    w = jax.random.normal(key, (E, D, F))
+    f = jax.jit(grouped_matmul)
+    us = time_call(f, t, w)
+    emit("kernel/grouped_matmul_8x128x256x512", us,
+         f"flops={2 * E * C * D * F:.3g}")
+
+
+if __name__ == "__main__":
+    main()

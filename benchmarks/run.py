@@ -1,0 +1,71 @@
+"""Benchmark harness entrypoint — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+Suites:
+  fidelity_sweep       paper Fig. 4 (top): FD vs cut point, GM/ICM baselines
+  attr_inference_sweep paper Fig. 7: attribute-inference F1 vs cut point
+  inversion_sweep      paper Fig. 8: cross-client inversion vs cut point
+  compute_split        paper contribution 2: client compute share + comms
+  m_remap_ablation     paper §4.2: Alg.-2 schedule-remap on/off
+  kernel_bench         Pallas-kernel oracle micro-benchmarks
+  roofline             (separate process: needs 512 host devices) — printed
+                       from experiments/roofline/summary.json if present;
+                       regenerate with `python -m benchmarks.roofline --all`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+SUITES = ["kernel_bench", "compute_split", "attr_inference_sweep",
+          "inversion_sweep", "m_remap_ablation", "beyond_paper",
+          "fl_comparison", "dp_payload", "fidelity_sweep"]
+
+
+def print_roofline_summary():
+    path = os.path.join("experiments", "roofline", "summary.json")
+    if not os.path.exists(path):
+        print("roofline/summary,0.0,missing (run: PYTHONPATH=src python -m "
+              "benchmarks.roofline --all)")
+        return
+    rows = json.load(open(path))
+    ok = [r for r in rows if r["status"] == "ok"]
+    for r in ok:
+        print(f"roofline/{r['arch']}__{r['shape']},0.0,"
+              f"dom={r['dominant']};comp={r['t_compute_s']:.2e};"
+              f"mem={r['t_memory_s']:.2e};coll={r['t_collective_s']:.2e};"
+              f"useful={r['useful_flops_ratio']:.2f}")
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print(f"roofline/summary,0.0,pairs={len(ok)};dominants={doms}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    import importlib
+    for name in SUITES:
+        if args.only and args.only != name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        ts = time.time()
+        mod.main(quick=args.quick)
+        print(f"{name}/wall,{(time.time() - ts) * 1e6:.0f},")
+    if args.only in (None, "roofline"):
+        print_roofline_summary()
+    print(f"run/total_wall,{(time.time() - t0) * 1e6:.0f},")
+
+
+if __name__ == "__main__":
+    main()

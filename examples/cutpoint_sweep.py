@@ -1,0 +1,39 @@
+"""Cut-point trade-off in one picture (paper Fig. 4, miniature).
+
+    PYTHONPATH=src python examples/cutpoint_sweep.py
+
+Sweeps t_ζ ∈ {0, T/4, T/2, T} and prints the fidelity/disclosure/compute
+triangle the paper is about. (benchmarks/fidelity_sweep.py is the full
+version with trained models; this example uses a short training budget.)
+"""
+import jax
+
+from repro.core.collab import CollabConfig, sample_for_client, setup, train_round
+from repro.core.splitting import CutPoint
+from repro.data.synthetic import SyntheticConfig, batches, make_client_datasets
+from repro.eval.fd_proxy import fd_proxy
+
+T = 40
+key = jax.random.PRNGKey(0)
+dcfg = SyntheticConfig(image_size=8, n_attrs=8)
+data = make_client_datasets(key, dcfg, 2, 256, non_iid=True)
+
+print(f"{'t_cut':>6} {'client_steps%':>14} {'FD(sample)':>11} "
+      f"{'FD(handoff)':>12}")
+for t_cut in (0, T // 4, T // 2, T):
+    ccfg = CollabConfig(n_clients=2, T=T, t_cut=t_cut, image_size=8,
+                        batch_size=8, n_classes=8)
+    state, step_fn, apply_fn = setup(key, ccfg)
+    kr = jax.random.fold_in(key, t_cut)
+    per_client = [list(batches(x, y, 8, kr))[:16] for x, y in data]
+    train_round(state, step_fn, per_client, kr)
+    samp, hand = sample_for_client(state, 0, kr, data[0][1][:32], ccfg,
+                                   apply_fn, return_handoff=True)
+    cut = CutPoint(T, t_cut)
+    share = 100.0 * cut.n_client_steps / T
+    print(f"{t_cut:>6} {share:>13.0f}% "
+          f"{fd_proxy(data[0][0][:64], samp):>11.3f} "
+          f"{fd_proxy(data[0][0][:64], hand):>12.3f}")
+print("\nReading: fidelity is best at small-but-nonzero cuts; handoff FD "
+      "(disclosure protection) grows with the cut; client compute share "
+      "grows linearly with the cut.")

@@ -1,0 +1,43 @@
+"""Quickstart: train a 2-client CollaFuse system and sample collaboratively.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+~2 minutes on CPU. Shows the whole public API surface: config, synthetic
+non-IID data, Alg.-1 training, Alg.-2 split inference, FD-proxy evaluation.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.collab import (CollabConfig, sample_for_client, setup,
+                               train_round)
+from repro.data.synthetic import SyntheticConfig, batches, make_client_datasets
+from repro.eval.fd_proxy import fd_proxy
+
+key = jax.random.PRNGKey(0)
+
+# 1. Configure: T=60 diffusion steps, cut point 15 → the server runs 45
+#    high-noise steps, each client only 15 low-noise steps.
+ccfg = CollabConfig(n_clients=2, T=60, t_cut=15, image_size=8, batch_size=8,
+                    n_classes=8)
+
+# 2. Non-IID client data (each client specializes in some attributes).
+dcfg = SyntheticConfig(image_size=8, n_attrs=8)
+data = make_client_datasets(key, dcfg, ccfg.n_clients, 256, non_iid=True)
+
+# 3. Collaborative training (paper Alg. 1).
+state, step_fn, apply_fn = setup(key, ccfg)
+for r in range(2):
+    kr = jax.random.fold_in(key, r)
+    per_client = [list(batches(x, y, 8, kr))[:16] for x, y in data]
+    metrics = train_round(state, step_fn, per_client, kr)
+    print(f"round {r}: {metrics[0]}")
+
+# 4. Collaborative inference (paper Alg. 2): the server denoises to the cut
+#    point, the client finishes locally with the remapped schedule.
+y = data[0][1][:16]
+samples, handoff = sample_for_client(state, 0, key, y, ccfg, apply_fn,
+                                     return_handoff=True)
+print("samples:", samples.shape)
+print("FD(real, samples):        %.3f" % fd_proxy(data[0][0][:64], samples))
+print("FD(real, server handoff): %.3f  <- information the server could "
+      "disclose" % fd_proxy(data[0][0][:64], handoff))

@@ -1,0 +1,18 @@
+"""Train + serve an assigned architecture at smoke scale.
+
+    PYTHONPATH=src python examples/train_lm.py [arch]
+
+Uses the launch drivers (the same code paths the dry-run lowers at
+production scale).
+"""
+import sys
+
+from repro.launch import serve, train
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "granite-8b"
+print(f"== training reduced {arch} ==")
+train.main(["--arch", arch, "--reduced", "--steps", "30", "--batch", "4",
+            "--seq", "64"])
+print(f"\n== serving reduced {arch} ==")
+serve.main(["--arch", arch, "--reduced", "--batch", "2", "--prompt-len",
+            "16", "--new-tokens", "8"])

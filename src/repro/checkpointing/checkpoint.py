@@ -1,0 +1,67 @@
+"""Msgpack-based pytree checkpointing (no orbax offline).
+
+Arrays are serialized as (dtype, shape, raw bytes); the pytree structure is
+encoded with string-keyed dicts / lists. Saves are atomic (tmp + rename).
+CollaFuse drivers persist {server, clients[i], opt states, step}.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes  # noqa: F401 — registers bfloat16 etc. with numpy
+import msgpack
+import numpy as np
+
+_ARR = "__arr__"
+
+
+def _pack(obj):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+        a = np.asarray(obj)
+        # dtype by NAME ("bfloat16"): ml_dtypes registers these with numpy,
+        # while the .str form ("|V2") round-trips as raw void.
+        return {_ARR: True, "dtype": a.dtype.name, "shape": list(a.shape),
+                "data": a.tobytes()}
+    if isinstance(obj, dict):
+        return {k: _pack(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return {"__list__": [_pack(v) for v in obj],
+                "__tuple__": isinstance(obj, tuple)}
+    if isinstance(obj, (int, float, str, bool)) or obj is None:
+        return obj
+    raise TypeError(f"unsupported checkpoint leaf: {type(obj)}")
+
+
+def _unpack(obj):
+    if isinstance(obj, dict):
+        if obj.get(_ARR):
+            a = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
+            return jnp.asarray(a.reshape(obj["shape"]))
+        if "__list__" in obj:
+            items = [_unpack(v) for v in obj["__list__"]]
+            return tuple(items) if obj.get("__tuple__") else items
+        return {k: _unpack(v) for k, v in obj.items()}
+    return obj
+
+
+def save(path: str, tree: Any) -> None:
+    payload = msgpack.packb(_pack(tree), use_bin_type=True)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _unpack(msgpack.unpackb(f.read(), raw=False))

@@ -1,0 +1,125 @@
+"""Multi-client orchestration for CollaFuse (paper §4: k = 5 clients, one
+trusted server) plus the two baselines the paper compares against:
+
+  * GM  — global model, t_ζ = 0: one server model on the union of data.
+  * ICM — independent client models, t_ζ = T: no server.
+
+The round structure follows Alg. 1's outer loops: for each client, for each
+batch — client update, then server update from that client's payload. One
+jitted step function is shared by all clients (identical shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, get_arch, reduced
+from repro.configs.ddpm_unet import SMALL, UNetConfig
+from repro.core.dit import DiTConfig, init_dit, make_dit_apply
+from repro.core.protocol import make_collab_step
+from repro.core.sampler import collaborative_sample, server_denoise
+from repro.core.schedules import DiffusionSchedule
+from repro.core.splitting import CutPoint
+from repro.core.unet import init_unet, unet_apply
+from repro.optim.adamw import AdamWConfig, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class CollabConfig:
+    n_clients: int = 5           # paper §4
+    T: int = 1000                # paper §4.1
+    t_cut: int = 200
+    denoiser: str = "unet"       # "unet" | assigned arch id (DiT bridge)
+    image_size: int = 16
+    channels: int = 3
+    n_classes: int = 8
+    batch_size: int = 8          # paper §4.1
+    lr: float = 1e-3             # paper §4.1
+    schedule: str = "linear"
+    unet: Optional[UNetConfig] = None       # defaults to SMALL resized
+    dit_patch: int = 4
+
+    def cut(self) -> CutPoint:
+        return CutPoint(self.T, self.t_cut)
+
+    def sched(self) -> DiffusionSchedule:
+        mk = (DiffusionSchedule.linear if self.schedule == "linear"
+              else DiffusionSchedule.cosine)
+        return mk(self.T)
+
+    def image_shape(self, batch: Optional[int] = None):
+        b = batch or self.batch_size
+        return (b, self.image_size, self.image_size, self.channels)
+
+
+@dataclasses.dataclass
+class CollabState:
+    server_params: Dict
+    server_opt: Dict
+    client_params: List[Dict]
+    client_opt: List[Dict]
+    step: int = 0
+
+
+def build_denoiser(key, cfg: CollabConfig):
+    """Returns (init_one_model_fn, apply_fn)."""
+    if cfg.denoiser == "unet":
+        ucfg = cfg.unet or dataclasses.replace(
+            SMALL, image_size=cfg.image_size, channels=cfg.channels,
+            n_classes=cfg.n_classes)
+        return (lambda k: init_unet(k, ucfg),
+                lambda p, x, t, y: unet_apply(p, x, t, y, ucfg))
+    arch = reduced(get_arch(cfg.denoiser))
+    if arch.family == "audio":
+        raise ValueError(
+            "whisper-base is an enc-dec audio arch; CollaFuse's denoising "
+            "split is inapplicable (DESIGN.md §Arch-applicability)")
+    dit = DiTConfig(image_size=cfg.image_size, channels=cfg.channels,
+                    patch_size=cfg.dit_patch, n_classes=cfg.n_classes)
+    return (lambda k: init_dit(k, arch, dit), make_dit_apply(arch, dit))
+
+
+def setup(key, cfg: CollabConfig) -> Tuple[CollabState, Callable, Callable]:
+    """Returns (state, jitted collab step fn, apply_fn)."""
+    init_one, apply_fn = build_denoiser(key, cfg)
+    ks, *kc = jax.random.split(key, cfg.n_clients + 1)
+    server_params = init_one(ks)
+    client_params = [init_one(k) for k in kc]
+    state = CollabState(
+        server_params=server_params,
+        server_opt=init_opt_state(server_params),
+        client_params=client_params,
+        client_opt=[init_opt_state(p) for p in client_params],
+    )
+    opt_cfg = AdamWConfig(lr=cfg.lr)
+    step = make_collab_step(cfg.sched(), cfg.cut(), apply_fn, opt_cfg)
+    return state, jax.jit(step), apply_fn
+
+
+def train_round(state: CollabState, step_fn, batches_per_client, key):
+    """batches_per_client: list over clients of lists of (x0, y) batches.
+    Mutates ``state`` in place; returns metrics of the last step per client."""
+    last = {}
+    for c, batches in enumerate(batches_per_client):
+        for (x0, y) in batches:
+            key, k = jax.random.split(key)
+            (state.client_params[c], state.client_opt[c],
+             state.server_params, state.server_opt, m) = step_fn(
+                state.client_params[c], state.client_opt[c],
+                state.server_params, state.server_opt, x0, y, k)
+            state.step += 1
+        last[c] = {k_: float(v) for k_, v in m.items()}
+    return last
+
+
+def sample_for_client(state: CollabState, client: int, key, y, cfg: CollabConfig,
+                      apply_fn, adjusted: bool = True, batch: int = None,
+                      return_handoff: bool = False):
+    shape = cfg.image_shape(batch or y.shape[0])
+    return collaborative_sample(
+        state.server_params, state.client_params[client], key, y, shape,
+        cfg.sched(), cfg.cut(), apply_fn, adjusted=adjusted,
+        return_handoff=return_handoff)

@@ -1,0 +1,135 @@
+"""DiT bridge: any assigned backbone architecture as a CollaFuse denoiser.
+
+Images are patchified into tokens; timestep + attribute conditioning is
+added to every token; the backbone (dense / MoE / SSM / hybrid blocks from
+models/) processes the token sequence; a linear head predicts the noise per
+patch. This is how the paper's technique becomes a *first-class feature*
+across the assigned architecture pool (DESIGN.md §5):
+
+  * dense / moe / vlm families → bidirectional attention blocks (causal=False)
+  * ssm / hybrid families → causal scan over a raster patch ordering (noted
+    deviation: a causal denoiser — the SSD scan has no bidirectional form;
+    this mirrors how diffusion-LM works with causal backbones).
+  * audio (whisper, enc-dec) → inapplicable; see DESIGN.md §Arch-applicability.
+
+The apply signature matches core/protocol.py: ``dit_apply(params, x, t, y)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.hybrid import _grouping, _split_groups
+from repro.models.layers import (dense_init, rmsnorm, rmsnorm_init,
+                                 sinusoidal_embedding)
+from repro.models.ssm import mamba_forward, mamba_init
+from repro.models.transformer import (CPU, Runtime, _scan_blocks, block_apply,
+                                      block_init, stacked_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    image_size: int = 16
+    channels: int = 3
+    patch_size: int = 4
+    n_classes: int = 8
+
+    @property
+    def n_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch_size ** 2 * self.channels
+
+
+def patchify(x, p: int):
+    """(B, H, W, C) -> (B, N, p*p*C) raster order."""
+    B, H, W, C = x.shape
+    x = x.reshape(B, H // p, p, W // p, p, C)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(B, (H // p) * (W // p),
+                                                 p * p * C)
+
+
+def unpatchify(t, p: int, H: int, W: int, C: int):
+    B, N, _ = t.shape
+    x = t.reshape(B, H // p, W // p, p, p, C)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(B, H, W, C)
+
+
+def init_dit(key, arch: ArchConfig, dit: DiTConfig) -> Dict:
+    dtype = arch.jnp_dtype
+    ki, kp, kt, kl, kb, ko = jax.random.split(key, 6)
+    d = arch.d_model
+    params = {
+        "patch_in": dense_init(ki, dit.patch_dim, d, dtype),
+        "pos": (jax.random.normal(kp, (dit.n_patches, d)) * 0.02).astype(dtype),
+        "time_mlp": {"w1": dense_init(kt, d, d, dtype),
+                     "w2": dense_init(jax.random.fold_in(kt, 1), d, d, dtype)},
+        "label_proj": dense_init(kl, dit.n_classes, d, dtype),
+        "final_norm": rmsnorm_init(d, dtype),
+        "patch_out": dense_init(ko, d, dit.patch_dim, dtype, scale=1e-3),
+    }
+    if arch.family in ("ssm", "hybrid"):
+        params["mamba"] = stacked_init(kb, arch.n_layers,
+                                       lambda k: mamba_init(k, arch, dtype))
+        if arch.shared_attn_every > 0:
+            params["shared"] = block_init(jax.random.fold_in(kb, 1), arch,
+                                          dtype)
+    else:
+        params["layers"] = stacked_init(kb, arch.n_layers,
+                                        lambda k: block_init(k, arch, dtype))
+    return params
+
+
+def _backbone(params, h, arch: ArchConfig, runtime: Runtime):
+    N = h.shape[1]
+    positions = jnp.arange(N, dtype=jnp.int32)[None]
+    if arch.family in ("ssm", "hybrid"):
+        g, G, r = _grouping(arch)
+        head, tail = _split_groups(params["mamba"], g, G)
+
+        def group(h, gp):
+            return jax.lax.scan(lambda xc, lp: (mamba_forward(lp, xc, arch),
+                                                None), h, gp)
+        if G > 0:
+            def outer(hc, gp):
+                ho, _ = group(hc, gp)
+                ho, _, _ = block_apply(params["shared"], ho, arch, runtime,
+                                       positions, causal=False)
+                return ho, None
+            h, _ = jax.lax.scan(outer, h, head)
+        h, _ = group(h, tail)
+        return h, jnp.float32(0.0)
+    h, aux, _ = _scan_blocks(params["layers"], h, arch, runtime, positions,
+                             collect_kv=False, causal=False)
+    return h, aux
+
+
+def dit_apply(params, x, t, y, arch: ArchConfig, dit: DiTConfig,
+              runtime: Runtime = CPU):
+    """x: (B,H,W,C); t: (B,) real timesteps; y: (B, n_classes) multi-hot."""
+    B, H, W, C = x.shape
+    tok = patchify(x.astype(params["patch_in"].dtype), dit.patch_size)
+    h = tok @ params["patch_in"] + params["pos"][None]
+    temb = sinusoidal_embedding(jnp.asarray(t, jnp.float32), arch.d_model
+                                ).astype(h.dtype)
+    tm = params["time_mlp"]
+    cond = jax.nn.silu(temb @ tm["w1"]) @ tm["w2"]
+    cond = cond + y.astype(cond.dtype) @ params["label_proj"]
+    h = h + cond[:, None, :]
+    h, _aux = _backbone(params, h, arch, runtime)
+    h = rmsnorm(params["final_norm"], h, arch.norm_eps)
+    out = h @ params["patch_out"]
+    return unpatchify(out.astype(jnp.float32), dit.patch_size, H, W, C)
+
+
+def make_dit_apply(arch: ArchConfig, dit: DiTConfig, runtime: Runtime = CPU):
+    """Adapter to the protocol's ``apply_fn(params, x_t, t, y)`` signature."""
+    def f(params, x_t, t, y):
+        return dit_apply(params, x_t, t, y, arch, dit, runtime)
+    return f

@@ -1,0 +1,116 @@
+"""FedAvg baseline for diffusion models (beyond-paper deliverable).
+
+The paper's §5 names this exact comparison as future work: "future work
+should empirically compare CollaFuse with FL-based diffusion approaches in
+terms of image quality, data privacy, computational cost, and communication
+overhead". This implements the standard FedAvg-DDPM recipe the related work
+uses ([McMahan et al. 2017]; Phoenix [Jothiraj & Mashhadi 2024];
+de Goede et al. 2024): every client trains a FULL local diffusion model on
+its own data over the full timestep range; after E local steps the server
+averages the weights and redistributes.
+
+Costs tracked per round (the comparison axes):
+  * client compute — full-model fwd/bwd on every batch AND the full T-step
+    sampling chain at inference (no server offload),
+  * communication — 2 × |θ| per client per round (up + down),
+vs. CollaFuse's t_ζ/T client compute share and O(batch·image) payloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.protocol import mse_eps_loss
+from repro.core.sampler import client_denoise
+from repro.core.schedules import DiffusionSchedule
+from repro.core.splitting import CutPoint
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass
+class FedAvgState:
+    global_params: Dict
+    client_params: List[Dict]
+    client_opt: List[Dict]
+    round: int = 0
+    comm_bytes: int = 0
+
+
+def params_nbytes(params) -> int:
+    return sum(int(p.size * p.dtype.itemsize) for p in jax.tree.leaves(params))
+
+
+def fedavg_setup(key, init_one: Callable, n_clients: int) -> FedAvgState:
+    gp = init_one(key)
+    return FedAvgState(
+        global_params=gp,
+        client_params=[jax.tree.map(jnp.copy, gp) for _ in range(n_clients)],
+        client_opt=[init_opt_state(gp) for _ in range(n_clients)],
+    )
+
+
+def make_local_step(sched: DiffusionSchedule, T: int, apply_fn,
+                    opt_cfg: AdamWConfig):
+    """One full-range DDPM training step (the FL client trains ALL
+    timesteps — this is what CollaFuse's split removes)."""
+
+    def step(params, opt, x0, y, key):
+        B = x0.shape[0]
+        k_t, k_e = jax.random.split(key)
+        t = jax.random.randint(k_t, (B,), 1, T + 1)
+        eps = jax.random.normal(k_e, x0.shape, dtype=jnp.float32)
+        x_t = sched.q_sample(x0, t, eps)
+
+        def loss_fn(p):
+            return mse_eps_loss(apply_fn, p, x_t, t, y, eps)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, loss
+
+    return step
+
+
+def average_weights(client_params: List[Dict], weights=None) -> Dict:
+    n = len(client_params)
+    w = weights or [1.0 / n] * n
+
+    def avg(*leaves):
+        out = sum(wi * l.astype(jnp.float32) for wi, l in zip(w, leaves))
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *client_params)
+
+
+def fedavg_round(state: FedAvgState, step_fn, batches_per_client, key
+                 ) -> Dict[str, float]:
+    """One FedAvg round: local training, weight upload, average, download."""
+    losses = []
+    for c, batches in enumerate(batches_per_client):
+        for (x0, y) in batches:
+            key, k = jax.random.split(key)
+            state.client_params[c], state.client_opt[c], loss = step_fn(
+                state.client_params[c], state.client_opt[c], x0, y, k)
+        losses.append(float(loss))
+    state.global_params = average_weights(state.client_params)
+    per_model = params_nbytes(state.global_params)
+    state.comm_bytes += 2 * per_model * len(state.client_params)  # up + down
+    state.client_params = [jax.tree.map(jnp.copy, state.global_params)
+                           for _ in state.client_params]
+    state.round += 1
+    return {"mean_loss": sum(losses) / len(losses),
+            "comm_bytes_total": state.comm_bytes}
+
+
+def fedavg_sample(state: FedAvgState, client: int, key, y, shape,
+                  sched: DiffusionSchedule, T: int, apply_fn):
+    """FL inference: the client runs the ENTIRE T-step chain locally
+    (client compute share = 1.0 by construction)."""
+    cut = CutPoint(T, T)  # all steps on the client
+    x_T = jax.random.normal(key, shape, dtype=jnp.float32)
+    return client_denoise(state.client_params[client],
+                          jax.random.fold_in(key, 1), x_T, y, sched, cut,
+                          apply_fn, adjusted=False)

@@ -1,0 +1,162 @@
+"""CollaFuse collaborative training — paper Algorithm 1, faithful.
+
+Per client batch (client node, lines 5–13):
+    t_c ~ U[1, t_ζ],  t_s ~ U[t_ζ, T],  ε_c, ε_s ~ N(0, I)
+    x_{t_c} = α(t_c)·x_0 + σ(t_c)·ε_c          (client training sample)
+    x_{t_ζ} = α(t_ζ)·x_0 + σ(t_ζ)·ε_c          (same ε_c — line 9)
+    x_{t_s} = α(t_s)·x_{t_ζ} + σ(t_s)·ε_s      (re-noise; server never sees x_0)
+    L_c = ω_{t_c}·‖ε_θc(x_{t_c}, t_c, y) − ε_c‖²  → update θ_c
+    ship (x_{t_s}, ε_s, t_s, y) to the server.
+
+Server node (lines 14–16):
+    L_s = ω_{t_s}·‖ε_θs(x_{t_s}, t_s, y) − ε_s‖²  → update θ_s
+
+Client and server updates are INDEPENDENT — no gradient crosses the cut
+(this is the paper's departure from classic split learning). ω_t ≡ 1 here
+(the paper's DDPM runs; the Imagen guidance weight is out of scope).
+
+Edge cases:
+  t_ζ = 0  (GM):  no client model; x_{t_ζ} = x_0 and the server trains on
+                  the union of client data over the full timestep range.
+  t_ζ = T  (ICM): no server model; the client covers U[1, T] alone.
+
+The ``apply_fn(params, x_t, t, y) -> ε̂`` signature abstracts the denoiser:
+the paper's U-Net (core/unet.py) or a DiT backbone (core/dit.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedules import DiffusionSchedule
+from repro.core.splitting import CutPoint
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+class ServerPayload(NamedTuple):
+    """What crosses the client→server wire during training. Its byte volume
+    (vs. model weights for FL) is the paper's communication claim — measured
+    in benchmarks/communication.py."""
+    x_ts: jnp.ndarray   # (B, ...) re-noised samples at server timesteps
+    eps_s: jnp.ndarray  # (B, ...) the server's regression target
+    t_s: jnp.ndarray    # (B,)    server timesteps
+    y: jnp.ndarray      # (B, n_classes) conditioning
+
+    def nbytes(self) -> int:
+        return sum(int(t.size * t.dtype.itemsize) for t in self)
+
+
+def mse_eps_loss(apply_fn, params, x_t, t, y, eps, weights=None):
+    pred = apply_fn(params, x_t, t, y)
+    per = jnp.mean(jnp.square(pred.astype(jnp.float32) -
+                              eps.astype(jnp.float32)),
+                   axis=tuple(range(1, eps.ndim)))
+    if weights is not None:
+        per = per * weights
+    return jnp.mean(per)
+
+
+def make_payload(x0, y, key, sched: DiffusionSchedule, cut: CutPoint,
+                 eps_c: Optional[jnp.ndarray] = None,
+                 dp_sigma: float = 0.0, dp_clip: float = 0.0
+                 ) -> ServerPayload:
+    """Lines 6–10 of Alg. 1 (the diffusion process on the client node).
+
+    dp_sigma/dp_clip (beyond paper — §5 names DP integration as future
+    work): optional Gaussian-mechanism noising of the shipped x_{t_s}
+    (per-sample L2 clip to dp_clip, then N(0, dp_sigma²·dp_clip²) noise) ON
+    TOP of the protocol's inherent diffusion noise. The server's regression
+    target ε_s is unchanged — DP noise appears to the server as extra label
+    noise. E8 measures the fidelity/privacy trade-off."""
+    B = x0.shape[0]
+    k_ts, k_es, k_ec, k_dp = jax.random.split(key, 4)
+    if eps_c is None:
+        eps_c = jax.random.normal(k_ec, x0.shape, dtype=jnp.float32)
+    t_s = cut.sample_server_t(k_ts, B)
+    eps_s = jax.random.normal(k_es, x0.shape, dtype=jnp.float32)
+    x_cut = sched.q_sample(x0, jnp.full((B,), float(cut.t_cut)), eps_c)
+    x_ts = sched.renoise(x_cut, cut.t_cut, t_s, eps_s)
+    if dp_sigma > 0.0 and dp_clip > 0.0:
+        flat = x_ts.reshape(B, -1)
+        norm = jnp.linalg.norm(flat.astype(jnp.float32), axis=1,
+                               keepdims=True)
+        scale = jnp.minimum(1.0, dp_clip / jnp.maximum(norm, 1e-9))
+        clipped = (flat * scale).reshape(x_ts.shape)
+        noise = jax.random.normal(k_dp, x_ts.shape, dtype=jnp.float32)
+        x_ts = (clipped + dp_sigma * dp_clip * noise).astype(x_ts.dtype)
+    return ServerPayload(x_ts, eps_s, t_s, y)
+
+
+def client_losses(client_params, x0, y, key, sched: DiffusionSchedule,
+                  cut: CutPoint, apply_fn) -> Tuple[jnp.ndarray, ServerPayload]:
+    """Returns (client loss, server payload). Differentiable in
+    client_params only; the payload is stop-gradiented by construction."""
+    B = x0.shape[0]
+    k_tc, k_ec, k_pay = jax.random.split(key, 3)
+    eps_c = jax.random.normal(k_ec, x0.shape, dtype=jnp.float32)
+    if cut.t_cut > 0:
+        t_c = cut.sample_client_t(k_tc, B)
+        x_tc = sched.q_sample(x0, t_c, eps_c)
+        loss_c = mse_eps_loss(apply_fn, client_params, x_tc, t_c, y, eps_c)
+    else:
+        loss_c = jnp.float32(0.0)
+    payload = make_payload(x0, y, k_pay, sched, cut, eps_c=eps_c)
+    payload = jax.tree.map(jax.lax.stop_gradient, payload,
+                           is_leaf=lambda t: isinstance(t, jnp.ndarray))
+    return loss_c, ServerPayload(*payload)
+
+
+def server_loss(server_params, payload: ServerPayload,
+                sched: DiffusionSchedule, apply_fn) -> jnp.ndarray:
+    return mse_eps_loss(apply_fn, server_params, payload.x_ts, payload.t_s,
+                        payload.y, payload.eps_s)
+
+
+# ---------------------------------------------------------------------------
+# One full Alg.-1 step (client update + server update), jit-friendly.
+# ---------------------------------------------------------------------------
+
+
+def make_collab_step(sched: DiffusionSchedule, cut: CutPoint, apply_fn,
+                     opt_cfg: AdamWConfig):
+    """Builds a jittable function:
+    (client_params, client_opt, server_params, server_opt, x0, y, key)
+      -> (client_params, client_opt, server_params, server_opt, metrics)
+    """
+    train_client = cut.t_cut > 0
+    train_server = cut.t_cut < cut.T
+
+    def step(client_params, client_opt, server_params, server_opt, x0, y, key):
+        metrics: Dict[str, jnp.ndarray] = {}
+
+        def closs(cp):
+            loss_c, payload = client_losses(cp, x0, y, key, sched, cut,
+                                            apply_fn)
+            return loss_c, payload
+
+        (loss_c, payload), grads_c = jax.value_and_grad(
+            closs, has_aux=True)(client_params)
+        if train_client:
+            client_params, client_opt, gn = adamw_update(
+                client_params, grads_c, client_opt, opt_cfg)
+            metrics["client_grad_norm"] = gn
+        metrics["client_loss"] = loss_c
+
+        if train_server:
+            loss_s, grads_s = jax.value_and_grad(server_loss)(
+                server_params, payload, sched, apply_fn)
+            server_params, server_opt, gns = adamw_update(
+                server_params, grads_s, server_opt, opt_cfg)
+            metrics["server_loss"] = loss_s
+            metrics["server_grad_norm"] = gns
+        else:
+            metrics["server_loss"] = jnp.float32(0.0)
+        metrics["payload_bytes"] = jnp.int64(payload.nbytes()) \
+            if jax.config.jax_enable_x64 else jnp.int32(
+                min(payload.nbytes(), 2**31 - 1))
+        return client_params, client_opt, server_params, server_opt, metrics
+
+    return step

@@ -1,0 +1,115 @@
+"""DDPM variance / noise schedules (paper eq. 1–3) with the continuous
+timestep lookup needed by CollaFuse's client-side schedule remap (Alg. 2).
+
+Conventions (match the paper's Alg. 1 notation):
+  * timesteps are 1-based: t ∈ {1, …, T}; array index is t-1.
+  * ``alpha(t)``  = sqrt(ᾱ_t)      — the *cumulative* signal coefficient
+  * ``sigma(t)``  = sqrt(1 - ᾱ_t)  — the cumulative noise coefficient
+  * ``q_sample``  : x_t = alpha(t)·x_0 + sigma(t)·ε             (eq. 1, closed form)
+  * ``ddpm_step`` : eq. 2 reverse update with β_t posterior noise.
+
+``alpha``/``sigma`` accept *real-valued* t (linear interpolation of ᾱ in t):
+Alg. 2 line 3 builds a linearly spaced float t_list over [1, M] and evaluates
+the schedulers at those points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionSchedule:
+    T: int
+    betas: jnp.ndarray         # (T,)
+    alphas: jnp.ndarray        # (T,)  = 1 - betas
+    alpha_bar: jnp.ndarray     # (T,)  = cumprod(alphas)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def linear(T: int, beta_min: float = 1e-4, beta_max: float = 0.02
+               ) -> "DiffusionSchedule":
+        betas = jnp.linspace(beta_min, beta_max, T, dtype=jnp.float32)
+        alphas = 1.0 - betas
+        return DiffusionSchedule(T, betas, alphas, jnp.cumprod(alphas))
+
+    @staticmethod
+    def cosine(T: int, s: float = 0.008) -> "DiffusionSchedule":
+        t = jnp.arange(T + 1, dtype=jnp.float32) / T
+        f = jnp.cos((t + s) / (1 + s) * jnp.pi / 2) ** 2
+        ab = f[1:] / f[0]
+        betas = jnp.clip(1.0 - ab / jnp.concatenate([jnp.ones(1), ab[:-1]]),
+                         1e-5, 0.999)
+        alphas = 1.0 - betas
+        return DiffusionSchedule(T, betas, alphas, jnp.cumprod(alphas))
+
+    # ------------------------------------------------------------------
+    def _interp_alpha_bar(self, t):
+        """ᾱ at real-valued 1-based t, linear interpolation, ᾱ(0) := 1."""
+        t = jnp.asarray(t, jnp.float32)
+        grid = jnp.concatenate([jnp.ones((1,), jnp.float32), self.alpha_bar])
+        return jnp.interp(jnp.clip(t, 0.0, float(self.T)),
+                          jnp.arange(self.T + 1, dtype=jnp.float32), grid)
+
+    def alpha(self, t):
+        """sqrt(ᾱ_t) — accepts int or real t (broadcasts)."""
+        return jnp.sqrt(self._interp_alpha_bar(t))
+
+    def sigma(self, t):
+        return jnp.sqrt(jnp.clip(1.0 - self._interp_alpha_bar(t), 1e-12))
+
+    # ------------------------------------------------------------------
+    def q_sample(self, x0, t, eps):
+        """Diffuse x0 to timestep t (eq. 1 closed form). t: (B,) or scalar."""
+        a = self.alpha(t)
+        s = self.sigma(t)
+        shape = (-1,) + (1,) * (x0.ndim - 1)
+        return (a.reshape(shape) * x0 + s.reshape(shape) * eps).astype(x0.dtype)
+
+    def renoise(self, x_cut, t_cut, t_s, eps_s):
+        """Alg. 1 line 10: x_{t_s} = α(t_s)·x_{t_ζ} + σ(t_s)·ε_s.
+
+        NOTE (faithful to the paper): the schedule coefficients are applied
+        to the *already-noised* x_{t_ζ}, not to x_0 — the server never needs
+        x_0, which is the privacy mechanism."""
+        a = self.alpha(t_s)
+        s = self.sigma(t_s)
+        shape = (-1,) + (1,) * (x_cut.ndim - 1)
+        return (a.reshape(shape) * x_cut + s.reshape(shape) * eps_s
+                ).astype(x_cut.dtype)
+
+    # ------------------------------------------------------------------
+    def ddpm_step(self, x_t, eps_pred, t, noise, *, t_prev=None):
+        """Eq. 2 reverse step at integer t (1-based); adds β_t posterior
+        noise except at t == 1. Supports real-valued t via interpolated
+        coefficients (used by the client's remapped schedule)."""
+        t = jnp.asarray(t, jnp.float32)
+        ab_t = self._interp_alpha_bar(t)
+        tp = t - 1.0 if t_prev is None else jnp.asarray(t_prev, jnp.float32)
+        ab_prev = self._interp_alpha_bar(tp)
+        alpha_t = ab_t / jnp.clip(ab_prev, 1e-12)
+        beta_t = 1.0 - alpha_t
+        coef = beta_t / jnp.sqrt(jnp.clip(1.0 - ab_t, 1e-12))
+        mean = (x_t - coef * eps_pred) / jnp.sqrt(jnp.clip(alpha_t, 1e-12))
+        sigma = jnp.sqrt(jnp.clip(beta_t, 0.0))
+        add = jnp.where(t > 1.0, sigma, 0.0)
+        return (mean + add * noise).astype(x_t.dtype)
+
+    def ddim_step(self, x_t, eps_pred, t, t_prev):
+        """Deterministic DDIM update [Song et al. 2021] from (real) t to
+        t_prev — the paper's named future-work direction; used by the
+        beyond-paper strided server schedule (EXPERIMENTS §Perf)."""
+        t = jnp.asarray(t, jnp.float32)
+        tp = jnp.asarray(t_prev, jnp.float32)
+        ab_t = self._interp_alpha_bar(t)
+        ab_p = self._interp_alpha_bar(tp)
+        x32 = x_t.astype(jnp.float32)
+        e32 = eps_pred.astype(jnp.float32)
+        x0_pred = (x32 - jnp.sqrt(jnp.clip(1 - ab_t, 1e-12)) * e32) / \
+            jnp.sqrt(jnp.clip(ab_t, 1e-12))
+        out = jnp.sqrt(ab_p) * x0_pred + \
+            jnp.sqrt(jnp.clip(1 - ab_p, 0.0)) * e32
+        return out.astype(x_t.dtype)

@@ -1,0 +1,77 @@
+"""The cut point t_ζ — CollaFuse's single split hyperparameter — and the
+client-side schedule remap of Alg. 2.
+
+  * t_ζ = 0  → GM baseline: the server performs all denoising; trained on
+               the union of client data.
+  * t_ζ = T  → ICM baseline: each client trains/runs its own full model.
+  * 0 < t_ζ < T → collaborative: server does steps T…t_ζ+1, client t_ζ…1.
+
+Client schedule remap (Alg. 2 lines 2–3): the sample handed over by the
+server still carries *more* residual noise than a vanilla schedule at step
+t_ζ would imply, so the client stretches its t_ζ steps over the deeper range
+[1, M] with M = ⌊t_ζ + (t_ζ/T)·(T − t_ζ)⌋, via a linearly spaced float
+timestep list evaluated with interpolated schedule coefficients.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CutPoint:
+    T: int
+    t_cut: int
+
+    def __post_init__(self):
+        assert 0 <= self.t_cut <= self.T, (self.t_cut, self.T)
+
+    # --- roles -----------------------------------------------------------
+    @property
+    def is_global_model(self) -> bool:
+        return self.t_cut == 0
+
+    @property
+    def is_independent_clients(self) -> bool:
+        return self.t_cut == self.T
+
+    @property
+    def n_client_steps(self) -> int:
+        return self.t_cut
+
+    @property
+    def n_server_steps(self) -> int:
+        return self.T - self.t_cut
+
+    # --- training timestep ranges (Alg. 1 line 6) -------------------------
+    def sample_client_t(self, key, batch: int):
+        """t_c ~ U[1, t_ζ] (integer, inclusive)."""
+        return jax.random.randint(key, (batch,), 1, max(self.t_cut, 1) + 1)
+
+    def sample_server_t(self, key, batch: int):
+        """t_s ~ U[t_ζ, T] (integer, inclusive). With the paper's re-noising
+        x_{t_s} = α(t_s)·x_{t_ζ} + σ(t_s)·ε_s these timesteps index the
+        *global* schedule."""
+        return jax.random.randint(key, (batch,), max(self.t_cut, 1),
+                                  self.T + 1)
+
+    # --- inference schedules (Alg. 2) --------------------------------------
+    @property
+    def M(self) -> int:
+        return int(self.t_cut + (self.t_cut / self.T) * (self.T - self.t_cut))
+
+    def client_t_list(self, adjusted: bool = True) -> jnp.ndarray:
+        """Float timesteps the client sweeps (descending), length t_ζ.
+
+        adjusted=False ablates the paper's M-remap (EXPERIMENTS E6): the
+        client then just runs the vanilla schedule t_ζ…1."""
+        if self.t_cut == 0:
+            return jnp.zeros((0,), jnp.float32)
+        hi = float(self.M) if adjusted else float(self.t_cut)
+        return jnp.linspace(hi, 1.0, self.t_cut, dtype=jnp.float32)
+
+    def server_t_list(self) -> jnp.ndarray:
+        """Integer timesteps the server sweeps: T, T-1, …, t_ζ+1."""
+        return jnp.arange(self.T, self.t_cut, -1, dtype=jnp.int32)

@@ -1,0 +1,62 @@
+"""FD-proxy: Fréchet distance over fixed random-CNN features.
+
+Offline stand-in for FID/FCD (DESIGN.md §2): same Fréchet statistics
+machinery as Heusel et al.'s FID, but features come from a frozen,
+seed-deterministic 3-layer conv net instead of InceptionV3/CLIP. Lower is
+better; values are comparable across runs of this repo (NOT against
+published FID numbers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+FEATURE_DIM = 64
+_SEED = 42
+
+
+@functools.lru_cache(maxsize=4)
+def _feature_params(channels: int = 3):
+    key = jax.random.PRNGKey(_SEED)
+    k1, k2, k3 = jax.random.split(key, 3)
+    w = lambda k, cin, cout: jax.random.normal(k, (3, 3, cin, cout)) \
+        * (2.0 / (9 * cin)) ** 0.5
+    return (w(k1, channels, 16), w(k2, 16, 32), w(k3, 32, FEATURE_DIM))
+
+
+def features(x):
+    """x: (N, H, W, C) in [-1, 1] -> (N, FEATURE_DIM)."""
+    ws = _feature_params(x.shape[-1])
+    h = x.astype(jnp.float32)
+    for i, w in enumerate(ws):
+        h = jax.lax.conv_general_dilated(
+            h, w, window_strides=(2, 2) if i < 2 else (1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.leaky_relu(h, 0.1)
+    return h.mean(axis=(1, 2))
+
+
+def _stats(f):
+    mu = f.mean(axis=0)
+    d = f - mu
+    cov = d.T @ d / max(f.shape[0] - 1, 1)
+    return mu, cov
+
+
+def frechet_distance(f_a, f_b, eps: float = 1e-6):
+    """Squared Fréchet distance between feature sets (N_a, D), (N_b, D)."""
+    mu1, c1 = _stats(f_a)
+    mu2, c2 = _stats(f_b)
+    diff = jnp.sum((mu1 - mu2) ** 2)
+    # tr sqrt(C1 C2) = sum sqrt(eigvals(C1 C2)); product has real nonneg
+    # spectrum up to numerics — clip.
+    ev = jnp.linalg.eigvals(c1 @ c2)
+    tr_sqrt = jnp.sum(jnp.sqrt(jnp.clip(ev.real, 0.0)))
+    return float(diff + jnp.trace(c1) + jnp.trace(c2) - 2.0 * tr_sqrt)
+
+
+def fd_proxy(x_real, x_gen) -> float:
+    """The paper's FID/FCD role: distance between real and generated sets."""
+    return frechet_distance(features(x_real), features(x_gen))

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused DDPM reverse-step update (eq. 2).
+
+The input is viewed as 2D (rows, lanes); blocks are (BLOCK_R, BLOCK_L) tiles
+in VMEM (lane dim 128-aligned for the VPU). Scalar schedule coefficients
+arrive via scalar prefetch (SMEM) so one compiled kernel serves every
+timestep of the sampling loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_R = 256
+BLOCK_L = 128
+
+
+def _kernel(scalars_ref, x_ref, eps_ref, noise_ref, out_ref):
+    inv_sqrt_alpha = scalars_ref[0]
+    coef = scalars_ref[1]
+    sigma = scalars_ref[2]
+    x = x_ref[...].astype(jnp.float32)
+    e = eps_ref[...].astype(jnp.float32)
+    n = noise_ref[...].astype(jnp.float32)
+    out_ref[...] = ((x - coef * e) * inv_sqrt_alpha + sigma * n
+                    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ddpm_step_pallas(x_t, eps_pred, noise, inv_sqrt_alpha, coef, sigma,
+                     interpret: bool = False):
+    """x_t/eps_pred/noise: identical shapes, any rank. Returns x_{t-1}."""
+    shape = x_t.shape
+    n = x_t.size
+    lanes = BLOCK_L
+    rows = pl.cdiv(n, lanes)
+    pad = rows * lanes - n
+    flat = lambda t: jnp.pad(t.reshape(-1), (0, pad)).reshape(rows, lanes)
+    xf, ef, nf = flat(x_t), flat(eps_pred), flat(noise)
+    scalars = jnp.stack([inv_sqrt_alpha, coef, sigma]).astype(jnp.float32)
+
+    grid = (pl.cdiv(rows, BLOCK_R),)
+    # with scalar prefetch, index maps receive (grid idx..., scalar ref)
+    spec = pl.BlockSpec((BLOCK_R, lanes), lambda i, s: (i, 0))
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[spec, spec, spec],
+            out_specs=spec,
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), x_t.dtype),
+        interpret=interpret,
+    )(scalars, xf, ef, nf)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,37 @@
+"""Jit'd public wrapper for the fused DDPM step.
+
+``use_pallas=False`` (default on CPU) routes to the jnp oracle; the Pallas
+path targets TPU and is validated in interpret mode by tests/test_kernels.py.
+Coefficients are derived from a DiffusionSchedule at (real-valued) t exactly
+as core/schedules.ddpm_step does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedules import DiffusionSchedule
+from repro.kernels.ddpm_step.kernel import ddpm_step_pallas
+from repro.kernels.ddpm_step.ref import ddpm_step_ref
+
+
+def step_coefficients(sched: DiffusionSchedule, t, t_prev=None):
+    t = jnp.asarray(t, jnp.float32)
+    ab_t = sched._interp_alpha_bar(t)
+    tp = t - 1.0 if t_prev is None else jnp.asarray(t_prev, jnp.float32)
+    ab_prev = sched._interp_alpha_bar(tp)
+    alpha_t = ab_t / jnp.clip(ab_prev, 1e-12)
+    beta_t = 1.0 - alpha_t
+    inv_sqrt_alpha = 1.0 / jnp.sqrt(jnp.clip(alpha_t, 1e-12))
+    coef = beta_t / jnp.sqrt(jnp.clip(1.0 - ab_t, 1e-12))
+    sigma = jnp.where(t > 1.0, jnp.sqrt(jnp.clip(beta_t, 0.0)), 0.0)
+    return inv_sqrt_alpha, coef, sigma
+
+
+def ddpm_step(x_t, eps_pred, noise, sched: DiffusionSchedule, t, t_prev=None,
+              use_pallas: bool = False, interpret: bool = False):
+    a, c, s = step_coefficients(sched, t, t_prev)
+    if use_pallas:
+        return ddpm_step_pallas(x_t, eps_pred, noise, a, c, s,
+                                interpret=interpret)
+    return ddpm_step_ref(x_t, eps_pred, noise, a, c, s)

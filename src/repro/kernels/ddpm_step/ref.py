@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused DDPM reverse-step kernel.
+
+Matches core/schedules.DiffusionSchedule.ddpm_step with precomputed scalar
+coefficients: the sampler executes this update T times per image — fusing
+the elementwise chain avoids 3 extra HBM round-trips of the activation per
+denoising step (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ddpm_step_ref(x_t, eps_pred, noise, inv_sqrt_alpha: float, coef: float,
+                  sigma: float):
+    """x_{t-1} = (x_t − coef·ε̂) · inv_sqrt_alpha + sigma·noise."""
+    x32 = x_t.astype(jnp.float32)
+    e32 = eps_pred.astype(jnp.float32)
+    n32 = noise.astype(jnp.float32)
+    out = (x32 - coef * e32) * inv_sqrt_alpha + sigma * n32
+    return out.astype(x_t.dtype)

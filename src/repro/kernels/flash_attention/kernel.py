@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: blockwise flash attention with online softmax.
+
+Grid (B, H, S/BQ); each program owns one query tile. K/V for the matching
+GQA group head are mapped whole into VMEM (S·dh·2B per tensor — e.g.
+32k × 128 × bf16 = 8 MiB, within v5e's 16 MiB VMEM budget when BQ tiles
+stream); the kernel walks K in BK-sized tiles with the standard
+(m, l, acc) online-softmax recurrence in fp32.
+
+Causal + sliding-window masking skips out-of-range K tiles entirely:
+the loop runs [start_block, stop_block) derived from the query tile row,
+so compute is O(S·window) when a window is set — the long_500k path.
+GQA is expressed through the K/V index_map (q head h reads kv head
+h // group) — no repeated-KV materialization.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, s_valid, causal,
+                 window, scale):
+    i = pl.program_id(2)
+    S = k_ref.shape[1]
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, dh)
+    q_start = i * bq
+    rows = q_start + jax.lax.iota(jnp.int32, bq)         # global q positions
+
+    if causal:
+        stop = jnp.minimum(pl.cdiv(q_start + bq, bk), S // bk)
+    else:
+        stop = S // bk
+    if window > 0:
+        start = jnp.maximum((q_start - window + 1) // bk, 0)
+    else:
+        start = 0
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(kb * bk, bk)].astype(jnp.float32)   # (bk, dh)
+        v = v_ref[0, pl.dslice(kb * bk, bk)].astype(jnp.float32)
+        logits = q @ k.T                                           # (bq, bk)
+        cols = kb * bk + jax.lax.iota(jnp.int32, bk)
+        mask = cols[None, :] < s_valid
+        if causal:
+            mask &= cols[None, :] <= rows[:, None]
+        if window > 0:
+            mask &= (rows[:, None] - cols[None, :]) < window
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=1))
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, q.shape[1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(start, stop, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, causal: bool = True, window: int = 0,
+                           bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                           interpret: bool = False):
+    """q: (B,H,S,dh); k/v: (B,Hkv,S,dh). Returns (B,H,S,dh)."""
+    B, H, S, dh = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    bq = min(bq, S)
+    bk = min(bk, S)
+    pad_q = (-S) % bq
+    pad_k = (-S) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq, Sk = S + pad_q, S + pad_k
+
+    # fold (B, H) into block index maps; blocks carry a singleton head dim
+    q3 = qp.reshape(B * H, Sq, dh)
+    k3 = kp.reshape(B * Hkv, Sk, dh)
+    v3 = vp.reshape(B * Hkv, Sk, dh)
+
+    grid = (B, H, Sq // bq)
+    kernel = functools.partial(
+        _attn_kernel, bq=bq, bk=bk, s_valid=S, causal=causal, window=window,
+        scale=1.0 / math.sqrt(dh))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, h, i: (b * H + h, i, 0)),
+            pl.BlockSpec((1, Sk, dh),
+                         lambda b, h, i, _g=group: (b * Hkv + h // _g, 0, 0)),
+            pl.BlockSpec((1, Sk, dh),
+                         lambda b, h, i, _g=group: (b * Hkv + h // _g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, h, i: (b * H + h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, dh), q.dtype),
+        interpret=interpret,
+    )(q3, k3, v3)
+    return out.reshape(B, H, Sq, dh)[:, :, :S, :]

@@ -1,0 +1,16 @@
+"""Public attention op: routes to the Pallas flash kernel (TPU target) or
+the jnp oracle (CPU default). Drop-in for models/attention.attend for the
+full-sequence causal/bidirectional cases."""
+from __future__ import annotations
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    use_pallas: bool = False, interpret: bool = False,
+                    **block_kwargs):
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      interpret=interpret, **block_kwargs)
+    return attention_ref(q, k, v, causal=causal, window=window)

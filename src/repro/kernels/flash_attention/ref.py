@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the blockwise flash-attention kernel: materialized
+QK^T softmax attention with GQA head grouping, causal + sliding-window
+masks. This is models/attention.attend re-stated standalone so the kernel
+test dependency is one hop."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B,H,S,dh); k/v: (B,Hkv,S,dh), H % Hkv == 0."""
+    B, H, S, dh = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, S, dh)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(dh)
+    if causal or window > 0:
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(S)[None, :]
+        m = (j <= i) if causal else jnp.ones((S, S), bool)
+        if window > 0:
+            m &= (i - j) < window
+        logits = jnp.where(m[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+    return out.reshape(B, H, S, dh).astype(q.dtype)

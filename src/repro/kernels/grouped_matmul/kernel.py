@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: grouped (per-expert) GEMM for MoE FFNs.
+
+Grid (E, C/BC, F/BF, D/BD): one expert per leading grid index, classic
+blocked matmul over the trailing three with an fp32 VMEM accumulator tile
+that is zeroed at k==0 and flushed at the last k step (revisiting output
+blocks across k is TPU-sequential, so the scratch accumulator is safe).
+Block sizes default to MXU-aligned 128 and clamp to the operand shape for
+the interpret-mode shape sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 128
+
+
+def _gmm_kernel(t_ref, w_ref, o_ref, acc_ref, *, n_k):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    t = t_ref[0].astype(jnp.float32)      # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)      # (bd, bf)
+    acc_ref[...] += t @ w
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd", "interpret"))
+def grouped_matmul_pallas(tokens, weights, bc: int = BLOCK, bf: int = BLOCK,
+                          bd: int = BLOCK, interpret: bool = False):
+    """tokens: (E, C, D); weights: (E, D, F) -> (E, C, F)."""
+    E, C, D = tokens.shape
+    F = weights.shape[-1]
+    bc, bf, bd = min(bc, C), min(bf, F), min(bd, D)
+    pc, pf, pd = (-C) % bc, (-F) % bf, (-D) % bd
+    t = jnp.pad(tokens, ((0, 0), (0, pc), (0, pd)))
+    w = jnp.pad(weights, ((0, 0), (0, pd), (0, pf)))
+    Cp, Dp, Fp = C + pc, D + pd, F + pf
+    n_k = Dp // bd
+
+    out = pl.pallas_call(
+        functools.partial(_gmm_kernel, n_k=n_k),
+        grid=(E, Cp // bc, Fp // bf, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bd, bf), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, Fp), tokens.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(t, w)
+    return out[:, :C, :F]

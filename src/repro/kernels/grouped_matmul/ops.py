@@ -1,0 +1,13 @@
+"""Public grouped-GEMM op: Pallas kernel (TPU target) or jnp oracle (CPU)."""
+from __future__ import annotations
+
+from repro.kernels.grouped_matmul.kernel import grouped_matmul_pallas
+from repro.kernels.grouped_matmul.ref import grouped_matmul_ref
+
+
+def grouped_matmul(tokens, weights, use_pallas: bool = False,
+                   interpret: bool = False, **block_kwargs):
+    if use_pallas:
+        return grouped_matmul_pallas(tokens, weights, interpret=interpret,
+                                     **block_kwargs)
+    return grouped_matmul_ref(tokens, weights)

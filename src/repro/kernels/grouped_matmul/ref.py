@@ -1,0 +1,11 @@
+"""Oracle for the grouped expert GEMM: per-expert batched matmul over
+capacity-packed token buffers — the compute core of moe._expert_ffn."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(tokens, weights):
+    """tokens: (E, C, D); weights: (E, D, F) -> (E, C, F)."""
+    return jnp.einsum("ecd,edf->ecf", tokens.astype(jnp.float32),
+                      weights.astype(jnp.float32)).astype(tokens.dtype)

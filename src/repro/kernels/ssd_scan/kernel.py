@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan [arXiv:2405.21060].
+
+Grid (B, H, n_chunks) with the chunk dimension innermost and sequential:
+the (P, N) recurrent state lives in a VMEM scratch buffer that persists
+across the chunk iterations of one (batch, head) program — the classic
+linear-attention Pallas pattern. Per chunk, the kernel fuses:
+
+  intra-chunk:  y += (C·Bᵀ ⊙ tril-decay) @ (dt·x)        (q×q MXU matmul)
+  inter-chunk:  y += (C ⊙ e^L) @ stateᵀ
+  state update: state ← e^{L_q}·state + (B ⊙ decay_to_end ⊙ dt·x)
+
+keeping L (the per-step log-decay cumsum) in registers — the jnp reference
+materializes the (b, nc, q, q, h) decay tensor in HBM, which is exactly the
+memory-roofline term this kernel removes (see EXPERIMENTS §Perf).
+
+Chunk length q and head dim p should be 128-multiples on real TPU for MXU
+alignment; correctness is shape-agnostic and validated in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fs_ref, state_ref,
+                *, q, p, n):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros((p, n), jnp.float32)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)          # (q, p)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)        # (q,)
+    A = a_ref[0, 0]                                  # scalar (negative)
+    B = b_ref[0, 0].astype(jnp.float32)              # (q, n)
+    C = c_ref[0, 0].astype(jnp.float32)              # (q, n)
+
+    dA = dt * A
+    L = jnp.cumsum(dA)                               # (q,)
+    dtx = x * dt[:, None]                            # (q, p)
+
+    # intra-chunk
+    diff = L[:, None] - L[None, :]
+    causal = jnp.tril(jnp.ones((q, q), jnp.bool_))
+    decay = jnp.where(causal, jnp.exp(diff), 0.0)
+    CB = C @ B.T                                     # (q, q)
+    y = (CB * decay) @ dtx                           # (q, p)
+
+    # inter-chunk
+    state = state_ref[...]                           # (p, n)
+    y = y + (C * jnp.exp(L)[:, None]) @ state.T      # (q, p)
+
+    # state update
+    # S_c = Σ_s decay_to_end_s · dt_s · x_s ⊗ B_s  (dtx already carries dt)
+    decay_to_end = jnp.exp(L[-1] - L)                # (q,)
+    S_c = dtx.T @ (B * decay_to_end[:, None])
+    state_ref[...] = jnp.exp(L[-1]) * state + S_c
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    fs_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, dt, A, B, C, chunk: int, interpret: bool = False):
+    """Same contract as models.ssm.ssd_chunked (zero initial state).
+
+    x: (b, s, h, p); dt: (b, s, h); A: (h,); B/C: (b, s, n).
+    Returns (y (b, s, h, p), final_state (b, h, p, n))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, B, C = zpad(x), zpad(dt), zpad(B), zpad(C)
+    sp = s + pad
+    nc, q = sp // chunk, chunk
+
+    # blocked layouts: head-major for per-(b,h) sequential chunk walk
+    xb = x.reshape(b, nc, q, h, p).transpose(0, 3, 1, 2, 4)   # (b,h,nc,q,p)
+    dtb = dt.reshape(b, nc, q, h).transpose(0, 3, 1, 2)       # (b,h,nc,q)
+    Bb = B.reshape(b, nc, q, n)
+    Cb = C.reshape(b, nc, q, n)
+    Ab = A.reshape(h, 1).astype(jnp.float32)
+
+    grid = (b, h, nc)
+    kernel = functools.partial(_ssd_kernel, q=q, p=p, n=n)
+    y, fs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda i, j, c: (i, j, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda i, j, c: (i, j, c, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, c: (j, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j, c: (i, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda i, j, c: (i, j, c, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, j, c: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc, q, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xb, dtb, Ab, Bb, Cb)
+    y = y.transpose(0, 2, 3, 1, 4).reshape(b, sp, h, p)[:, :s]
+    return y, fs

@@ -1,0 +1,12 @@
+"""Public SSD scan op: Pallas kernel (TPU target) or jnp oracle (CPU)."""
+from __future__ import annotations
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int, use_pallas: bool = False,
+             interpret: bool = False):
+    if use_pallas:
+        return ssd_scan_pallas(x, dt, A, B, C, chunk, interpret=interpret)
+    return ssd_ref(x, dt, A, B, C, chunk)

@@ -1,0 +1,3 @@
+"""Oracle for the Pallas SSD (Mamba2) chunked-scan kernel: the model's own
+pure-jnp implementation, re-exported so tests depend on one symbol."""
+from repro.models.ssm import ssd_chunked as ssd_ref  # noqa: F401

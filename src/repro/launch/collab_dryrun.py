@@ -1,0 +1,118 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run of the PAPER'S OWN technique on the production mesh: lower +
+compile one full Alg.-1 collaborative step (client fwd/bwd/update + server
+fwd/bwd/update from the re-noised payload) and one Alg.-2 server denoise
+pass, with the global batch sharded over ("pod","data") — clients are
+data-axis slices, the server model is replicated (DESIGN.md §4).
+
+    PYTHONPATH=src python -m repro.launch.collab_dryrun [--multi-pod] \
+        [--image-size 64] [--batch 256] [--t-cut 200] [--T 1000]
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.ddpm_unet import CONFIG, UNetConfig
+from repro.core.protocol import client_losses, server_loss
+from repro.core.sampler import server_denoise
+from repro.core.schedules import DiffusionSchedule
+from repro.core.splitting import CutPoint
+from repro.core.unet import init_unet, unet_apply
+from repro.launch.dryrun import collective_census
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.sharding.specs import mesh_batch_axes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--image-size", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--T", type=int, default=1000)
+    ap.add_argument("--t-cut", type=int, default=200)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    baxes = mesh_batch_axes(mesh)
+    ucfg = dataclasses.replace(
+        CONFIG, image_size=args.image_size, base_width=128,
+        width_mults=(1, 2, 2, 4), attn_resolutions=(16,), time_dim=512,
+        dtype="float32")
+    sched = DiffusionSchedule.linear(args.T)
+    cut = CutPoint(args.T, args.t_cut)
+    apply_fn = lambda p, x, t, y: unet_apply(p, x, t, y, ucfg)
+    opt_cfg = AdamWConfig(lr=1e-3)
+
+    def collab_step(cp, co, sp, so, x0, y, key):
+        def closs(c):
+            return client_losses(c, x0, y, key, sched, cut, apply_fn)
+        (lc, payload), gc = jax.value_and_grad(closs, has_aux=True)(cp)
+        cp, co, _ = adamw_update(cp, gc, co, opt_cfg)
+        ls, gs = jax.value_and_grad(server_loss)(sp, payload, sched, apply_fn)
+        sp, so, _ = adamw_update(sp, gs, so, opt_cfg)
+        return cp, co, sp, so, lc, ls
+
+    shapes = jax.eval_shape(functools.partial(init_unet, cfg=ucfg),
+                            jax.random.PRNGKey(0))
+    rep = NamedSharding(mesh, P())
+    params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep),
+        shapes)
+    opt = jax.eval_shape(init_opt_state, params)
+    opt = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep), opt)
+    bsh = NamedSharding(mesh, P(baxes, None, None, None))
+    x0 = jax.ShapeDtypeStruct(
+        (args.batch, args.image_size, args.image_size, 3), jnp.float32,
+        sharding=bsh)
+    yv = jax.ShapeDtypeStruct((args.batch, ucfg.n_classes), jnp.float32,
+                              sharding=NamedSharding(mesh, P(baxes, None)))
+    keyv = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rep)
+
+    results = {}
+    for name, fn, fargs in (
+        ("collab_train_step",
+         collab_step, (params, opt, params, opt, x0, yv, keyv)),
+        ("server_denoise",
+         lambda p, k, y: server_denoise(
+             p, k, y, (args.batch, args.image_size, args.image_size, 3),
+             sched, cut, apply_fn), (params, keyv, yv)),
+    ):
+        t0 = time.time()
+        with mesh:
+            compiled = jax.jit(fn).lower(*fargs).compile()
+        cost = compiled.cost_analysis() or {}
+        census = collective_census(compiled.as_text())
+        mem = compiled.memory_analysis()
+        results[name] = {
+            "compile_s": round(time.time() - t0, 1),
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "collectives": census,
+            "collective_bytes": sum(c["bytes"] for c in census.values()),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        }
+        print(name, json.dumps(results[name]))
+
+    tag = "collafuse_unet__%s" % ("pod2x16x16" if args.multi_pod
+                                  else "pod16x16")
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump({"tag": tag, "unet": dataclasses.asdict(ucfg),
+                   "T": args.T, "t_cut": args.t_cut, "batch": args.batch,
+                   "results": results}, f, indent=1)
+    print("saved", tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""CollaFuse end-to-end driver (the paper's experiment, offline scale).
+
+    PYTHONPATH=src python -m repro.launch.collab_train \
+        --clients 5 --t-cut 200 --T 1000 --rounds 3 --steps-per-round 40 \
+        [--denoiser unet | --denoiser mamba2-2.7b] [--iid] \
+        [--checkpoint runs/collafuse.msgpack]
+
+Trains k client U-Nets + one server U-Net with Alg. 1 on synthetic
+attribute-structured client datasets (non-IID by default, mirroring the
+paper's CelebA split), then samples collaboratively with Alg. 2 and reports
+FD-proxy fidelity + disclosure. This is deliverable (b)'s end-to-end
+example; benchmarks/ runs the full cut-point sweeps.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpointing.checkpoint import save
+from repro.core.collab import (CollabConfig, CollabState, sample_for_client,
+                               setup, train_round)
+from repro.data.synthetic import (SyntheticConfig, batches,
+                                  make_client_datasets)
+from repro.eval.fd_proxy import fd_proxy
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=5)
+    ap.add_argument("--T", type=int, default=1000)
+    ap.add_argument("--t-cut", type=int, default=200)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--steps-per-round", type=int, default=40)
+    ap.add_argument("--image-size", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-per-client", type=int, default=512)
+    ap.add_argument("--denoiser", default="unet")
+    ap.add_argument("--iid", action="store_true")
+    ap.add_argument("--eval-samples", type=int, default=64)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    key = jax.random.PRNGKey(args.seed)
+    ccfg = CollabConfig(n_clients=args.clients, T=args.T, t_cut=args.t_cut,
+                        denoiser=args.denoiser, image_size=args.image_size,
+                        batch_size=args.batch)
+    dcfg = SyntheticConfig(image_size=args.image_size,
+                           n_attrs=ccfg.n_classes)
+    data = make_client_datasets(key, dcfg, args.clients, args.n_per_client,
+                                non_iid=not args.iid)
+
+    state, step_fn, apply_fn = setup(key, ccfg)
+    print(f"CollaFuse: k={args.clients} T={args.T} t_cut={args.t_cut} "
+          f"denoiser={args.denoiser} non_iid={not args.iid}")
+
+    for r in range(args.rounds):
+        t0 = time.time()
+        kr = jax.random.fold_in(key, 10_000 + r)
+        per_client = []
+        for c, (x, y) in enumerate(data):
+            bs = list(batches(x, y, args.batch, jax.random.fold_in(kr, c)))
+            per_client.append(bs[:args.steps_per_round])
+        metrics = train_round(state, step_fn, per_client, kr)
+        m0 = metrics[0]
+        print(f"round {r}: client_loss={m0['client_loss']:.4f} "
+              f"server_loss={m0['server_loss']:.4f} "
+              f"payload={m0['payload_bytes']:.0f}B "
+              f"({time.time() - t0:.1f}s)")
+
+    # --- evaluation: fidelity per client + disclosure at the cut ---
+    n_eval = args.eval_samples
+    for c, (x, y) in enumerate(data[: min(2, args.clients)]):
+        ke = jax.random.fold_in(key, 20_000 + c)
+        ys = y[:n_eval]
+        samp, handoff = sample_for_client(state, c, ke, ys, ccfg, apply_fn,
+                                          return_handoff=True)
+        fid = fd_proxy(x[:n_eval], samp)
+        dis = fd_proxy(x[:n_eval], handoff)
+        print(f"client {c}: FD(real, collab-sample)={fid:.3f}  "
+              f"FD(real, server-handoff)={dis:.3f}  (higher = less disclosed)")
+
+    if args.checkpoint:
+        save(args.checkpoint, {
+            "server_params": state.server_params,
+            "client_params": state.client_params,
+            "step": state.step,
+        })
+        print("checkpoint ->", args.checkpoint)
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+combination lowers AND compiles under the production sharding config.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k [--multi-pod] [--moe-mode ep]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Per pair this prints/records: memory analysis (bytes per device — proves it
+fits), cost analysis (FLOPs / bytes for §Roofline), and the collective-op
+byte census parsed from the optimized HLO. Results are dumped as JSON under
+experiments/dryrun/ for benchmarks/roofline.py to aggregate.
+
+The XLA_FLAGS line above MUST run before any jax import: the dry-run needs
+512 placeholder host devices for jax.make_mesh. Smoke tests and benches run
+in separate processes and see 1 device (the flag is NOT set globally).
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, get_arch, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch import shapes as SH
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*([^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_census(hlo_text: str):
+    """Sum output bytes of every collective op in the (post-SPMD) HLO.
+    These are per-device tensors — the roofline's collective term."""
+    census = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # -start already counted this buffer
+        op = m.group(2)
+        b = _shape_bytes(m.group(1))
+        c = census.setdefault(op, {"count": 0, "bytes": 0})
+        c["count"] += 1
+        c["bytes"] += b
+    return census
+
+
+def run_pair(arch_name: str, shape_name: str, multi_pod: bool,
+             moe_mode: str = "ep", out_dir: str = "experiments/dryrun"):
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    reason = SH.skip_reason(cfg, shape)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{cfg.name}__{shape_name}__{mesh_tag}"
+    if reason is not None:
+        print(f"SKIP {tag}: {reason}")
+        return {"tag": tag, "status": "skip", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    runtime = (SH.runtime_for(cfg, shape_name, mesh) if moe_mode == "ep"
+               else SH.make_runtime(mesh, moe_mode=moe_mode))
+    fn = SH.step_fn(cfg, shape_name, runtime)
+    args = SH.input_specs(cfg, shape_name, mesh)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_fields = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem_fields[f] = getattr(mem, f, None)
+        mem_fields["total_per_device"] = sum(
+            v for k, v in mem_fields.items()
+            if v and k != "generated_code_size_in_bytes")
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    census = collective_census(hlo)
+
+    rec = {
+        "tag": tag, "status": "ok", "arch": cfg.name, "shape": shape_name,
+        "mesh": mesh_tag, "n_devices": mesh.size,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0) if cost else None,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else None,
+        "collectives": census,
+        "collective_bytes": sum(c["bytes"] for c in census.values()),
+        "memory_analysis": mem_fields or None,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"OK   {tag}: lower={t_lower:.0f}s compile={t_compile:.0f}s "
+          f"flops={rec['flops']:.3g} coll={rec['collective_bytes']:.3g}B "
+          f"({ {k: v['count'] for k, v in census.items()} })")
+    print("  memory_analysis:", rec["memory_analysis"])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--moe-mode", default="ep", choices=["ep", "dense"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        from repro.configs.base import SHAPES
+        pairs = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        pairs = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in pairs:
+        try:
+            run_pair(a, s, args.multi_pod, args.moe_mode, args.out)
+        except Exception as e:  # a failure here is a sharding bug
+            failures.append((a, s, repr(e)))
+            print(f"FAIL {a} {s}: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: "
+                         f"{[(a, s) for a, s, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

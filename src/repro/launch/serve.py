@@ -1,0 +1,78 @@
+"""Serving driver: batched prefill + autoregressive decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --reduced \
+        --batch 4 --prompt-len 32 --new-tokens 16
+
+Demonstrates the production decode path (fixed-size KV/SSM state, one
+jitted serve_step reused every token) at smoke scale on CPU; the full-scale
+decode shapes are exercised by the dry-run.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch, reduced
+from repro.models import api
+from repro.models.transformer import Runtime
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--greedy", action="store_true", default=True)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    runtime = Runtime()
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key, cfg)
+
+    B, S = args.batch, args.prompt_len
+    prompt = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": prompt}
+    prefix = 0
+    if cfg.family == "vlm":
+        prefix = cfg.n_vision_tokens
+        batch["vision_embeds"] = jax.random.normal(
+            key, (B, prefix, cfg.d_model), dtype=cfg.jnp_dtype)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                            dtype=cfg.jnp_dtype)
+        batch["tokens"] = prompt[:, :min(8, S)]
+
+    t0 = time.time()
+    cache_len = S + prefix + args.new_tokens
+    logits, state = api.prefill_fn(params, batch, cfg, runtime,
+                                   cache_len=cache_len)
+    print(f"prefill: {logits.shape} in {time.time() - t0:.1f}s")
+
+    decode = jax.jit(
+        lambda p, tok, st, pos: api.decode_fn(p, tok, st, pos, cfg, runtime))
+    tok = jnp.argmax(logits[:, -1, :], axis=-1, keepdims=True).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    start = batch["tokens"].shape[1] + prefix
+    for i in range(args.new_tokens - 1):
+        logits, state = decode(params, tok, state, jnp.int32(start + i))
+        tok = jnp.argmax(logits[:, -1, :], axis=-1, keepdims=True).astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {gen.shape[1]} tokens/seq in {dt:.2f}s "
+          f"({gen.shape[0] * gen.shape[1] / max(dt, 1e-9):.1f} tok/s)")
+    print("sample row:", gen[0, :16].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""``input_specs`` + step functions for every (arch × input shape) pair.
+
+Everything here is ShapeDtypeStruct-based: weak-type-correct, shardable,
+and allocation-free — the dry-run lowers against these stand-ins.
+
+Shape semantics (DESIGN.md §6):
+  train_4k    -> train_step(params, opt, batch) (fwd+bwd+AdamW)
+  prefill_32k -> prefill_step(params, batch) -> (logits, cache)
+  decode_*    -> serve_step(params, token, state, pos): ONE token against a
+                 seq_len-sized KV cache / SSM state.
+  long_500k   -> serve_step, sub-quadratic archs only (`supports_long_decode`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, get_shape
+from repro.models import api
+from repro.models.transformer import Runtime
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.sharding import specs as S
+
+
+def make_runtime(mesh, moe_mode: str = "ep") -> Runtime:
+    return Runtime(mesh=mesh, batch_axes=S.mesh_batch_axes(mesh),
+                   moe_mode=moe_mode)
+
+
+def runtime_for(cfg: ArchConfig, shape_name: str, mesh) -> Runtime:
+    """Decode steps of MoE archs use the 2D inference layout (weights
+    stationary, tokens move) — see models/moe.moe_ep2d + EXPERIMENTS §Perf."""
+    kind = get_shape(shape_name).kind
+    mode = "ep2d" if (cfg.n_experts and kind == "decode") else "ep"
+    return make_runtime(mesh, moe_mode=mode)
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeConfig) -> Optional[str]:
+    """None if the pair runs; else the DESIGN.md-documented skip reason."""
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return (f"{cfg.name}: full quadratic attention; no sliding-window "
+                "variant configured — sub-quadratic required for 500k decode "
+                "(DESIGN.md §6)")
+    if cfg.is_encoder_decoder and shape.name == "long_500k":
+        return (f"{cfg.name}: enc-dec audio model; 500k-token decode is "
+                "semantically undefined (max_decoder_len=448)")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def abstract_batch(cfg: ArchConfig, shape: ShapeConfig, mesh) -> Dict:
+    """Training / prefill batch stand-ins with shardings."""
+    B, Sq = shape.global_batch, shape.seq_len
+    bs = lambda trailing: S.batch_spec_for(mesh, B, trailing)
+    i32, dt = jnp.int32, cfg.jnp_dtype
+    if cfg.family == "audio":
+        # encoder frames scale with seq_len; decoder side is bounded
+        dec = min(cfg.max_decoder_len, Sq)
+        return {
+            "frames": _sds((B, Sq, cfg.d_model), dt, mesh, bs(2)),
+            "tokens": _sds((B, dec), i32, mesh, bs(1)),
+            "labels": _sds((B, dec), i32, mesh, bs(1)),
+        }
+    if cfg.family == "vlm":
+        text = Sq - cfg.n_vision_tokens
+        return {
+            "tokens": _sds((B, text), i32, mesh, bs(1)),
+            "labels": _sds((B, text), i32, mesh, bs(1)),
+            "vision_embeds": _sds((B, cfg.n_vision_tokens, cfg.d_model), dt,
+                                  mesh, bs(2)),
+        }
+    return {
+        "tokens": _sds((B, Sq), i32, mesh, bs(1)),
+        "labels": _sds((B, Sq), i32, mesh, bs(1)),
+    }
+
+
+def abstract_params(cfg: ArchConfig, mesh, inference: bool = False):
+    shapes = jax.eval_shape(
+        functools.partial(api.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    return S.with_sharding(shapes, S.param_specs(shapes, inference), mesh)
+
+
+def abstract_opt_state(cfg: ArchConfig, mesh, abs_params):
+    shapes = jax.eval_shape(init_opt_state, abs_params)
+    pspecs = S.param_specs(jax.eval_shape(
+        functools.partial(api.init_params, cfg=cfg), jax.random.PRNGKey(0)))
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    return S.with_sharding(shapes, ospecs, mesh)
+
+
+def abstract_decode_state(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    B, Sq = shape.global_batch, shape.seq_len
+    st = jax.eval_shape(
+        functools.partial(api.init_decode_state, cfg, B, Sq))
+    if cfg.family in api.SSM_FAMILIES:
+        spec = S.ssm_state_specs(mesh, cfg, B, st)
+    else:
+        kv = S.kv_cache_spec(mesh, cfg, B)
+
+        def rule(path, leaf):
+            name = S._path_names(path)[-1]
+            if name in ("k", "v"):
+                return kv
+            if name in ("cross_k", "cross_v"):
+                return kv
+            return P(*([None] * leaf.ndim))
+        spec = jax.tree_util.tree_map_with_path(rule, st)
+    return S.with_sharding(st, spec, mesh)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, mesh) -> Tuple[Any, ...]:
+    """Abstract args for the pair's step function (see ``step_fn``)."""
+    shape = get_shape(shape_name)
+    if shape.kind == "train":
+        params = abstract_params(cfg, mesh)
+        opt = abstract_opt_state(cfg, mesh, params)
+        batch = abstract_batch(cfg, shape, mesh)
+        return (params, opt, batch)
+    if shape.kind == "prefill":
+        return (abstract_params(cfg, mesh), abstract_batch(cfg, shape, mesh))
+    # decode: inference weight layout (TP-only / ep2d — no FSDP gathers)
+    params = abstract_params(cfg, mesh, inference=True)
+    B = shape.global_batch
+    token = _sds((B, 1), jnp.int32, mesh, S.batch_spec_for(mesh, B, 1))
+    state = abstract_decode_state(cfg, shape, mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return (params, token, state, pos)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, runtime: Runtime,
+                    opt_cfg: AdamWConfig = AdamWConfig(lr=1e-3)):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(api.loss_fn)(params, batch, cfg,
+                                                      runtime)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                opt_cfg)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, runtime: Runtime):
+    def prefill_step(params, batch):
+        return api.prefill_fn(params, batch, cfg, runtime)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, runtime: Runtime):
+    def serve_step(params, token, state, pos):
+        return api.decode_fn(params, token, state, pos, cfg, runtime)
+    return serve_step
+
+
+def step_fn(cfg: ArchConfig, shape_name: str, runtime: Runtime):
+    kind = get_shape(shape_name).kind
+    if kind == "train":
+        return make_train_step(cfg, runtime)
+    if kind == "prefill":
+        return make_prefill_step(cfg, runtime)
+    return make_decode_step(cfg, runtime)

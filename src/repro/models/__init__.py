@@ -1,0 +1,3 @@
+from repro.models.api import (decode_fn, init_decode_state, init_params,
+                              loss_fn, prefill_fn)
+from repro.models.transformer import CPU, Runtime

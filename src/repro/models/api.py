@@ -1,0 +1,74 @@
+"""Family-dispatched model API.
+
+Every assigned architecture supports (as applicable):
+  init_params(key, cfg)                      -> params pytree
+  loss_fn(params, batch, cfg, runtime)       -> scalar loss   (train_4k)
+  prefill_fn(params, batch, cfg, runtime)    -> (logits, cache) (prefill_32k)
+  init_decode_state(cfg, batch, seq, dtype)  -> cache/state
+  decode_fn(params, token, state, pos, cfg, runtime) -> (logits, state)
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, hybrid, transformer, vlm
+from repro.models.transformer import CPU, Runtime
+
+ATTN_FAMILIES = ("dense", "moe", "vlm")
+SSM_FAMILIES = ("ssm", "hybrid")
+
+
+def init_params(key, cfg: ArchConfig):
+    if cfg.family in SSM_FAMILIES:
+        return hybrid.init_hybrid_params(key, cfg)
+    if cfg.family == "audio":
+        return encdec.init_encdec_params(key, cfg)
+    return transformer.init_lm_params(key, cfg)
+
+
+def loss_fn(params, batch: Dict, cfg: ArchConfig, runtime: Runtime = CPU):
+    if cfg.family in SSM_FAMILIES:
+        return hybrid.hybrid_loss(params, batch, cfg, runtime)
+    if cfg.family == "audio":
+        return encdec.encdec_loss(params, batch, cfg, runtime)
+    if cfg.family == "vlm":
+        return vlm.vlm_loss(params, batch, cfg, runtime)
+    return transformer.lm_loss(params, batch, cfg, runtime)
+
+
+def prefill_fn(params, batch: Dict, cfg: ArchConfig, runtime: Runtime = CPU,
+               cache_len=None):
+    """cache_len: total KV buffer size (prompt + decode budget). Defaults to
+    the prompt length, i.e. no decode headroom — servers should pass
+    prompt_len + max_new_tokens (clipped to the sliding window if any)."""
+    if cfg.family in SSM_FAMILIES:
+        return hybrid.hybrid_prefill(params, batch["tokens"], cfg, runtime,
+                                     cache_len=cache_len)
+    if cfg.family == "audio":
+        return encdec.encdec_prefill(params, batch["frames"], batch["tokens"],
+                                     cfg, runtime)
+    if cfg.family == "vlm":
+        return vlm.vlm_prefill(params, batch, cfg, runtime,
+                               cache_len=cache_len)
+    return transformer.lm_prefill(params, batch["tokens"], cfg, runtime,
+                                  cache_len=cache_len)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int, dtype=None):
+    if cfg.family in SSM_FAMILIES:
+        return hybrid.init_hybrid_state(cfg, batch, seq_len, dtype)
+    if cfg.family == "audio":
+        return encdec.init_encdec_cache(cfg, batch, seq_len, dtype)
+    return transformer.init_lm_cache(cfg, batch, seq_len, dtype)
+
+
+def decode_fn(params, token, state, pos, cfg: ArchConfig,
+              runtime: Runtime = CPU):
+    if cfg.family in SSM_FAMILIES:
+        return hybrid.hybrid_decode_step(params, token, state, pos, cfg,
+                                         runtime)
+    if cfg.family == "audio":
+        return encdec.encdec_decode_step(params, token, state, pos, cfg,
+                                         runtime)
+    return transformer.lm_decode_step(params, token, state, pos, cfg, runtime)

@@ -1,0 +1,193 @@
+"""GQA attention with RoPE (full / fractional), causal + sliding-window masks,
+and a fixed-size KV cache with ring-buffer semantics for windowed decode.
+
+Three entry points:
+  * ``attend``            — generic QK^T/softmax/V core (used everywhere)
+  * ``self_attention``    — projections + RoPE for train/prefill
+  * ``decode_attention``  — one-token step against a cache
+
+All softmax accumulation is fp32 regardless of the activation dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float, fraction: float = 1.0):
+    """Inverse frequencies for the rotary fraction of the head dim."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2).astype(jnp.float32) / rot)), rot
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: (B, H, S, dh); positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    inv_freq, rot = rope_freqs(dh, theta, fraction)
+    if rot == 0:
+        return x
+    pos = positions.astype(jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    ang = pos[:, None, :, None] * inv_freq  # (B, 1, S, rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., ::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Core attention
+# ---------------------------------------------------------------------------
+
+
+def attend(q, k, v, mask=None, scale: Optional[float] = None):
+    """q: (B,H,Sq,dh), k/v: (B,Hkv,Skv,dh) with H % Hkv == 0.
+
+    mask: broadcastable to (B, H, Sq, Skv), True = attend.
+    """
+    B, H, Sq, dh = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, Hkv, group, Sq, dh)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        m = jnp.broadcast_to(mask, (B, H, Sq, k.shape[2])).reshape(
+            B, Hkv, group, Sq, k.shape[2])
+        logits = jnp.where(m, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w, v)
+    return out.reshape(B, H, Sq, dh)
+
+
+def causal_mask(seq: int, window: int = 0):
+    i = jnp.arange(seq)[:, None]
+    j = jnp.arange(seq)[None, :]
+    m = j <= i
+    if window > 0:
+        m &= (i - j) < window
+    return m  # (S, S)
+
+
+# ---------------------------------------------------------------------------
+# Self-attention layer (projections + RoPE)
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(kk, d_model, n_kv_heads * head_dim, dtype),
+        "wv": dense_init(kv, d_model, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(ko, n_heads * head_dim, d_model, dtype),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    B, H, S, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, H * dh)
+
+
+def qkv(params, x, n_heads, n_kv_heads, head_dim, positions, theta, fraction,
+        use_rope=True):
+    q = _split_heads(x @ params["wq"], n_heads, head_dim)
+    k = _split_heads(x @ params["wk"], n_kv_heads, head_dim)
+    v = _split_heads(x @ params["wv"], n_kv_heads, head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, theta, fraction)
+        k = apply_rope(k, positions, theta, fraction)
+    return q, k, v
+
+
+def self_attention(params, x, *, n_heads, n_kv_heads, head_dim, positions,
+                   theta=10_000.0, fraction=1.0, causal=True, window=0,
+                   use_rope=True, return_kv=False):
+    """Full-sequence attention (train / prefill). x: (B, S, D)."""
+    S = x.shape[1]
+    q, k, v = qkv(params, x, n_heads, n_kv_heads, head_dim, positions, theta,
+                  fraction, use_rope)
+    mask = causal_mask(S, window)[None, None] if causal else None
+    out = _merge_heads(attend(q, k, v, mask)) @ params["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_attention(params, x, enc_k, enc_v, *, n_heads, n_kv_heads, head_dim):
+    """Decoder->encoder cross attention. enc_k/v prepared once (B,Hkv,Se,dh)."""
+    q = _split_heads(x @ params["wq"], n_heads, head_dim)
+    out = _merge_heads(attend(q, enc_k, enc_v, None)) @ params["wo"]
+    return out
+
+
+def encoder_kv(params, enc_out, n_kv_heads, head_dim):
+    k = _split_heads(enc_out @ params["wk"], n_kv_heads, head_dim)
+    v = _split_heads(enc_out @ params["wv"], n_kv_heads, head_dim)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# KV cache (fixed-size buffer; ring semantics when window > 0)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(batch, n_kv_heads, cache_len, head_dim, dtype):
+    shape = (batch, n_kv_heads, cache_len, head_dim)
+    return {"k": jnp.zeros(shape, dtype=dtype), "v": jnp.zeros(shape, dtype=dtype)}
+
+
+def cache_len_for(seq_len: int, window: int) -> int:
+    return min(seq_len, window) if window > 0 else seq_len
+
+
+def decode_attention(params, x, cache, pos, *, n_heads, n_kv_heads, head_dim,
+                     theta=10_000.0, fraction=1.0, window=0, use_rope=True):
+    """One-token decode. x: (B, 1, D); pos: scalar int32 (current position).
+
+    The cache buffer has length C = cache_len_for(seq, window). When window>0
+    the buffer is a ring indexed by pos % C; RoPE uses absolute positions, so
+    relative geometry is preserved regardless of ring rotation.
+    """
+    B = x.shape[0]
+    C = cache["k"].shape[2]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = qkv(params, x, n_heads, n_kv_heads, head_dim, positions,
+                          theta, fraction, use_rope)
+    slot = jnp.mod(pos, C)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, 0, slot, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, 0, slot, 0))
+    # valid slots: those already written (<= pos), and within window of pos
+    idx = jnp.arange(C)
+    written = jnp.where(pos + 1 >= C, jnp.ones((C,), bool), idx <= slot)
+    if window > 0:
+        # absolute position stored in each ring slot
+        abs_pos = jnp.where(idx <= slot, pos - slot + idx, pos - slot + idx - C)
+        valid = written & (pos - abs_pos < window) & (abs_pos >= 0)
+    else:
+        valid = written
+    mask = valid[None, None, None, :]
+    out = _merge_heads(attend(q, k, v, mask)) @ params["wo"]
+    return out, {"k": k, "v": v}

@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder [arXiv:2212.04356].
+
+The mel-spectrogram + conv frontend is a STUB (DESIGN.md §6): callers supply
+precomputed frame embeddings (B, S_enc, d_model). We implement the
+transformer backbone: a bidirectional encoder over frames and a causal
+decoder with cross-attention. Whisper uses LayerNorm + GELU and absolute
+sinusoidal positions (no RoPE); we follow that.
+
+Decode semantics for the ``decode_32k`` shape: ONE new text token against a
+self-attention cache of length max_decoder_len and *cross-attention K/V over
+the full 32k encoder output* — the encoder context is what scales, matching
+the shape's intent for an audio arch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import (dense_init, embed_init, gelu_mlp,
+                                 gelu_mlp_init, layernorm, layernorm_init,
+                                 sinusoidal_embedding)
+from repro.models.transformer import (Runtime, CPU, batch_spec, constrain,
+                                      cross_entropy, scan_or_unroll,
+                                      stacked_init)
+
+
+def _attn_init(key, cfg: ArchConfig, dtype):
+    return attn.attn_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim_, dtype)
+
+
+def enc_layer_init(key, cfg: ArchConfig, dtype):
+    ka, km = jax.random.split(key)
+    return {
+        "norm1": layernorm_init(cfg.d_model, dtype),
+        "attn": _attn_init(ka, cfg, dtype),
+        "norm2": layernorm_init(cfg.d_model, dtype),
+        "mlp": gelu_mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def dec_layer_init(key, cfg: ArchConfig, dtype):
+    ka, kx, km = jax.random.split(key, 3)
+    return {
+        "norm1": layernorm_init(cfg.d_model, dtype),
+        "self_attn": _attn_init(ka, cfg, dtype),
+        "norm_x": layernorm_init(cfg.d_model, dtype),
+        "cross_attn": _attn_init(kx, cfg, dtype),
+        "norm2": layernorm_init(cfg.d_model, dtype),
+        "mlp": gelu_mlp_init(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec_params(key, cfg: ArchConfig) -> Dict:
+    dtype = cfg.jnp_dtype
+    ke, kd, kt, ku = jax.random.split(key, 4)
+    return {
+        "enc_layers": stacked_init(ke, cfg.n_encoder_layers,
+                                   lambda k: enc_layer_init(k, cfg, dtype)),
+        "enc_norm": layernorm_init(cfg.d_model, dtype),
+        "dec_layers": stacked_init(kd, cfg.n_layers,
+                                   lambda k: dec_layer_init(k, cfg, dtype)),
+        "dec_norm": layernorm_init(cfg.d_model, dtype),
+        "tok_embed": embed_init(kt, cfg.vocab_size, cfg.d_model, dtype),
+        "unembed": dense_init(ku, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params, frames, cfg: ArchConfig, runtime: Runtime = CPU):
+    """frames: (B, S_enc, D) stub embeddings -> (B, S_enc, D)."""
+    S = frames.shape[1]
+    pos = sinusoidal_embedding(jnp.arange(S), cfg.d_model)
+    x = frames + pos[None].astype(frames.dtype)
+    x = constrain(x, runtime, batch_spec(runtime))
+
+    def body(xc, lp):
+        h = layernorm(lp["norm1"], xc, cfg.norm_eps)
+        a = attn.self_attention(
+            lp["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, positions=jnp.arange(S)[None],
+            causal=False, use_rope=False)
+        xc = xc + a
+        h = layernorm(lp["norm2"], xc, cfg.norm_eps)
+        xc = xc + gelu_mlp(lp["mlp"], h)
+        xc = constrain(xc, runtime, batch_spec(runtime))
+        return xc, None
+
+    x, _ = scan_or_unroll(body, x, params["enc_layers"], runtime)
+    return layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def encoder_cross_kv(params, enc_out, cfg: ArchConfig):
+    """Precompute per-decoder-layer cross K/V: (L, B, Hkv, S_enc, dh)."""
+    def per_layer(lp):
+        return attn.encoder_kv(lp["cross_attn"], enc_out, cfg.n_kv_heads,
+                               cfg.head_dim_)
+    ks, vs = jax.vmap(per_layer)(params["dec_layers"])
+    return ks, vs
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_embed(params, tokens, cfg):
+    x = params["tok_embed"][tokens]
+    pos = sinusoidal_embedding(jnp.arange(tokens.shape[1]), cfg.d_model)
+    return x + pos[None].astype(x.dtype)
+
+
+def decode_train(params, tokens, enc_out, cfg: ArchConfig,
+                 runtime: Runtime = CPU, collect_kv: bool = False):
+    """Teacher-forced decoder pass. tokens: (B, S_dec)."""
+    S = tokens.shape[1]
+    x = _dec_embed(params, tokens, cfg)
+    x = constrain(x, runtime, batch_spec(runtime))
+
+    def body(xc, lp):
+        h = layernorm(lp["norm1"], xc, cfg.norm_eps)
+        a, kv = attn.self_attention(
+            lp["self_attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, positions=jnp.arange(S)[None],
+            causal=True, use_rope=False, return_kv=True)
+        xc = xc + a
+        h = layernorm(lp["norm_x"], xc, cfg.norm_eps)
+        ek, ev = attn.encoder_kv(lp["cross_attn"], enc_out, cfg.n_kv_heads,
+                                 cfg.head_dim_)
+        xc = xc + attn.cross_attention(lp["cross_attn"], h, ek, ev,
+                                       n_heads=cfg.n_heads,
+                                       n_kv_heads=cfg.n_kv_heads,
+                                       head_dim=cfg.head_dim_)
+        h = layernorm(lp["norm2"], xc, cfg.norm_eps)
+        xc = xc + gelu_mlp(lp["mlp"], h)
+        xc = constrain(xc, runtime, batch_spec(runtime))
+        return xc, kv if collect_kv else None
+
+    x, kvs = scan_or_unroll(body, x, params["dec_layers"], runtime)
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    return x, kvs
+
+
+def encdec_loss(params, batch, cfg: ArchConfig, runtime: Runtime = CPU):
+    """batch: frames (B,S_enc,D), tokens (B,S_dec), labels (B,S_dec)."""
+    enc = encode(params, batch["frames"], cfg, runtime)
+    hidden, _ = decode_train(params, batch["tokens"], enc, cfg, runtime)
+    logits = hidden @ params["unembed"]
+    return cross_entropy(logits, batch["labels"])
+
+
+def encdec_prefill(params, frames, tokens, cfg: ArchConfig,
+                   runtime: Runtime = CPU):
+    """Encoder pass + decoder prompt prefill. Returns (logits, cache)."""
+    enc = encode(params, frames, cfg, runtime)
+    cross_k, cross_v = encoder_cross_kv(params, enc, cfg)
+    hidden, kvs = decode_train(params, tokens, enc, cfg, runtime,
+                               collect_kv=True)
+    S, C = tokens.shape[1], cfg.max_decoder_len
+    k, v = kvs
+    pad = lambda t: jnp.pad(t, ((0, 0),) * 2 + ((0, C - S), (0, 0))) \
+        if S < C else t[:, :, -C:]
+    cache = {
+        "k": jax.vmap(pad)(k), "v": jax.vmap(pad)(v),
+        "cross_k": cross_k, "cross_v": cross_v,
+    }
+    logits = hidden[:, -1:, :] @ params["unembed"]
+    return logits, cache
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, enc_len: int, dtype=None):
+    dtype = dtype or cfg.jnp_dtype
+    C, L = cfg.max_decoder_len, cfg.n_layers
+    dh, hkv = cfg.head_dim_, cfg.n_kv_heads
+    z = lambda *s: jnp.zeros(s, dtype)
+    return {
+        "k": z(L, batch, hkv, C, dh), "v": z(L, batch, hkv, C, dh),
+        "cross_k": z(L, batch, hkv, enc_len, dh),
+        "cross_v": z(L, batch, hkv, enc_len, dh),
+    }
+
+
+def encdec_decode_step(params, token, cache, pos, cfg: ArchConfig,
+                       runtime: Runtime = CPU):
+    """One decoder token vs. self cache (len max_decoder_len) + cross K/V."""
+    B = token.shape[0]
+    x = params["tok_embed"][token]
+    x = x + sinusoidal_embedding(jnp.full((1,), pos), cfg.d_model)[None].astype(x.dtype)
+
+    def body(xc, inp):
+        lp, layer_cache = inp
+        h = layernorm(lp["norm1"], xc, cfg.norm_eps)
+        a, kv = attn.decode_attention(
+            lp["self_attn"], h, {"k": layer_cache["k"], "v": layer_cache["v"]},
+            pos, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, use_rope=False)
+        xc = xc + a
+        h = layernorm(lp["norm_x"], xc, cfg.norm_eps)
+        xc = xc + attn.cross_attention(
+            lp["cross_attn"], h, layer_cache["cross_k"],
+            layer_cache["cross_v"], n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_)
+        h = layernorm(lp["norm2"], xc, cfg.norm_eps)
+        xc = xc + gelu_mlp(lp["mlp"], h)
+        new_cache = dict(layer_cache)
+        new_cache.update(kv)
+        return xc, new_cache
+
+    x, new_cache = scan_or_unroll(body, x, (params["dec_layers"], cache), runtime)
+    x = layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = x @ params["unembed"]
+    return logits, new_cache

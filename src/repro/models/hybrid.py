@@ -1,0 +1,177 @@
+"""SSM language-model stacks: pure Mamba2 (mamba2-2.7b) and the Zamba2-style
+hybrid — a Mamba2 backbone with ONE shared attention+MLP block applied every
+``shared_attn_every`` layers (shared parameters, per-application KV cache).
+
+Setting ``shared_attn_every = 0`` gives the pure-SSM stack; both archs share
+this module. Decode keeps O(1) state per mamba layer plus (for the hybrid) a
+sliding-window KV ring per shared-block application — which is what makes
+``long_500k`` decode bounded-memory (DESIGN.md §6).
+
+Simplification vs. Zamba2 (noted in DESIGN.md): the original alternates two
+shared blocks with per-application LoRA deltas and concatenates the first
+embedding into the block input; we use one shared block applied uniformly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import dense_init, embed_init, rmsnorm, rmsnorm_init
+from repro.models.ssm import (mamba_decode, mamba_forward, mamba_init,
+                              mamba_init_state)
+from repro.models.transformer import (Runtime, CPU, batch_spec, block_apply,
+                                      block_decode, block_init, constrain,
+                                      cross_entropy, logits_of,
+                                      scan_or_unroll, stacked_init, _to_ring)
+
+
+def _grouping(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(group_size g, n_full_groups G, remainder r)."""
+    g = cfg.shared_attn_every
+    if g <= 0:
+        return cfg.n_layers, 0, cfg.n_layers
+    return g, cfg.n_layers // g, cfg.n_layers % g
+
+
+def _split_groups(stacked, g: int, G: int):
+    head = jax.tree.map(lambda t: t[:G * g].reshape((G, g) + t.shape[1:]),
+                        stacked)
+    tail = jax.tree.map(lambda t: t[G * g:], stacked)
+    return head, tail
+
+
+def init_hybrid_params(key, cfg: ArchConfig) -> Dict:
+    dtype = cfg.jnp_dtype
+    ke, km, ks, ku = jax.random.split(key, 4)
+    p = {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "mamba": stacked_init(km, cfg.n_layers,
+                              lambda k: mamba_init(k, cfg, dtype)),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "unembed": dense_init(ku, cfg.d_model, cfg.vocab_size, dtype),
+    }
+    if cfg.shared_attn_every > 0:
+        p["shared"] = block_init(ks, cfg, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def hybrid_forward(params, tokens, cfg: ArchConfig, runtime: Runtime = CPU,
+                   collect_state: bool = False):
+    """Returns (hidden, states|None, shared_kvs|None)."""
+    x = params["embed"][tokens]
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = constrain(x, runtime, batch_spec(runtime))
+    g, G, r = _grouping(cfg)
+    head, tail = _split_groups(params["mamba"], g, G)
+
+    def mamba_group(x, group_params):
+        def body(xc, lp):
+            if collect_state:
+                xo, st = mamba_forward(lp, xc, cfg, return_state=True)
+                return xo, st
+            return mamba_forward(lp, xc, cfg), None
+        return scan_or_unroll(body, x, group_params, runtime)
+
+    shared_kvs = None
+    if G > 0:
+        def outer_body(xc, gp):
+            xo, states = mamba_group(xc, gp)
+            xo, _, kv = block_apply(params["shared"], xo, cfg, runtime,
+                                    positions)
+            return xo, (states, kv if collect_state else None)
+        x, (head_states, shared_kvs) = scan_or_unroll(outer_body, x, head, runtime)
+    else:
+        head_states = None
+    x, tail_states = mamba_group(x, tail)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+    states = None
+    if collect_state:
+        states = {"head": head_states, "tail": tail_states}
+    return x, states, shared_kvs
+
+
+def hybrid_loss(params, batch, cfg: ArchConfig, runtime: Runtime = CPU):
+    hidden, _, _ = hybrid_forward(params, batch["tokens"], cfg, runtime)
+    logits = logits_of(params, hidden, runtime)
+    return cross_entropy(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_hybrid_state(cfg: ArchConfig, batch: int, seq_len: int,
+                      dtype=None) -> Dict:
+    dtype = dtype or cfg.jnp_dtype
+    g, G, r = _grouping(cfg)
+    one = mamba_init_state(cfg, batch, dtype)
+    stack = lambda t, n: jnp.broadcast_to(t, (n,) + t.shape)
+    state = {
+        "head": jax.tree.map(lambda t: stack(stack(t, g), G), one),
+        "tail": jax.tree.map(lambda t: stack(t, r), one),
+    }
+    if cfg.shared_attn_every > 0:
+        C = attn.cache_len_for(seq_len, cfg.sliding_window)
+        kv = attn.init_cache(batch, cfg.n_kv_heads, C, cfg.head_dim_, dtype)
+        state["shared"] = jax.tree.map(lambda t: stack(t, G), kv)
+    return state
+
+
+def hybrid_prefill(params, tokens, cfg: ArchConfig, runtime: Runtime = CPU,
+                   cache_len: Optional[int] = None):
+    hidden, states, shared_kvs = hybrid_forward(params, tokens, cfg, runtime,
+                                                collect_state=True)
+    S = tokens.shape[1]
+    state = {"head": states["head"], "tail": states["tail"]}
+    if cfg.shared_attn_every > 0:
+        C = cache_len or attn.cache_len_for(S, cfg.sliding_window)
+        k, v = shared_kvs  # (G, B, Hkv, S, dh)
+        state["shared"] = {
+            "k": jax.vmap(lambda t: _to_ring(t, C, S))(k),
+            "v": jax.vmap(lambda t: _to_ring(t, C, S))(v),
+        }
+    logits = logits_of(params, hidden[:, -1:, :], runtime)
+    return logits, state
+
+
+def hybrid_decode_step(params, token, state, pos, cfg: ArchConfig,
+                       runtime: Runtime = CPU):
+    """token: (B,1); state from init_hybrid_state/prefill; pos scalar."""
+    x = params["embed"][token]
+    g, G, r = _grouping(cfg)
+
+    def mamba_group(x, group_params, group_state):
+        def body(xc, inp):
+            lp, st = inp
+            xo, st2 = mamba_decode(lp, xc, st, cfg)
+            return xo, st2
+        return scan_or_unroll(body, x, (group_params, group_state), runtime)
+
+    head, tail = _split_groups(params["mamba"], g, G)
+    new_state = dict(state)
+    if G > 0:
+        def outer_body(xc, inp):
+            gp, gs, kv = inp
+            xo, gs2 = mamba_group(xc, gp, gs)
+            xo, kv2 = block_decode(params["shared"], xo, kv, pos, cfg, runtime)
+            return xo, (gs2, kv2)
+        x, (hs, skv) = scan_or_unroll(
+            outer_body, x, (head, state["head"], state["shared"]), runtime)
+        new_state["head"], new_state["shared"] = hs, skv
+    x, ts = mamba_group(x, tail, state["tail"])
+    new_state["tail"] = ts
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_of(params, x, runtime)
+    return logits, new_state

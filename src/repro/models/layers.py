@@ -1,0 +1,154 @@
+"""Shared neural-net building blocks (pure-JAX pytrees, no framework).
+
+Parameters are nested dicts of jnp arrays; every module is an (init, apply)
+pair of pure functions so layers can be stacked with ``jax.lax.scan`` over a
+leading layer dimension (see models/transformer.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_lowmem(x, scale, eps):
+    return _rmsnorm_fwd(x, scale, eps)[0]
+
+
+def _row_inv(x, eps):
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / x.shape[-1]
+    return jax.lax.rsqrt(var + eps)[..., None]           # fp32 row stat
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    inv = _row_inv(x, eps)
+    y = x * inv.astype(x.dtype) * scale.astype(x.dtype)
+    return y, (x, scale, inv)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    # y = x · r · s with r = rsqrt(mean(x²)+eps):
+    #   dx = r·(g·s) − x·r³·mean(x·(g·s));  ds = Σ g·x·r
+    # Cotangents stay in the ACTIVATION dtype (bf16 on full configs); only
+    # the per-row reductions run in fp32. Keeping the backward residual
+    # stream bf16 halves train-step HBM traffic on deep stacks
+    # (EXPERIMENTS §Perf, mamba2 hillclimb cycle 5).
+    x, scale, inv = res
+    dt = x.dtype
+    gs = g * scale.astype(dt)
+    m = jnp.einsum("...d,...d->...", x, gs,
+                   preferred_element_type=jnp.float32)[..., None] / x.shape[-1]
+    coef = (inv ** 3 * m).astype(dt)
+    dx = gs * inv.astype(dt) - x * coef
+    dscale = jnp.einsum("...d,...->d", (g * x).astype(jnp.float32),
+                        inv[..., 0]).astype(scale.dtype)
+    return dx, dscale
+
+
+_rmsnorm_lowmem.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    if x.dtype == jnp.float32:
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(var + eps) * params["scale"]
+    return _rmsnorm_lowmem(x, params["scale"], eps)
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm (whisper)
+# ---------------------------------------------------------------------------
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(key, d: int, f: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, f, dtype),
+        "w_up": dense_init(k2, d, f, dtype),
+        "w_down": dense_init(k3, f, d, dtype),
+    }
+
+
+def swiglu(params, x):
+    g = jax.nn.silu(x @ params["w_gate"])
+    u = x @ params["w_up"]
+    return (g * u) @ params["w_down"]
+
+
+def gelu_mlp_init(key, d: int, f: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"w1": dense_init(k1, d, f, dtype), "w2": dense_init(k2, f, d, dtype)}
+
+
+def gelu_mlp(params, x):
+    return jax.nn.gelu(x @ params["w1"]) @ params["w2"]
+
+
+def mlp_init(key, d: int, f: int, dtype, mlp_type: str):
+    if mlp_type == "swiglu":
+        return swiglu_init(key, d, f, dtype)
+    return gelu_mlp_init(key, d, f, dtype)
+
+
+def mlp_apply(params, x, mlp_type: str):
+    return swiglu(params, x) if mlp_type == "swiglu" else gelu_mlp(params, x)
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+
+def sinusoidal_embedding(positions, dim: int, max_period: float = 10_000.0):
+    """(...,) int positions -> (..., dim) sinusoidal embedding (f32)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half) / half)
+    args = positions.astype(jnp.float32)[..., None] * freqs
+    emb = jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, [(0, 0)] * (emb.ndim - 1) + [(0, 1)])
+    return emb

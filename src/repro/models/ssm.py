@@ -1,0 +1,232 @@
+"""Mamba2 (SSD — state-space duality) mixer layer [arXiv:2405.21060].
+
+The chunked SSD algorithm here (``ssd_chunked``) is the pure-jnp oracle for
+the Pallas ``ssd_scan`` kernel (kernels/ssd_scan/ref.py re-exports it).
+
+Shapes (per layer):
+  d_inner = expand * d_model,  P = ssm_head_dim,  H = d_inner / P,
+  N = ssm_state,  conv_dim = d_inner + 2N  (x, B, C go through the conv).
+
+Training/prefill use the chunked scan (sub-quadratic: O(S·Q) intra-chunk +
+O(S/Q) inter-chunk); decode uses the O(1)-per-token recurrent state update —
+this is what makes ``long_500k`` tractable for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# Core SSD math (oracle for kernels/ssd_scan)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked state-space-duality scan.
+
+    x:  (b, s, h, p)   per-head inputs (already dt-independent)
+    dt: (b, s, h)      positive step sizes (softplus applied by caller)
+    A:  (h,)           negative per-head decay rates
+    B:  (b, s, n)      input projections (n_groups = 1, shared across heads)
+    C:  (b, s, n)      output projections
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    # Pad the tail with dt = 0 steps: decay exp(0)=1 and zero input keep the
+    # recurrence exact, so final_state is unaffected and padded y is dropped.
+    pad = (-s) % chunk
+    if pad:
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, B, C = zpad(x), zpad(dt), zpad(B), zpad(C)
+    s_p = s + pad
+    nc, q = s_p // chunk, chunk
+
+    # Heavy (q- and p-sized) tensors stay in the INPUT dtype (bf16 on the
+    # full configs); only dt/L (small, (b,s,h)) and the recurrent state are
+    # fp32. Contractions accumulate in fp32 via preferred_element_type —
+    # MXU semantics. This removed ~half the HBM traffic of the all-fp32
+    # formulation (EXPERIMENTS §Perf, mamba2 hillclimb cycle 3).
+    f32 = jnp.float32
+    cdt = x.dtype
+    xr = x.reshape(b, nc, q, h, p)  # padded length s_p = nc*q
+    dtr = dt.astype(f32).reshape(b, nc, q, h)
+    Br = B.astype(cdt).reshape(b, nc, q, n)
+    Cr = C.astype(cdt).reshape(b, nc, q, n)
+
+    dtx = xr * dtr.astype(cdt)[..., None]          # (b,nc,q,h,p)
+    dA = dtr * A.astype(f32)                       # log-decay per step, <= 0
+    L = jnp.cumsum(dA, axis=2)                     # (b,nc,q,h) fp32
+
+    # --- intra-chunk (quadratic within a chunk) ---
+    diff = L[:, :, :, None, :] - L[:, :, None, :, :]      # (b,nc,t,s,h)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    decay = decay.astype(cdt)
+    CB = jnp.einsum("bctn,bcsn->bcts", Cr, Br,
+                    preferred_element_type=f32).astype(cdt)  # (b,nc,t,s)
+    y_intra = jnp.einsum("bcts,bctsh,bcshp->bcthp", CB, decay, dtx,
+                         preferred_element_type=f32)
+
+    # --- chunk summary states ---
+    decay_to_end = jnp.exp(L[:, :, -1:, :] - L).astype(cdt)  # (b,nc,q,h)
+    S_c = jnp.einsum("bcqn,bcqhp,bcqh->bchpn", Br, dtx, decay_to_end,
+                     preferred_element_type=f32)
+
+    # --- inter-chunk recurrence (scan over chunks, fp32 state) ---
+    chunk_decay = jnp.exp(L[:, :, -1, :])                 # (b,nc,h)
+    h0 = (jnp.zeros((b, h, p, n), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(hprev, inp):
+        s_k, d_k = inp                                    # (b,h,p,n), (b,h)
+        hnew = d_k[:, :, None, None] * hprev + s_k
+        return hnew, hprev                                # emit state BEFORE chunk
+
+    S_t = jnp.moveaxis(S_c, 1, 0)                         # (nc,b,h,p,n)
+    d_t = jnp.moveaxis(chunk_decay, 1, 0)                 # (nc,b,h)
+    h_final, h_before = jax.lax.scan(step, h0, (S_t, d_t))
+    h_before = jnp.moveaxis(h_before, 0, 1)               # (b,nc,h,p,n)
+
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cr,
+                         h_before.astype(cdt), jnp.exp(L).astype(cdt),
+                         preferred_element_type=f32)
+    y = (y_intra + y_inter).reshape(b, s_p, h, p)[:, :s]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """O(1) recurrent update. state: (b,h,p,n); x: (b,h,p); dt: (b,h);
+    B, C: (b, n). Returns (y (b,h,p), new_state)."""
+    f32 = jnp.float32
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))          # (b,h)
+    dBx = jnp.einsum("bn,bhp,bh->bhpn", B.astype(f32), x.astype(f32),
+                     dt.astype(f32))
+    new = dA[:, :, None, None] * state.astype(f32) + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(f32), new)
+    return y.astype(x.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 layer
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg: ArchConfig, dtype):
+    """Input projections are SPLIT (z/x/BC/dt as separate matrices) rather
+    than one fused in_proj: mathematically identical (a column partition),
+    but it lets the sharding layer put the "model" mesh axis to work on the
+    head-sized dims — the fused layout's mixed slice boundaries are not
+    16-way shardable (EXPERIMENTS §Perf, mamba2 hillclimb cycle 2)."""
+    d, di, n, h = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    conv_scale = 1.0 / math.sqrt(cfg.ssm_conv_kernel)
+    return {
+        "norm": rmsnorm_init(d, dtype),
+        "z_proj": dense_init(k1, d, di, dtype),
+        "x_proj": dense_init(k2, d, di, dtype),
+        "bc_proj": dense_init(k3, d, 2 * n, dtype),
+        "dt_proj": dense_init(k4, d, h, dtype),
+        "conv_x_w": (jax.random.normal(k5, (cfg.ssm_conv_kernel, di))
+                     * conv_scale).astype(dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": (jax.random.normal(k6, (cfg.ssm_conv_kernel, 2 * n))
+                      * conv_scale).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), math.log(math.expm1(0.01)), jnp.float32),
+        "out_norm": rmsnorm_init(di, dtype),
+        "out_proj": dense_init(jax.random.fold_in(k1, 7), di, d, dtype),
+    }
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv. xBC: (B, S, Cd); w: (K, Cd)."""
+    K = w.shape[0]
+    lhs = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        lhs, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xBC.shape[-1])
+    return jax.nn.silu(out + b)
+
+
+def _conv_decode(conv_state, xBC_new, w, b):
+    """conv_state: (B, K-1, Cd) previous raw inputs; xBC_new: (B, Cd)."""
+    window = jnp.concatenate([conv_state, xBC_new[:, None, :]], axis=1)  # (B,K,Cd)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    new_state = window[:, 1:, :]
+    return jax.nn.silu(out), new_state
+
+
+def mamba_forward(params, x, cfg: ArchConfig, return_state: bool = False):
+    """Full-sequence mixer (train / prefill). x: (B, S, D)."""
+    B_, S, D = x.shape
+    di, n, h, p = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    xn = rmsnorm(params["norm"], x, cfg.norm_eps)
+    z = xn @ params["z_proj"]
+    x_raw = xn @ params["x_proj"]
+    bc_raw = xn @ params["bc_proj"]
+    dt_raw = xn @ params["dt_proj"]
+    xc = _causal_conv(x_raw, params["conv_x_w"], params["conv_x_b"])
+    bc = _causal_conv(bc_raw, params["conv_bc_w"], params["conv_bc_b"])
+    xs = xc.reshape(B_, S, h, p)
+    Bm, Cm = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, min(cfg.ssm_chunk, S))
+    y = y + xs * params["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, S, di)
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = x + y @ params["out_proj"]
+    if return_state:
+        K = cfg.ssm_conv_kernel
+        conv_state = jnp.concatenate([x_raw, bc_raw], axis=-1)[:, -(K - 1):, :]
+        return out, {"ssm": final_state, "conv": conv_state}
+    return out
+
+
+def mamba_init_state(cfg: ArchConfig, batch: int, dtype):
+    di, n, h, p = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    K = cfg.ssm_conv_kernel
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, di + 2 * n), dtype),
+    }
+
+
+def mamba_decode(params, x, state, cfg: ArchConfig):
+    """One-token step. x: (B, 1, D); state from mamba_init_state/prefill."""
+    B_ = x.shape[0]
+    di, n, h, p = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    xn = rmsnorm(params["norm"], x[:, 0], cfg.norm_eps)
+    z = xn @ params["z_proj"]
+    x_raw = xn @ params["x_proj"]
+    bc_raw = xn @ params["bc_proj"]
+    dt_raw = xn @ params["dt_proj"]
+    xBC_raw = jnp.concatenate([x_raw, bc_raw], axis=-1)
+    conv_w = jnp.concatenate([params["conv_x_w"], params["conv_bc_w"]],
+                             axis=-1)
+    conv_b = jnp.concatenate([params["conv_x_b"], params["conv_bc_b"]],
+                             axis=-1)
+    xBC, conv_state = _conv_decode(state["conv"], xBC_raw, conv_w, conv_b)
+    xs = xBC[..., :di].reshape(B_, h, p)
+    Bm = xBC[..., di:di + n]
+    Cm = xBC[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, ssm_state = ssd_decode_step(state["ssm"], xs, dt, A, Bm, Cm)
+    y = y + xs * params["D"][None, :, None].astype(y.dtype)
+    y = y.reshape(B_, di)
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = x + (y @ params["out_proj"])[:, None, :]
+    return out, {"ssm": ssm_state, "conv": conv_state}

@@ -1,0 +1,273 @@
+"""Unified decoder-only transformer stack (dense + MoE families).
+
+Layers are stacked along a leading L axis and executed with
+``jax.lax.scan`` — this keeps the HLO size O(1) in depth, which is what
+makes the 80-layer dry-run compiles tractable on the CPU host.
+
+Public entry points (family-dispatched wrappers live in models/api.py):
+  init_lm_params / lm_forward / lm_loss / lm_prefill / lm_decode_step
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import (dense_init, embed_init, mlp_apply, mlp_init,
+                                 rmsnorm, rmsnorm_init)
+from repro.models.moe import moe_apply, moe_init
+
+
+# ---------------------------------------------------------------------------
+# Runtime: how the model executes (mesh, modes) — orthogonal to ArchConfig.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    mesh: Any = None                      # jax.sharding.Mesh or None
+    batch_axes: Any = ("data",)           # mesh axes the batch is sharded over
+    model_axis: str = "model"
+    moe_mode: str = "dense"               # dense | ep
+    use_pallas: bool = False              # TPU-only fast kernels
+    remat: bool = False                   # activation checkpointing per layer
+    unroll: bool = False                  # python-loop layers instead of scan
+    #   (roofline slope runs: XLA cost_analysis counts a while-loop body
+    #    ONCE, so per-layer costs are measured on small unrolled depths and
+    #    extrapolated — see benchmarks/roofline.py)
+
+
+CPU = Runtime()
+
+
+def scan_or_unroll(body, carry, xs, runtime: Optional["Runtime"]):
+    """lax.scan over stacked xs, or an unrolled python loop when
+    runtime.unroll (for cost-measurement lowers). Same (carry, ys) contract;
+    ys may contain None."""
+    if runtime is None or not runtime.unroll:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+    return carry, stacked
+
+
+def constrain(x, runtime: Optional[Runtime], spec):
+    """Sharding hint; no-op off-mesh."""
+    if runtime is None or runtime.mesh is None:
+        return x
+    s = jax.sharding.NamedSharding(runtime.mesh, spec)
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def batch_spec(runtime: Runtime, extra=(None, None)):
+    from jax.sharding import PartitionSpec as P
+    return P(runtime.batch_axes, *extra)
+
+
+# ---------------------------------------------------------------------------
+# One block
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ArchConfig, dtype):
+    ka, km = jax.random.split(key)
+    p = {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn.attn_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim_, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_init(km, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(km, cfg.d_model, cfg.d_ff, dtype, cfg.mlp_type)
+    return p
+
+
+def block_apply(params, x, cfg: ArchConfig, runtime: Runtime, positions,
+                window: Optional[int] = None, causal: bool = True):
+    """Full-sequence block (train). Returns (x, aux, (k, v))."""
+    w = cfg.sliding_window if window is None else window
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    a, kv = attn.self_attention(
+        params["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim_, positions=positions, theta=cfg.rope_theta,
+        fraction=cfg.rope_fraction, causal=causal, window=w, return_kv=True)
+    x = x + a
+    x = constrain(x, runtime, batch_spec(runtime))
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        m, aux = moe_apply(params["moe"], h, cfg, runtime)
+    else:
+        m, aux = mlp_apply(params["mlp"], h, cfg.mlp_type), jnp.float32(0.0)
+    x = x + m
+    x = constrain(x, runtime, batch_spec(runtime))
+    return x, aux, kv
+
+
+def block_decode(params, x, cache, pos, cfg: ArchConfig, runtime: Runtime):
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    a, cache = attn.decode_attention(
+        params["attn"], h, cache, pos, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+        theta=cfg.rope_theta, fraction=cfg.rope_fraction,
+        window=cfg.sliding_window)
+    x = x + a
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        m, _ = moe_apply(params["moe"], h, cfg, runtime)
+    else:
+        m = mlp_apply(params["mlp"], h, cfg.mlp_type)
+    x = x + m
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Stack
+# ---------------------------------------------------------------------------
+
+
+def stacked_init(key, n: int, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_lm_params(key, cfg: ArchConfig) -> Dict:
+    dtype = cfg.jnp_dtype
+    ke, kl, ku = jax.random.split(key, 3)
+    return {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": stacked_init(kl, cfg.n_layers,
+                               lambda k: block_init(k, cfg, dtype)),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "unembed": dense_init(ku, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def _scan_blocks(params_layers, x, cfg, runtime, positions, collect_kv,
+                 window=None, causal=True):
+    def body(carry, layer_params):
+        xc, aux = carry
+        xo, a, kv = block_apply(layer_params, xc, cfg, runtime, positions,
+                                window, causal)
+        ys = kv if collect_kv else None
+        return (xo, aux + a), ys
+
+    if runtime.remat:
+        body = jax.checkpoint(body)
+    (x, aux), kvs = scan_or_unroll(body, (x, jnp.float32(0.0)), params_layers,
+                                   runtime)
+    return x, aux, kvs
+
+
+def lm_forward(params, tokens, cfg: ArchConfig, runtime: Runtime = CPU,
+               embeds_prefix=None, collect_kv: bool = False):
+    """tokens: (B, S) int32. embeds_prefix: optional (B, P, D) prepended
+    (VLM vision patches). Returns (hidden (B, S[+P], D), aux, kvs)."""
+    x = params["embed"][tokens]
+    if embeds_prefix is not None:
+        x = jnp.concatenate([embeds_prefix.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = constrain(x, runtime, batch_spec(runtime))
+    x, aux, kvs = _scan_blocks(params["layers"], x, cfg, runtime, positions,
+                               collect_kv)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux, kvs
+
+
+def logits_of(params, hidden, runtime: Runtime = CPU):
+    from jax.sharding import PartitionSpec as P
+    logits = hidden @ params["unembed"]
+    return constrain(logits, runtime,
+                     P(runtime.batch_axes, None, runtime.model_axis))
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits (B,S,V), labels (B,S) int32; mask True = count."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        mask = labels >= 0
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.clip(jnp.sum(mask), 1.0)
+
+
+def lm_loss(params, batch, cfg: ArchConfig, runtime: Runtime = CPU):
+    """batch: dict(tokens (B,S), labels (B,S)). Next-token loss is the
+    caller's concern (labels are already shifted by the data pipeline)."""
+    hidden, aux, _ = lm_forward(params, batch["tokens"], cfg, runtime)
+    logits = logits_of(params, hidden, runtime)
+    loss = cross_entropy(logits, batch["labels"])
+    return loss + cfg.router_aux_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill + decode (KV cache)
+# ---------------------------------------------------------------------------
+
+
+def _to_ring(k, cache_len: int, seq: int):
+    """Pack full-sequence K/V (B,H,S,dh) into ring-buffer layout (B,H,C,dh)."""
+    if cache_len >= seq:
+        pad = cache_len - seq
+        return jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return jnp.roll(k[:, :, -cache_len:, :], seq % cache_len, axis=2)
+
+
+def lm_prefill(params, tokens, cfg: ArchConfig, runtime: Runtime = CPU,
+               cache_len: Optional[int] = None, embeds_prefix=None):
+    """Run the prompt, return (last-token logits, stacked cache (L,...))."""
+    hidden, aux, kvs = lm_forward(params, tokens, cfg, runtime,
+                                  embeds_prefix=embeds_prefix, collect_kv=True)
+    S = hidden.shape[1]
+    C = cache_len or attn.cache_len_for(S, cfg.sliding_window)
+    k, v = kvs  # (L, B, Hkv, S, dh)
+    cache = {
+        "k": jax.vmap(lambda t: _to_ring(t, C, S))(k),
+        "v": jax.vmap(lambda t: _to_ring(t, C, S))(v),
+    }
+    logits = logits_of(params, hidden[:, -1:, :], runtime)
+    return logits, cache
+
+
+def init_lm_cache(cfg: ArchConfig, batch: int, seq_len: int,
+                  dtype=None) -> Dict:
+    C = attn.cache_len_for(seq_len, cfg.sliding_window)
+    dtype = dtype or cfg.jnp_dtype
+    c = attn.init_cache(batch, cfg.n_kv_heads, C, cfg.head_dim_, dtype)
+    return {k: jnp.broadcast_to(v, (cfg.n_layers,) + v.shape)
+            for k, v in c.items()}
+
+
+def lm_decode_step(params, token, cache, pos, cfg: ArchConfig,
+                   runtime: Runtime = CPU):
+    """token: (B, 1) int32; cache: stacked (L, B, Hkv, C, dh); pos: scalar.
+
+    Returns (logits (B, 1, V), new cache)."""
+    x = params["embed"][token]
+
+    def body(xc, inp):
+        layer_params, layer_cache = inp
+        xo, new_cache = block_decode(layer_params, xc, layer_cache, pos, cfg,
+                                     None if runtime is None else runtime)
+        return xo, new_cache
+
+    x, new_cache = scan_or_unroll(body, x, (params["layers"], cache), runtime)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_of(params, x, runtime)
+    return logits, new_cache

@@ -1,0 +1,37 @@
+"""VLM wrapper (internvl2-76b): vision-tower STUB + LM backbone.
+
+``input_specs`` supplies precomputed patch embeddings (B, n_vision_tokens,
+d_model) — the InternViT tower + MLP projector is the one allowed stub
+(DESIGN.md §6). The language backbone is the standard dense stack from
+models/transformer.py with the patch embeddings prepended as a prefix;
+labels over the prefix are masked out of the loss.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import (CPU, Runtime, cross_entropy,
+                                      init_lm_params, lm_decode_step,
+                                      lm_forward, lm_prefill, logits_of)
+
+init_vlm_params = init_lm_params  # text embed + layers; vision tower is a stub
+
+
+def vlm_loss(params, batch, cfg: ArchConfig, runtime: Runtime = CPU):
+    """batch: tokens (B, S_text), vision_embeds (B, P, D), labels (B, S_text)."""
+    hidden, aux, _ = lm_forward(params, batch["tokens"], cfg, runtime,
+                                embeds_prefix=batch["vision_embeds"])
+    P = batch["vision_embeds"].shape[1]
+    logits = logits_of(params, hidden[:, P:, :], runtime)
+    return cross_entropy(logits, batch["labels"]) + cfg.router_aux_coef * aux
+
+
+def vlm_prefill(params, batch, cfg: ArchConfig, runtime: Runtime = CPU,
+                cache_len=None):
+    return lm_prefill(params, batch["tokens"], cfg, runtime,
+                      cache_len=cache_len,
+                      embeds_prefix=batch["vision_embeds"])
+
+
+vlm_decode_step = lm_decode_step  # identical once the cache is built

@@ -1,0 +1,35 @@
+"""LR schedules: cosine and the WSD (warmup–stable–decay) schedule that
+minicpm-2b trains with [arXiv:2404.06395]."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.float32(1.0)
+
+
+def cosine(total_steps: int, warmup: int = 100, floor: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return f
+
+
+def wsd(total_steps: int, warmup_frac: float = 0.01, decay_frac: float = 0.1,
+        floor: float = 0.1):
+    """Warmup-Stable-Decay [MiniCPM]: linear warmup, long flat stage, then a
+    short steep (exponential-ish, here linear-to-floor) decay tail."""
+    warmup = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1.0 - decay_frac))
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / warmup, 1.0)
+        decay = jnp.clip((s - decay_start) / max(total_steps - decay_start, 1),
+                         0.0, 1.0)
+        return warm * (1.0 - (1.0 - floor) * decay)
+    return f

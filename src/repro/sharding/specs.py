@@ -1,0 +1,230 @@
+"""Partition rules: parameter / optimizer / activation sharding.
+
+Mesh axes (launch/mesh.py): ``("data", "model")`` single pod (16×16) or
+``("pod", "data", "model")`` multi-pod (2×16×16). Batch shards over
+("pod","data"); tensor-parallel weights over "model"; FSDP (ZeRO-style)
+weight+optimizer sharding over "data".
+
+Rules are name/shape-driven over the param pytree (DESIGN.md §7):
+
+  embed (V,D)          -> ("model", None)        vocab-parallel
+  unembed (D,V)        -> (None, "model")
+  wq/wk/wv (D,H·dh)    -> ("data", "model")      Megatron in-proj + FSDP
+  wo (H·dh, D)         -> ("model", "data")      Megatron out-proj + FSDP
+  w_gate/w_up (D,F)    -> ("data", "model")
+  w_down (F,D)         -> ("model", "data")
+  MoE experts (E,D,F)  -> ("model", "data", None) expert-parallel + FSDP
+  MoE w_down (E,F,D)   -> ("model", None, "data")
+  router (D,E)         -> replicated (fp32)
+  mamba z/x/dt_proj    -> ("data", "model")      heads/channels over model
+  mamba bc_proj (D,2N) -> ("data", None)         B,C shared across heads
+  mamba out_proj (di,D)-> ("model", "data")      partial-sum + all-reduce
+    (originally FSDP-only — the model axis was idle and every model shard
+     recomputed the full layer; fixed in §Perf mamba2 hillclimb cycle 2)
+  norms / scalars      -> replicated
+
+Stacked layer subtrees (leading L axis from scan-over-layers) get a leading
+``None``. Optimizer moments inherit the param spec (FSDP comes from the
+"data" factor already present).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+STACKED_PREFIXES = ("layers", "mamba", "enc_layers", "dec_layers")
+
+# leaf-name -> spec for 2D weights (non-stacked form)
+_RULES_2D = {
+    "wq": P("data", "model"), "wk": P("data", "model"),
+    "wv": P("data", "model"), "wo": P("model", "data"),
+    "w_gate": P("data", "model"), "w_up": P("data", "model"),
+    "w_down": P("model", "data"),
+    "w1": P("data", "model"), "w2": P("model", "data"),
+    # mamba2: head/channel dims over "model" (the split-projection layout
+    # exists exactly so these shard cleanly), BC replicated (shared across
+    # heads), Megatron-style partial-sum out_proj.
+    "z_proj": P("data", "model"), "x_proj": P("data", "model"),
+    "dt_proj": P("data", "model"), "bc_proj": P("data", None),
+    "out_proj": P("model", "data"),
+    "time": P(None, None),
+}
+
+_RULES_3D_MOE = {
+    "w_gate": P("model", "data", None), "w_up": P("model", "data", None),
+    "w_down": P("model", None, "data"),
+}
+
+# inference layout (moe_ep2d): expert FFN dim over "data" so decode never
+# all-gathers expert weights — see models/moe.moe_ep2d.
+_RULES_3D_MOE_INFER = {
+    "w_gate": P("model", None, "data"), "w_up": P("model", None, "data"),
+    "w_down": P("model", "data", None),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(f"[{p.idx}]")
+    return tuple(names)
+
+
+def _drop_data(spec: P) -> P:
+    """Inference layout: weights tensor-parallel only — drop the FSDP
+    "data" factor (at decode the per-layer weight all-gather dwarfs the
+    few tokens of useful traffic; weights replicate over "data" instead
+    and every arch fits HBM at decode — EXPERIMENTS §Perf)."""
+    out = []
+    for e in spec:
+        if e == "data":
+            out.append(None)
+        elif isinstance(e, tuple):
+            kept = tuple(a for a in e if a != "data")
+            out.append(kept if kept else None)
+        else:
+            out.append(e)
+    return P(*out)
+
+
+def param_spec_for(path, leaf, inference: bool = False) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    stacked = any(n in STACKED_PREFIXES for n in names[:-1]) or \
+        (names and names[0] in STACKED_PREFIXES)
+    nd = leaf.ndim
+    base_nd = nd - 1 if stacked else nd
+
+    if name in ("embed", "tok_embed"):
+        return P("model", None)
+    if name == "unembed":
+        return P(None, "model")
+    if name == "router":
+        return P(None, None, None) if stacked else P(None, None)
+
+    spec = None
+    if base_nd == 3 and name in _RULES_3D_MOE:
+        # the ep2d inference layout keeps "data" (it carries the expert-FFN
+        # dim there — weights are stationary by construction)
+        rules = _RULES_3D_MOE_INFER if inference else _RULES_3D_MOE
+        spec = rules[name]
+    elif base_nd == 2 and name in _RULES_2D:
+        spec = _RULES_2D[name]
+        if inference:
+            spec = _drop_data(spec)
+
+    if spec is None:
+        spec = P(*([None] * base_nd))
+    if stacked:
+        spec = P(None, *spec)
+    assert len(spec) == nd, (names, leaf.shape, spec)
+    return spec
+
+
+def param_specs(params, inference: bool = False) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_spec_for(p, l, inference), params)
+
+
+def opt_state_specs(params) -> Any:
+    ps = param_specs(params)
+    return {"m": ps, "v": ps, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# Activations / inputs
+# ---------------------------------------------------------------------------
+
+
+def mesh_batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_axis_size(mesh) -> int:
+    n = 1
+    for a in mesh_batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_spec_for(mesh, global_batch: int, trailing: int) -> P:
+    """Shard the leading batch dim over ("pod","data") when divisible, else
+    replicate (long_500k has global_batch=1)."""
+    axes = mesh_batch_axes(mesh)
+    if global_batch % batch_axis_size(mesh) == 0:
+        return P(axes, *([None] * trailing))
+    return P(*([None] * (trailing + 1)))
+
+
+def kv_cache_spec(mesh, cfg, global_batch: int) -> P:
+    """Stacked cache (L, B, Hkv, C, dh). Heads over "model" when divisible;
+    otherwise shard the sequence dim over "model" (GQA kv < model size —
+    e.g. kv=8 on a 16-way model axis) and let SPMD reduce the partial
+    softmax. Batch over ("pod","data") when divisible."""
+    axes = mesh_batch_axes(mesh)
+    bspec = axes if global_batch % batch_axis_size(mesh) == 0 else None
+    if cfg.n_kv_heads and cfg.n_kv_heads % mesh.shape["model"] == 0:
+        return P(None, bspec, "model", None, None)
+    return P(None, bspec, None, "model", None)
+
+
+def ssm_state_specs(mesh, cfg, global_batch: int, state_tree) -> Any:
+    """Hybrid/SSM decode-state tree: mamba ssm/conv states + optional shared
+    KV. Shard batch when divisible; heads of ssm state over "model" when
+    divisible (mamba2 heads are plentiful: 80)."""
+    axes = mesh_batch_axes(mesh)
+    batch_ok = global_batch % batch_axis_size(mesh) == 0
+    bspec = axes if batch_ok else None
+    model = mesh.shape["model"]
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        if name == "ssm":
+            # (..., B, H, P, N) with 1-2 leading stack dims
+            lead = leaf.ndim - 4
+            h_ok = cfg.ssm_n_heads % model == 0
+            return P(*([None] * lead), bspec, "model" if h_ok else None,
+                     None, None)
+        if name == "conv":
+            lead = leaf.ndim - 3
+            return P(*([None] * lead), bspec, None, None)
+        if name in ("k", "v"):  # shared attn cache (G, B, Hkv, C, dh)
+            h_ok = cfg.n_kv_heads and cfg.n_kv_heads % model == 0
+            if h_ok:
+                return P(None, bspec, "model", None, None)
+            return P(None, bspec, None, "model", None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, state_tree)
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes from dims they don't evenly divide (e.g. vocab 51865
+    on a 16-way axis): JAX in_shardings require exact divisibility."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def with_sharding(tree, spec_tree, mesh):
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype,
+            sharding=NamedSharding(mesh,
+                                   sanitize_spec(spec, sds.shape, mesh))),
+        tree, spec_tree)

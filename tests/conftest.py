@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Smoke tests run on the single real CPU device (the 512-device flag is
+# dryrun.py-only by design — see the system brief).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,35 @@
+"""Checkpoint roundtrip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing.checkpoint import load, save
+
+
+def test_roundtrip(tmp_path, key):
+    tree = {
+        "params": {"w": jax.random.normal(key, (4, 4)),
+                   "b": jnp.zeros((4,), jnp.bfloat16)},
+        "clients": [{"x": jnp.arange(3)}, {"x": jnp.arange(3) * 2}],
+        "step": 17,
+        "name": "collafuse",
+        "tuple": (jnp.ones((2,)), 3.5),
+    }
+    path = str(tmp_path / "ckpt.msgpack")
+    save(path, tree)
+    back = load(path)
+    assert back["step"] == 17 and back["name"] == "collafuse"
+    np.testing.assert_array_equal(np.asarray(back["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert back["params"]["b"].dtype == jnp.bfloat16
+    assert isinstance(back["tuple"], tuple)
+    np.testing.assert_array_equal(np.asarray(back["clients"][1]["x"]),
+                                  np.asarray(tree["clients"][1]["x"]))
+
+
+def test_atomic_overwrite(tmp_path, key):
+    path = str(tmp_path / "c.msgpack")
+    save(path, {"v": jnp.ones((2,))})
+    save(path, {"v": jnp.zeros((2,))})
+    assert float(load(path)["v"].sum()) == 0.0

@@ -1,0 +1,60 @@
+"""Evaluation-stack tests: FD-proxy metric + attack harnesses."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import SyntheticConfig, make_dataset
+from repro.eval.attr_inference import f1_per_attribute
+from repro.eval.fd_proxy import fd_proxy, features, frechet_distance
+
+
+def test_fd_identity_near_zero(key):
+    cfg = SyntheticConfig(image_size=16)
+    x, _ = make_dataset(key, 256, cfg)
+    assert fd_proxy(x[:128], x[128:]) < 0.1
+
+
+def test_fd_separates_distributions(key):
+    cfg = SyntheticConfig(image_size=16)
+    x, _ = make_dataset(key, 128, cfg)
+    noise = jax.random.normal(key, x.shape)
+    same = fd_proxy(x[:64], x[64:])
+    diff = fd_proxy(x, noise)
+    assert diff > 10 * same
+
+
+def test_fd_symmetricish(key):
+    cfg = SyntheticConfig(image_size=16)
+    x, _ = make_dataset(key, 96, cfg)
+    z, _ = make_dataset(jax.random.fold_in(key, 7),
+                        96, SyntheticConfig(image_size=16, attr_prob=0.9))
+    ab = fd_proxy(x, z)
+    ba = fd_proxy(z, x)
+    assert ab == pytest.approx(ba, rel=1e-2, abs=1e-4)
+
+
+def test_features_deterministic(key):
+    x = jax.random.normal(key, (4, 16, 16, 3))
+    np.testing.assert_array_equal(np.asarray(features(x)),
+                                  np.asarray(features(x)))
+
+
+def test_f1_perfect_and_inverted():
+    y = jnp.array([[1., 0.], [0., 1.], [1., 1.], [0., 0.]])
+    # a classifier whose logits match labels exactly
+    class P:
+        pass
+    # bypass _clf_logits by testing the metric directly on predictions
+    from repro.eval import attr_inference as ai
+    logits_perfect = (y * 2 - 1) * 10.0
+
+    def fake_logits(params, x):
+        return logits_perfect
+    orig = ai._clf_logits
+    ai._clf_logits = fake_logits
+    try:
+        f1 = f1_per_attribute(None, jnp.zeros((4, 8, 8, 3)), y)
+        np.testing.assert_allclose(np.asarray(f1), np.ones(2), atol=1e-6)
+    finally:
+        ai._clf_logits = orig

@@ -1,0 +1,165 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles, executed in interpret mode (kernel bodies run in Python on CPU;
+the BlockSpec tiling targets TPU — see src/repro/kernels/*)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.schedules import DiffusionSchedule
+from repro.kernels.ddpm_step.ops import ddpm_step
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.grouped_matmul.ops import grouped_matmul
+from repro.kernels.ssd_scan.ops import ssd_scan
+
+TOL = dict(atol=2e-5, rtol=2e-3)
+TOL_BF16 = dict(atol=5e-2, rtol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# ddpm_step
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(4, 16, 16, 3), (2, 8, 8, 1), (1, 37)])
+@pytest.mark.parametrize("t", [1.0, 50.5, 99.0])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ddpm_step_kernel(key, shape, t, dtype):
+    sched = DiffusionSchedule.linear(100)
+    x = jax.random.normal(key, shape).astype(dtype)
+    e = jax.random.normal(jax.random.fold_in(key, 1), shape).astype(dtype)
+    n = jax.random.normal(jax.random.fold_in(key, 2), shape).astype(dtype)
+    ref = ddpm_step(x, e, n, sched, t)
+    pal = ddpm_step(x, e, n, sched, t, use_pallas=True, interpret=True)
+    tol = TOL if dtype == jnp.float32 else TOL_BF16
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+def test_ddpm_step_matches_schedule(key):
+    sched = DiffusionSchedule.linear(100)
+    x = jax.random.normal(key, (4, 8, 8, 3))
+    e = jax.random.normal(jax.random.fold_in(key, 1), x.shape)
+    n = jax.random.normal(jax.random.fold_in(key, 2), x.shape)
+    np.testing.assert_allclose(
+        np.asarray(ddpm_step(x, e, n, sched, 42.0)),
+        np.asarray(sched.ddpm_step(x, e, jnp.float32(42.0), n)), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,dh", [
+    (2, 4, 2, 64, 32), (1, 4, 4, 100, 16), (2, 8, 2, 128, 64),
+    (1, 2, 1, 48, 8),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(key, B, H, Hkv, S, dh, causal, dtype):
+    q = jax.random.normal(key, (B, H, S, dh)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Hkv, S, dh)
+                          ).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Hkv, S, dh)
+                          ).astype(dtype)
+    ref = flash_attention(q, k, v, causal=causal)
+    pal = flash_attention(q, k, v, causal=causal, use_pallas=True,
+                          interpret=True, bq=32, bk=16)
+    tol = TOL if dtype == jnp.float32 else TOL_BF16
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+@pytest.mark.parametrize("window", [8, 24, 64])
+def test_flash_attention_window(key, window):
+    B, H, S, dh = 1, 4, 96, 32
+    q = jax.random.normal(key, (B, H, S, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, 1, S, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, 1, S, dh))
+    ref = flash_attention(q, k, v, causal=True, window=window)
+    pal = flash_attention(q, k, v, causal=True, window=window,
+                          use_pallas=True, interpret=True, bq=16, bk=16)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), **TOL)
+
+
+def test_flash_attention_matches_model_attend(key):
+    """The kernel oracle and the model's attend() agree (one source of
+    truth for attention semantics)."""
+    from repro.models.attention import attend, causal_mask
+    B, H, Hkv, S, dh = 2, 4, 2, 32, 16
+    q = jax.random.normal(key, (B, H, S, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Hkv, S, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Hkv, S, dh))
+    a = attend(q, k, v, causal_mask(S)[None, None])
+    b = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 64, 4, 16, 8, 16), (1, 48, 2, 8, 4, 16), (2, 100, 3, 16, 8, 32),
+    (1, 32, 1, 4, 4, 8),
+])
+def test_ssd_scan_sweep(key, b, s, h, p, n, chunk):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    y_ref, fs_ref = ssd_scan(x, dt, A, B, C, chunk)
+    y_pal, fs_pal = ssd_scan(x, dt, A, B, C, chunk, use_pallas=True,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(fs_pal), np.asarray(fs_ref),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_ssd_decode_consistent_with_scan(key):
+    """One recurrent decode step == scan over a length-1 sequence."""
+    from repro.models.ssm import ssd_decode_step
+    b, h, p, n = 2, 3, 8, 4
+    ks = jax.random.split(key, 5)
+    state = jax.random.normal(ks[0], (b, h, p, n))
+    x = jax.random.normal(ks[1], (b, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[2], (b, h)))
+    A = -jnp.exp(jax.random.normal(ks[3], (h,)))
+    Bm = jax.random.normal(ks[4], (b, n))
+    Cm = jax.random.normal(jax.random.fold_in(key, 9), (b, n))
+    y1, s1 = ssd_decode_step(state, x, dt, A, Bm, Cm)
+    y2, s2 = ssd_scan(x[:, None], dt[:, None], A, Bm[:, None], Cm[:, None],
+                      chunk=1, use_pallas=False)
+    # ssd_chunked starts from zero state; add the decayed initial state term
+    from repro.models.ssm import ssd_chunked
+    y2b, s2b = ssd_chunked(x[:, None], dt[:, None], A, Bm[:, None],
+                           Cm[:, None], 1, initial_state=state)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2b[:, 0]),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2b), atol=1e-4,
+                               rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# grouped_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("E,C,D,F", [
+    (4, 32, 64, 48), (2, 100, 50, 70), (8, 16, 16, 16), (1, 7, 9, 11),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_sweep(key, E, C, D, F, dtype):
+    t = jax.random.normal(key, (E, C, D)).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (E, D, F)).astype(dtype)
+    ref = grouped_matmul(t, w)
+    pal = grouped_matmul(t, w, use_pallas=True, interpret=True,
+                         bc=16, bf=32, bd=16)
+    tol = dict(atol=1e-4, rtol=1e-3) if dtype == jnp.float32 else TOL_BF16
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(ref, np.float32), **tol)

@@ -1,0 +1,69 @@
+"""Optimizer + LR schedule tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import (AdamWConfig, adamw_update,
+                               clip_by_global_norm, global_norm,
+                               init_opt_state)
+from repro.optim.schedules import cosine, wsd
+
+
+def test_adamw_minimizes_quadratic(key):
+    params = {"w": jax.random.normal(key, (8,))}
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.1)
+    target = jnp.arange(8.0)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(params, g, opt, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_clip_by_global_norm(key):
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(800.0), rel=1e-5)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+    # below the threshold: untouched
+    g2 = {"a": jnp.full((4,), 1e-3)}
+    c2, _ = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), np.asarray(g2["a"]),
+                               rtol=1e-6)
+
+
+def test_weight_decay_shrinks(key):
+    params = {"w": jnp.full((4,), 5.0)}
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.1, clip_norm=0.0)
+    zero_g = {"w": jnp.zeros((4,))}
+    p1, _, _ = adamw_update(params, zero_g, opt, cfg)
+    assert float(p1["w"][0]) < 5.0
+
+
+@hypothesis.given(total=st.integers(50, 5000))
+@hypothesis.settings(deadline=None, max_examples=20)
+def test_wsd_shape(total):
+    f = wsd(total)
+    steps = jnp.array([1, int(total * 0.5), total], dtype=jnp.int32)
+    vals = [float(f(s)) for s in steps]
+    assert 0.0 <= vals[0] <= 1.0
+    assert vals[1] == pytest.approx(1.0)       # stable phase
+    assert vals[2] == pytest.approx(0.1, abs=0.05)  # decayed to floor
+
+
+@hypothesis.given(total=st.integers(100, 5000))
+@hypothesis.settings(deadline=None, max_examples=20)
+def test_cosine_monotone_after_warmup(total):
+    f = cosine(total, warmup=10)
+    xs = jnp.arange(10, total, max(total // 50, 1), dtype=jnp.int32)
+    vals = np.array([float(f(x)) for x in xs])
+    assert np.all(np.diff(vals) <= 1e-6)
+    assert vals[0] <= 1.0 + 1e-6 and vals[-1] >= 0.1 - 1e-6

@@ -1,0 +1,90 @@
+"""Hypothesis property tests on system invariants that cut across modules."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import cache_len_for
+from repro.models.moe import _combine_local, _dispatch_local
+from repro.models.transformer import _to_ring, cross_entropy
+
+
+@hypothesis.given(
+    n=st.integers(4, 32), e=st.sampled_from([4, 8]),
+    k=st.integers(1, 3), seed=st.integers(0, 10_000))
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_moe_dispatch_combine_identity(n, e, k, seed):
+    """With ample capacity and weights 1.0, combine(dispatch(x)) == sum of
+    each token k times — the packing round-trips exactly."""
+    key = jax.random.PRNGKey(seed)
+    d = 8
+    xt = jax.random.normal(key, (n, d))
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (n, k), 0, e)
+    w = jnp.full((n, k), 1.0 / k)
+    capacity = n * k  # ample: nothing dropped
+    buf, meta = _dispatch_local(xt, w, idx, e, capacity)
+    y = _combine_local(buf, meta, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(xt), atol=1e-5,
+                               rtol=1e-5)
+
+
+@hypothesis.given(
+    n=st.integers(8, 24), e=st.sampled_from([4, 8]),
+    cap=st.integers(1, 3), seed=st.integers(0, 1000))
+@hypothesis.settings(deadline=None, max_examples=20)
+def test_moe_capacity_never_corrupts(n, e, cap, seed):
+    """Tight capacity drops tokens but never mixes them: every output row
+    is a prefix-sum of that row's own dispatched copies (scale in [0,1])."""
+    key = jax.random.PRNGKey(seed)
+    xt = jax.random.normal(key, (n, 4))
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (n, 1), 0, e)
+    w = jnp.ones((n, 1))
+    buf, meta = _dispatch_local(xt, w, idx, e, cap)
+    y = _combine_local(buf, meta, n)
+    ratio = np.asarray(jnp.sum(y * xt, axis=1) /
+                       jnp.clip(jnp.sum(xt * xt, axis=1), 1e-9))
+    assert np.all(ratio > -1e-5) and np.all(ratio < 1 + 1e-5)
+    # each row is either kept (ratio~1) or dropped (ratio~0)
+    assert np.all((ratio < 1e-4) | (ratio > 1 - 1e-4))
+
+
+@hypothesis.given(seq=st.integers(4, 64), cache=st.integers(2, 64),
+                  seed=st.integers(0, 100))
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_ring_pack_slot_invariant(seq, cache, seed):
+    """_to_ring places position p at slot p %% C, for the last C positions."""
+    key = jax.random.PRNGKey(seed)
+    k = jax.random.normal(key, (1, 1, seq, 2))
+    ring = _to_ring(k, cache, seq)
+    assert ring.shape[2] == cache
+    for p in range(max(0, seq - cache), seq):
+        np.testing.assert_array_equal(
+            np.asarray(ring[0, 0, p % cache]), np.asarray(k[0, 0, p]))
+
+
+@hypothesis.given(b=st.integers(1, 4), s=st.integers(2, 16),
+                  v=st.sampled_from([7, 32]), seed=st.integers(0, 50))
+@hypothesis.settings(deadline=None, max_examples=20)
+def test_cross_entropy_bounds(b, s, v, seed):
+    """0 <= CE; uniform logits give exactly log V; masked rows ignored."""
+    key = jax.random.PRNGKey(seed)
+    labels = jax.random.randint(key, (b, s), 0, v)
+    uniform = jnp.zeros((b, s, v))
+    np.testing.assert_allclose(float(cross_entropy(uniform, labels)),
+                               float(np.log(v)), rtol=1e-5)
+    # perfect logits -> ~0
+    perfect = jax.nn.one_hot(labels, v) * 100.0
+    assert float(cross_entropy(perfect, labels)) < 1e-3
+    # all-masked -> 0 (no NaN)
+    assert float(cross_entropy(uniform, jnp.full((b, s), -1))) == 0.0
+
+
+@hypothesis.given(seq=st.integers(1, 500), window=st.integers(0, 64))
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_cache_len_for_bounds(seq, window):
+    c = cache_len_for(seq, window)
+    assert 1 <= c <= seq
+    if window:
+        assert c <= window

@@ -1,0 +1,91 @@
+"""Property tests for the DDPM schedule (paper eq. 1–3) — hypothesis-driven
+invariants plus the continuous-t interpolation CollaFuse's Alg. 2 relies on."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.schedules import DiffusionSchedule
+
+TS = [50, 200, 1000]
+
+
+@pytest.mark.parametrize("T", TS)
+def test_alpha_sigma_unit_circle(T):
+    """alpha(t)^2 + sigma(t)^2 == 1 for all t (closed-form q_sample)."""
+    s = DiffusionSchedule.linear(T)
+    t = jnp.linspace(0, T, 257)
+    np.testing.assert_allclose(s.alpha(t) ** 2 + s.sigma(t) ** 2,
+                               np.ones(257), atol=1e-5)
+
+
+@pytest.mark.parametrize("T", TS)
+@pytest.mark.parametrize("kind", ["linear", "cosine"])
+def test_monotonicity(T, kind):
+    s = getattr(DiffusionSchedule, kind)(T)
+    t = jnp.linspace(0.0, T, 513)
+    a = np.asarray(s.alpha(t))
+    g = np.asarray(s.sigma(t))
+    assert np.all(np.diff(a) <= 1e-7), "alpha must decrease in t"
+    assert np.all(np.diff(g) >= -1e-7), "sigma must increase in t"
+    assert a[0] == pytest.approx(1.0, abs=1e-6)
+    assert g[0] == pytest.approx(0.0, abs=1e-3)
+
+
+@hypothesis.given(t=st.integers(min_value=1, max_value=200))
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_interp_matches_integer_grid(t):
+    """Continuous lookup at integer t equals the discrete ᾱ table."""
+    s = DiffusionSchedule.linear(200)
+    got = float(s.alpha(float(t))) ** 2
+    want = float(s.alpha_bar[t - 1])
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+@hypothesis.given(t=st.floats(min_value=1.0, max_value=199.0))
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_interp_bounded_by_neighbors(t):
+    s = DiffusionSchedule.linear(200)
+    lo, hi = int(np.floor(t)), int(np.ceil(t))
+    ab = float(s.alpha(t)) ** 2
+    bounds = sorted([float(s.alpha(float(lo))) ** 2,
+                     float(s.alpha(float(hi))) ** 2])
+    assert bounds[0] - 1e-6 <= ab <= bounds[1] + 1e-6
+
+
+def test_q_sample_statistics(key):
+    """x_T is (almost) pure noise; x_1 is (almost) the data."""
+    s = DiffusionSchedule.linear(1000)
+    x0 = jax.random.normal(key, (64, 8, 8, 3)) * 0.5
+    eps = jax.random.normal(jax.random.fold_in(key, 1), x0.shape)
+    xT = s.q_sample(x0, jnp.full((64,), 1000.0), eps)
+    c = np.corrcoef(np.asarray(xT).ravel(), np.asarray(eps).ravel())[0, 1]
+    assert c > 0.99
+    x1 = s.q_sample(x0, jnp.ones((64,)), eps)
+    c0 = np.corrcoef(np.asarray(x1).ravel(), np.asarray(x0).ravel())[0, 1]
+    assert c0 > 0.98
+
+
+def test_ddpm_step_inverts_one_step(key):
+    """With the true eps, stepping back from t=1 recovers x0 exactly."""
+    s = DiffusionSchedule.linear(100)
+    x0 = jax.random.normal(key, (4, 6, 6, 3))
+    eps = jax.random.normal(jax.random.fold_in(key, 1), x0.shape)
+    x1 = s.q_sample(x0, jnp.ones((4,)), eps)
+    back = s.ddpm_step(x1, eps, 1.0, jnp.zeros_like(x0))
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x0), atol=1e-4)
+
+
+def test_renoise_never_needs_x0(key):
+    """Alg. 1 line 10: renoise() consumes x_{t_ζ}, and its output at t_s=T
+    is (almost) independent of the underlying data."""
+    s = DiffusionSchedule.linear(1000)
+    x0 = jax.random.normal(key, (32, 8, 8, 3))
+    eps_c = jax.random.normal(jax.random.fold_in(key, 1), x0.shape)
+    eps_s = jax.random.normal(jax.random.fold_in(key, 2), x0.shape)
+    x_cut = s.q_sample(x0, jnp.full((32,), 400.0), eps_c)
+    x_T = s.renoise(x_cut, 400, jnp.full((32,), 1000.0), eps_s)
+    c = abs(np.corrcoef(np.asarray(x_T).ravel(), np.asarray(x0).ravel())[0, 1])
+    assert c < 0.1

@@ -1,0 +1,97 @@
+"""Sharding-spec unit tests (the dry-run exercises the full configs; these
+check the rules themselves on one device)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, get_arch, get_shape, reduced
+from repro.launch.shapes import skip_reason
+from repro.models import api
+from repro.sharding import specs as S
+
+
+def _abstract_params(arch):
+    cfg = get_arch(arch)
+    import functools
+    return cfg, jax.eval_shape(
+        functools.partial(api.init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "kimi-k2-1t-a32b",
+                                  "mamba2-2.7b", "whisper-base"])
+def test_param_specs_cover_tree(arch):
+    cfg, shapes = _abstract_params(arch)
+    specs = S.param_specs(shapes)
+    flat_s, _ = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_p = jax.tree.leaves(shapes)
+    assert len(flat_s) == len(flat_p)
+    for spec, leaf in zip(flat_s, flat_p):
+        assert len(spec) == leaf.ndim, (spec, leaf.shape)
+
+
+def test_moe_experts_expert_parallel():
+    cfg, shapes = _abstract_params("kimi-k2-1t-a32b")
+    specs = S.param_specs(shapes)
+    s = specs["layers"]["moe"]["w_gate"]
+    assert s == P(None, "model", "data", None)  # stacked + EP + FSDP
+    assert specs["layers"]["moe"]["router"] == P(None, None, None)
+
+
+def test_megatron_pattern_dense():
+    cfg, shapes = _abstract_params("granite-8b")
+    specs = S.param_specs(shapes)
+    assert specs["layers"]["attn"]["wq"] == P(None, "data", "model")
+    assert specs["layers"]["attn"]["wo"] == P(None, "model", "data")
+    assert specs["layers"]["mlp"]["w_down"] == P(None, "model", "data")
+    assert specs["embed"] == P("model", None)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_sanitize_drops_indivisible():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    assert S.sanitize_spec(P("model", None), (51865, 512), mesh) == \
+        P(None, None)
+    assert S.sanitize_spec(P("model", None), (65536, 512), mesh) == \
+        P("model", None)
+    assert S.sanitize_spec(P(("pod", "data"), None), (48, 4),
+                           FakeMesh({"pod": 2, "data": 16})) == P(None, None)
+    assert S.sanitize_spec(P(("pod", "data"), None), (64, 4),
+                           FakeMesh({"pod": 2, "data": 16})) == \
+        P(("pod", "data"), None)
+
+
+def test_skip_reasons_match_design_doc():
+    long = get_shape("long_500k")
+    runs, skips = [], []
+    from repro.configs.base import ARCH_IDS
+    for a in ARCH_IDS:
+        cfg = get_arch(a)
+        (runs if skip_reason(cfg, long) is None else skips).append(cfg.name)
+    assert sorted(runs) == ["granite-8b", "mamba2-2.7b", "zamba2-1.2b"]
+    assert len(skips) == 7
+    # no skips anywhere else
+    for sname in ("train_4k", "prefill_32k", "decode_32k"):
+        sh = get_shape(sname)
+        for a in ARCH_IDS:
+            assert skip_reason(get_arch(a), sh) is None
+
+
+def test_inference_layout_drops_fsdp():
+    """Decode layout: no "data" factor on dense weights (no FSDP gathers);
+    MoE experts carry the FFN dim on "data" instead (weights stationary)."""
+    cfg, shapes = _abstract_params("kimi-k2-1t-a32b")
+    infer = S.param_specs(shapes, inference=True)
+    assert infer["layers"]["attn"]["wq"] == P(None, None, "model")
+    assert infer["layers"]["attn"]["wo"] == P(None, "model", None)
+    assert infer["layers"]["moe"]["w_gate"] == P(None, "model", None, "data")
+    assert infer["layers"]["moe"]["w_down"] == P(None, "model", "data", None)
+    cfg2, shapes2 = _abstract_params("mamba2-2.7b")
+    infer2 = S.param_specs(shapes2, inference=True)
+    assert infer2["mamba"]["x_proj"] == P(None, None, "model")
+    assert infer2["mamba"]["out_proj"] == P(None, "model", None)

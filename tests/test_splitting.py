@@ -1,0 +1,60 @@
+"""CutPoint invariants (paper Alg. 1 line 6 + Alg. 2 lines 2–3)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.splitting import CutPoint
+
+
+@hypothesis.given(T=st.integers(10, 1000), frac=st.floats(0.0, 1.0))
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_m_formula_and_bounds(T, frac):
+    t_cut = int(T * frac)
+    c = CutPoint(T, t_cut)
+    assert c.M == int(t_cut + (t_cut / T) * (T - t_cut))
+    assert t_cut <= c.M <= T
+    if t_cut == T:
+        assert c.M == T  # ICM: remap is the identity schedule
+    assert c.n_client_steps + c.n_server_steps == T
+
+
+@hypothesis.given(T=st.integers(10, 500), frac=st.floats(0.01, 0.99))
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_client_t_list(T, frac):
+    t_cut = max(int(T * frac), 1)
+    c = CutPoint(T, t_cut)
+    tl = np.asarray(c.client_t_list())
+    assert len(tl) == t_cut
+    assert tl[0] == pytest.approx(c.M)
+    assert tl[-1] == pytest.approx(1.0)
+    assert np.all(np.diff(tl) <= 1e-6)  # descending
+    un = np.asarray(c.client_t_list(adjusted=False))
+    assert un[0] == pytest.approx(float(t_cut))
+
+
+def test_roles():
+    assert CutPoint(100, 0).is_global_model
+    assert CutPoint(100, 100).is_independent_clients
+    assert not CutPoint(100, 50).is_global_model
+    with pytest.raises(AssertionError):
+        CutPoint(100, 101)
+
+
+def test_timestep_ranges(key):
+    c = CutPoint(1000, 200)
+    tc = np.asarray(c.sample_client_t(key, 4096))
+    ts = np.asarray(c.sample_server_t(key, 4096))
+    assert tc.min() >= 1 and tc.max() <= 200
+    assert ts.min() >= 200 and ts.max() <= 1000
+    # both endpoints actually reachable
+    assert tc.min() == 1 and tc.max() == 200
+    assert ts.max() == 1000
+
+
+def test_server_t_list():
+    c = CutPoint(100, 30)
+    tl = np.asarray(c.server_t_list())
+    assert tl[0] == 100 and tl[-1] == 31 and len(tl) == 70

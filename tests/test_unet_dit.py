@@ -1,0 +1,85 @@
+"""U-Net + DiT denoiser tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, reduced
+from repro.configs.ddpm_unet import SMALL, UNetConfig
+from repro.core.dit import DiTConfig, dit_apply, init_dit, patchify, unpatchify
+from repro.core.unet import init_unet, unet_apply, unet_param_count
+
+
+def test_unet_shapes_and_finiteness(key):
+    p = init_unet(key, SMALL)
+    x = jax.random.normal(key, (2, 16, 16, 3))
+    t = jnp.array([3.0, 40.0])
+    y = jnp.zeros((2, SMALL.n_classes))
+    eps = unet_apply(p, x, t, y, SMALL)
+    assert eps.shape == x.shape
+    assert np.isfinite(np.asarray(eps)).all()
+
+
+def test_unet_conditioning_matters(key):
+    p = init_unet(key, SMALL)
+    x = jax.random.normal(key, (1, 16, 16, 3))
+    t = jnp.array([10.0])
+    y0 = jnp.zeros((1, SMALL.n_classes))
+    y1 = y0.at[0, 0].set(1.0)
+    d = float(jnp.abs(unet_apply(p, x, t, y0, SMALL) -
+                      unet_apply(p, x, t, y1, SMALL)).mean())
+    assert d > 1e-6
+
+
+def test_unet_time_matters(key):
+    p = init_unet(key, SMALL)
+    x = jax.random.normal(key, (1, 16, 16, 3))
+    y = jnp.zeros((1, SMALL.n_classes))
+    a = unet_apply(p, x, jnp.array([1.0]), y, SMALL)
+    b = unet_apply(p, x, jnp.array([900.0]), y, SMALL)
+    assert float(jnp.abs(a - b).mean()) > 1e-6
+
+
+def test_unet_resolutions(key):
+    for size in (8, 16, 32):
+        cfg = UNetConfig(image_size=size, base_width=16, width_mults=(1, 2),
+                         n_res_blocks=1, attn_resolutions=(size // 2,),
+                         time_dim=32, groupnorm_groups=4)
+        p = init_unet(key, cfg)
+        x = jax.random.normal(key, (1, size, size, 3))
+        out = unet_apply(p, x, jnp.array([5.0]),
+                         jnp.zeros((1, cfg.n_classes)), cfg)
+        assert out.shape == x.shape
+
+
+@hypothesis.given(hw=st.sampled_from([8, 16, 32]), p=st.sampled_from([2, 4]),
+                  c=st.sampled_from([1, 3]))
+@hypothesis.settings(deadline=None, max_examples=12)
+def test_patchify_roundtrip(hw, p, c):
+    key = jax.random.PRNGKey(hw * p * c)
+    x = jax.random.normal(key, (2, hw, hw, c))
+    t = patchify(x, p)
+    assert t.shape == (2, (hw // p) ** 2, p * p * c)
+    back = unpatchify(t, p, hw, hw, c)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@pytest.mark.parametrize("arch", ["minitron-4b", "dbrx-132b", "mamba2-2.7b",
+                                  "zamba2-1.2b"])
+def test_dit_backbones(key, arch):
+    acfg = reduced(get_arch(arch))
+    dit = DiTConfig(image_size=8, patch_size=2, n_classes=4)
+    p = init_dit(key, acfg, dit)
+    x = jax.random.normal(key, (2, 8, 8, 3))
+    eps = dit_apply(p, x, jnp.array([4.0, 30.0]),
+                    jnp.zeros((2, 4)), acfg, dit)
+    assert eps.shape == x.shape
+    assert np.isfinite(np.asarray(eps)).all()
+
+
+def test_dit_rejects_nothing_but_audio_is_blocked(key):
+    from repro.core.collab import CollabConfig, build_denoiser
+    with pytest.raises(ValueError, match="inapplicable"):
+        build_denoiser(key, CollabConfig(denoiser="whisper-base"))
