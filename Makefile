@@ -1,0 +1,12 @@
+# Convenience targets; scripts/ci.sh is the single source of truth for the
+# tier-1 command.
+.PHONY: test test-fast bench-quick ci
+
+ci test:
+	scripts/ci.sh
+
+test-fast:
+	scripts/ci.sh -m 'not slow'
+
+bench-quick:
+	PYTHONPATH=src python -m benchmarks.run --quick --only collab_round

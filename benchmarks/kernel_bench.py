@@ -25,6 +25,15 @@ def main(quick: bool = False):
     emit("kernel/ddpm_step_16x32x32x3", us,
          f"bytes={4 * x.size * 4};elementwise_fused=4ops")
 
+    # stacked-client axis (vectorized sampler: shared_handoff_sample vmaps
+    # client_denoise over k clients — this is that inner update, batched)
+    k = 5
+    xk = jax.random.normal(key, (k, 16, 32, 32, 3))
+    fk = jax.jit(jax.vmap(lambda a, b, c: ddpm_step(a, b, c, sched, 500.0)))
+    us = time_call(fk, xk, xk, xk)
+    emit("kernel/ddpm_step_vmap5x16x32x32x3", us,
+         f"bytes={4 * xk.size * 4};clients=5")
+
     B, H, S, dh = 2, 8, 512, 64
     q = jax.random.normal(key, (B, H, S, dh))
     kv = jax.random.normal(key, (B, 2, S, dh))

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify (ROADMAP.md): a fresh checkout goes red/green in one step.
+#   scripts/ci.sh            - full suite
+#   scripts/ci.sh -m 'not slow'  - skip the long system/equivalence tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -4,9 +4,42 @@ trusted server) plus the two baselines the paper compares against:
   * GM  — global model, t_ζ = 0: one server model on the union of data.
   * ICM — independent client models, t_ζ = T: no server.
 
-The round structure follows Alg. 1's outer loops: for each client, for each
-batch — client update, then server update from that client's payload. One
-jitted step function is shared by all clients (identical shapes).
+Two training engines share the Alg.-1 math in core/protocol.py:
+
+**Sequential** (``setup`` + ``train_round``) — Alg. 1's outer loops
+verbatim: for each client, for each batch — one jitted step per
+(client, batch) pair. Faithful to the paper and kept as the
+differential-testing oracle, but it dispatches k·n_batches device
+programs per round.
+
+**Vectorized** (``setup_vectorized`` + ``train_round_vectorized``) — one
+device program per round. All k client models are *stacked*: every leaf
+of ``client_params`` / ``client_opt`` carries a leading ``(n_clients,)``
+axis (``stack_clients`` / ``unstack_clients`` convert to/from the list
+form; the AdamW ``step`` scalar becomes an ``(n_clients,)`` vector). The
+round is a single jitted ``lax.scan`` over the batch axis whose body
+(a) ``vmap``s the client loss/update over the client axis and
+(b) concatenates the k resulting ``ServerPayload``s into one
+``(k·B, ...)`` server batch for a single server update. Inputs are
+stacked to ``(n_batches, n_clients, B, ...)`` by ``stack_round_batches``.
+The stacked client axis shards over a ``"clients"`` mesh axis
+(sharding/specs.client_stacked_specs + shard_vectorized_state); the
+server model stays replicated.
+
+PRNG discipline (shared by the vectorized engine and its python reference
+oracle ``train_round_reference``): per-batch key ``fold_in(round_key, b)``,
+per-client key ``fold_in(batch_key, c)`` — so the vectorized round is
+bit-comparable to the reference. The legacy sequential ``train_round``
+derives keys by chained ``jax.random.split`` in client-major order and is
+therefore NOT key-compatible with the vectorized engine; it remains the
+Alg.-1-faithful baseline, not a bit-equivalence oracle.
+
+Semantics note: the vectorized engine performs ONE server AdamW update on
+the concatenated k-client batch where sequential Alg. 1 performs k updates
+of batch B — same expected gradient, lower optimizer-step count; the
+equivalence tests therefore compare against ``train_round_reference``
+(same semantics, no vmap/scan), while GM/ICM behaviour is asserted
+directly (tests/test_collab_engine.py).
 """
 from __future__ import annotations
 
@@ -19,12 +52,13 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, get_arch, reduced
 from repro.configs.ddpm_unet import SMALL, UNetConfig
 from repro.core.dit import DiTConfig, init_dit, make_dit_apply
-from repro.core.protocol import make_collab_step
+from repro.core.protocol import (ServerPayload, client_losses,
+                                 make_collab_step, server_loss)
 from repro.core.sampler import collaborative_sample, server_denoise
 from repro.core.schedules import DiffusionSchedule
 from repro.core.splitting import CutPoint
 from repro.core.unet import init_unet, unet_apply
-from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,9 +135,11 @@ def setup(key, cfg: CollabConfig) -> Tuple[CollabState, Callable, Callable]:
 
 def train_round(state: CollabState, step_fn, batches_per_client, key):
     """batches_per_client: list over clients of lists of (x0, y) batches.
-    Mutates ``state`` in place; returns metrics of the last step per client."""
+    Mutates ``state`` in place; returns metrics of the last step per client
+    (``{}`` for a client that contributed no batches this round)."""
     last = {}
     for c, batches in enumerate(batches_per_client):
+        m = None
         for (x0, y) in batches:
             key, k = jax.random.split(key)
             (state.client_params[c], state.client_opt[c],
@@ -111,8 +147,218 @@ def train_round(state: CollabState, step_fn, batches_per_client, key):
                 state.client_params[c], state.client_opt[c],
                 state.server_params, state.server_opt, x0, y, k)
             state.step += 1
-        last[c] = {k_: float(v) for k_, v in m.items()}
+        last[c] = {} if m is None else {k_: float(v) for k_, v in m.items()}
     return last
+
+
+# ---------------------------------------------------------------------------
+# Vectorized multi-client engine: stacked client axis, one program per round.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class VectorizedCollabState:
+    """Like CollabState but with the k client models stacked: every leaf of
+    client_params/client_opt has a leading (n_clients,) axis."""
+    server_params: Dict
+    server_opt: Dict
+    client_params: Dict
+    client_opt: Dict
+    step: int = 0
+
+    @property
+    def n_clients(self) -> int:
+        return jax.tree.leaves(self.client_params)[0].shape[0]
+
+
+def stack_clients(trees: List[Dict]) -> Dict:
+    """List of identically-shaped pytrees -> one pytree with a leading
+    (len(trees),) axis on every leaf."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_clients(stacked: Dict, n_clients: int) -> List[Dict]:
+    return [jax.tree.map(lambda x: x[i], stacked) for i in range(n_clients)]
+
+
+def to_vectorized(state: CollabState) -> VectorizedCollabState:
+    return VectorizedCollabState(
+        server_params=state.server_params, server_opt=state.server_opt,
+        client_params=stack_clients(state.client_params),
+        client_opt=stack_clients(state.client_opt), step=state.step)
+
+
+def to_sequential(state: VectorizedCollabState) -> CollabState:
+    n = state.n_clients
+    return CollabState(
+        server_params=state.server_params, server_opt=state.server_opt,
+        client_params=unstack_clients(state.client_params, n),
+        client_opt=unstack_clients(state.client_opt, n), step=state.step)
+
+
+def stack_round_batches(batches_per_client):
+    """List over clients of lists of (x0, y) batches ->
+    (xs (n_batches, k, B, ...), ys (n_batches, k, B, n_classes)).
+
+    Requires equally-shaped batches; truncates every client to the shortest
+    client's batch count (route leftovers through the sequential path).
+    Returns (None, None) when any client has zero batches."""
+    nb = min((len(b) for b in batches_per_client), default=0)
+    if nb == 0:
+        return None, None
+    k = len(batches_per_client)
+    xs = jnp.stack([jnp.stack([batches_per_client[c][b][0]
+                               for c in range(k)]) for b in range(nb)])
+    ys = jnp.stack([jnp.stack([batches_per_client[c][b][1]
+                               for c in range(k)]) for b in range(nb)])
+    return xs, ys
+
+
+def _flatten_payload(payload: ServerPayload) -> ServerPayload:
+    """(k, B, ...) stacked payload -> one (k*B, ...) server batch."""
+    return ServerPayload(*[t.reshape((-1,) + t.shape[2:]) for t in payload])
+
+
+def make_vectorized_round(sched: DiffusionSchedule, cut: CutPoint, apply_fn,
+                          opt_cfg: AdamWConfig):
+    """Builds the jitted whole-round function:
+
+    (client_params, client_opt, server_params, server_opt, xs, ys, key)
+      -> (client_params, client_opt, server_params, server_opt, metrics)
+
+    client_params/client_opt are stacked (leading (k,) axis); xs/ys are
+    (n_batches, k, B, ...). One lax.scan over batches; per batch the client
+    loss/update is vmapped over the client axis and the k payloads train the
+    server as a single concatenated batch. metrics leaves carry a leading
+    (n_batches,) scan axis (client leaves additionally (n_batches, k))."""
+    train_client = cut.t_cut > 0
+    train_server = cut.t_cut < cut.T
+
+    def client_update(cp, copt, x0, y, k):
+        (loss_c, payload), grads = jax.value_and_grad(
+            lambda p: client_losses(p, x0, y, k, sched, cut, apply_fn),
+            has_aux=True)(cp)
+        if train_client:
+            cp, copt, gn = adamw_update(cp, grads, copt, opt_cfg)
+        else:
+            gn = jnp.float32(0.0)
+        return cp, copt, payload, loss_c, gn
+
+    def batch_step(carry, inp):
+        cp, copt, sp, sopt = carry
+        x0, y, bkey = inp
+        n_clients = x0.shape[0]
+        ckeys = jax.vmap(lambda c: jax.random.fold_in(bkey, c))(
+            jnp.arange(n_clients))
+        cp, copt, payload, loss_c, gn = jax.vmap(client_update)(
+            cp, copt, x0, y, ckeys)
+        metrics = {"client_loss": loss_c, "client_grad_norm": gn}
+        if train_server:
+            flat = _flatten_payload(payload)
+            loss_s, grads_s = jax.value_and_grad(server_loss)(
+                sp, flat, sched, apply_fn)
+            sp, sopt, gns = adamw_update(sp, grads_s, sopt, opt_cfg)
+            metrics["server_loss"] = loss_s
+            metrics["server_grad_norm"] = gns
+        else:
+            metrics["server_loss"] = jnp.float32(0.0)
+        return (cp, copt, sp, sopt), metrics
+
+    def round_fn(client_params, client_opt, server_params, server_opt,
+                 xs, ys, key):
+        bkeys = jax.vmap(lambda b: jax.random.fold_in(key, b))(
+            jnp.arange(xs.shape[0]))
+        carry = (client_params, client_opt, server_params, server_opt)
+        carry, metrics = jax.lax.scan(batch_step, carry, (xs, ys, bkeys))
+        return (*carry, metrics)
+
+    return jax.jit(round_fn)
+
+
+def setup_vectorized(key, cfg: CollabConfig
+                     ) -> Tuple[VectorizedCollabState, Callable, Callable]:
+    """Vectorized counterpart of ``setup``: same per-client init keys (so a
+    freshly set-up vectorized state equals ``stack_clients`` of the
+    sequential one), returns (state, jitted round fn, apply_fn)."""
+    init_one, apply_fn = build_denoiser(key, cfg)
+    ks, *kc = jax.random.split(key, cfg.n_clients + 1)
+    server_params = init_one(ks)
+    client_list = [init_one(k) for k in kc]
+    state = VectorizedCollabState(
+        server_params=server_params,
+        server_opt=init_opt_state(server_params),
+        client_params=stack_clients(client_list),
+        client_opt=stack_clients([init_opt_state(p) for p in client_list]),
+    )
+    round_fn = make_vectorized_round(cfg.sched(), cfg.cut(), apply_fn,
+                                     AdamWConfig(lr=cfg.lr))
+    return state, round_fn, apply_fn
+
+
+def train_round_vectorized(state: VectorizedCollabState, round_fn, xs, ys,
+                           key):
+    """One full round in one device program. Mutates ``state`` in place;
+    returns per-client last-batch metrics shaped like ``train_round``'s
+    (server entries are the shared per-round values). Returns ``{}`` for an
+    empty round (``stack_round_batches`` yielded no common batches)."""
+    if xs is None or xs.shape[0] == 0:
+        return {}
+    (state.client_params, state.client_opt, state.server_params,
+     state.server_opt, metrics) = round_fn(
+        state.client_params, state.client_opt, state.server_params,
+        state.server_opt, xs, ys, key)
+    n_batches, n_clients = xs.shape[0], xs.shape[1]
+    state.step += n_batches * n_clients
+    payload_bytes = ServerPayload(
+        xs[0, 0], xs[0, 0], jnp.zeros((xs.shape[2],), jnp.int32),
+        ys[0, 0]).nbytes()
+    last = {}
+    for c in range(n_clients):
+        last[c] = {
+            "client_loss": float(metrics["client_loss"][-1, c]),
+            "client_grad_norm": float(metrics["client_grad_norm"][-1, c]),
+            "server_loss": float(metrics["server_loss"][-1]),
+            "payload_bytes": float(payload_bytes),
+        }
+        if "server_grad_norm" in metrics:
+            last[c]["server_grad_norm"] = float(
+                metrics["server_grad_norm"][-1])
+    return last
+
+
+def train_round_reference(state: CollabState, xs, ys, key,
+                          sched: DiffusionSchedule, cut: CutPoint, apply_fn,
+                          opt_cfg: AdamWConfig):
+    """Differential-testing oracle for the vectorized engine: identical
+    semantics and PRNG discipline (per-batch fold_in, per-client fold_in,
+    one concatenated server update per batch), but plain Python loops and
+    per-client pytrees — no vmap, no scan. Mutates ``state`` in place."""
+    train_client = cut.t_cut > 0
+    train_server = cut.t_cut < cut.T
+    n_batches, n_clients = xs.shape[0], xs.shape[1]
+    for b in range(n_batches):
+        bkey = jax.random.fold_in(key, b)
+        payloads = []
+        for c in range(n_clients):
+            ckey = jax.random.fold_in(bkey, c)
+            (loss_c, payload), grads = jax.value_and_grad(
+                lambda p: client_losses(p, xs[b, c], ys[b, c], ckey, sched,
+                                        cut, apply_fn),
+                has_aux=True)(state.client_params[c])
+            if train_client:
+                state.client_params[c], state.client_opt[c], _ = adamw_update(
+                    state.client_params[c], grads, state.client_opt[c],
+                    opt_cfg)
+            payloads.append(payload)
+        if train_server:
+            flat = ServerPayload(*[jnp.concatenate(ts)
+                                   for ts in zip(*payloads)])
+            _, grads_s = jax.value_and_grad(server_loss)(
+                state.server_params, flat, sched, apply_fn)
+            state.server_params, state.server_opt, _ = adamw_update(
+                state.server_params, grads_s, state.server_opt, opt_cfg)
+        state.step += n_clients
+    return state
 
 
 def sample_for_client(state: CollabState, client: int, key, y, cfg: CollabConfig,

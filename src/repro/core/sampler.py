@@ -10,9 +10,10 @@ node" — our E6 reproduces that comparison.
 
 The server→client handoff x̂_{t_ζ} is the only tensor that crosses the wire
 at inference; ``fori_loop`` keeps both loops O(1) in compiled-code size. The
-per-step eq.-2 update is the ``ddpm_step`` Pallas kernel's target fusion
-(kernels/ddpm_step) — here we call the schedule's jnp implementation, which
-is that kernel's oracle.
+per-step eq.-2 update routes through the fused ``ddpm_step`` kernel wrapper
+(kernels/ddpm_step/ops): ``use_pallas=None`` auto-selects the Pallas TPU
+kernel on TPU backends and the jnp oracle elsewhere; tests exercise the
+kernel path in interpret mode on CPU (``use_pallas=True, interpret=True``).
 """
 from __future__ import annotations
 
@@ -23,11 +24,23 @@ import jax.numpy as jnp
 
 from repro.core.schedules import DiffusionSchedule
 from repro.core.splitting import CutPoint
+from repro.kernels.ddpm_step.ops import ddpm_step as fused_ddpm_step
+
+
+def _resolve_kernel(use_pallas: Optional[bool]) -> bool:
+    """None -> Pallas on TPU, jnp oracle on CPU/GPU (interpret-mode Pallas
+    would be pure overhead outside tests)."""
+    if use_pallas is None:
+        return jax.default_backend() == "tpu"
+    return use_pallas
 
 
 def server_denoise(server_params, key, y, shape, sched: DiffusionSchedule,
-                   cut: CutPoint, apply_fn):
+                   cut: CutPoint, apply_fn,
+                   use_pallas: Optional[bool] = None,
+                   interpret: bool = False):
     """Run the T − t_ζ server steps. Returns x̂_{t_ζ} (noise if t_ζ = T)."""
+    up = _resolve_kernel(use_pallas)
     k0, kloop = jax.random.split(key)
     x = jax.random.normal(k0, shape, dtype=jnp.float32)
     if cut.n_server_steps == 0:
@@ -41,7 +54,8 @@ def server_denoise(server_params, key, y, shape, sched: DiffusionSchedule,
         B = x.shape[0]
         eps = apply_fn(server_params, x, jnp.full((B,), t), y)
         noise = jax.random.normal(kn, x.shape, dtype=jnp.float32)
-        x = sched.ddpm_step(x, eps, t, noise)
+        x = fused_ddpm_step(x, eps, noise, sched, t, use_pallas=up,
+                            interpret=interpret)
         return (x, k)
 
     x, _ = jax.lax.fori_loop(0, cut.n_server_steps, body, (x, kloop))
@@ -49,10 +63,13 @@ def server_denoise(server_params, key, y, shape, sched: DiffusionSchedule,
 
 
 def client_denoise(client_params, key, x_cut, y, sched: DiffusionSchedule,
-                   cut: CutPoint, apply_fn, adjusted: bool = True):
+                   cut: CutPoint, apply_fn, adjusted: bool = True,
+                   use_pallas: Optional[bool] = None,
+                   interpret: bool = False):
     """Run the client's t_ζ steps from the server handoff x̂_{t_ζ}."""
     if cut.n_client_steps == 0:
         return x_cut
+    up = _resolve_kernel(use_pallas)
     t_list = cut.client_t_list(adjusted)          # descending, len t_ζ
     t_prev = jnp.concatenate([t_list[1:], jnp.zeros((1,), jnp.float32)])
 
@@ -62,7 +79,9 @@ def client_denoise(client_params, key, x_cut, y, sched: DiffusionSchedule,
         B = x.shape[0]
         eps = apply_fn(client_params, x, jnp.full((B,), t_list[i]), y)
         noise = jax.random.normal(kn, x.shape, dtype=jnp.float32)
-        x = sched.ddpm_step(x, eps, t_list[i], noise, t_prev=t_prev[i])
+        x = fused_ddpm_step(x, eps, noise, sched, t_list[i],
+                            t_prev=t_prev[i], use_pallas=up,
+                            interpret=interpret)
         return (x, k)
 
     x, _ = jax.lax.fori_loop(0, cut.n_client_steps, body, (x_cut, key))
@@ -94,35 +113,58 @@ def server_denoise_ddim(server_params, key, y, shape,
 
 def shared_handoff_sample(server_params, client_params_list, key, y, shape,
                           sched: DiffusionSchedule, cut: CutPoint, apply_fn,
-                          adjusted: bool = True, server_stride: int = 0):
+                          adjusted: bool = True, server_stride: int = 0,
+                          use_pallas: Optional[bool] = None,
+                          interpret: bool = False):
     """Paper §3.2: "if multiple clients request samples from the same label
     y, the server-side denoising process can be run ONCE" — the server
-    handoff is computed once and every client finishes locally. Server
-    compute: 1× instead of k×. Trade-off (documented): the k clients'
-    outputs share the handoff and are therefore correlated."""
+    handoff is computed once and every client finishes locally (the k
+    client sweeps run as ONE vmapped program over the stacked client axis,
+    not a Python loop; the per-client key discipline ``fold_in(kc, i)`` is
+    unchanged, so results match the per-client sequential calls up to
+    vmap's op-fusion/reduction reordering — a few float32 ulps, see
+    tests/test_sampler.py parity tolerances). Server compute: 1×
+    instead of k×. Trade-off (documented): the k clients' outputs share the
+    handoff and are therefore correlated.
+
+    ``client_params_list`` is either a list of per-client pytrees or one
+    already-stacked pytree with a leading (k,) axis (core/collab.py layout);
+    returns (list of k outputs, handoff)."""
     ks, kc = jax.random.split(key)
     if server_stride and server_stride > 1:
         x_cut = server_denoise_ddim(server_params, ks, y, shape, sched, cut,
                                     apply_fn, stride=server_stride)
     else:
         x_cut = server_denoise(server_params, ks, y, shape, sched, cut,
-                               apply_fn)
-    outs = []
-    for i, cp in enumerate(client_params_list):
-        outs.append(client_denoise(cp, jax.random.fold_in(kc, i), x_cut, y,
-                                   sched, cut, apply_fn, adjusted))
-    return outs, x_cut
+                               apply_fn, use_pallas=use_pallas,
+                               interpret=interpret)
+    if isinstance(client_params_list, (list, tuple)):
+        n = len(client_params_list)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *client_params_list)
+    else:
+        stacked = client_params_list
+        n = jax.tree.leaves(stacked)[0].shape[0]
+    keys = jax.vmap(lambda i: jax.random.fold_in(kc, i))(jnp.arange(n))
+    outs = jax.vmap(
+        lambda cp, k: client_denoise(cp, k, x_cut, y, sched, cut, apply_fn,
+                                     adjusted, use_pallas=use_pallas,
+                                     interpret=interpret))(stacked, keys)
+    return [outs[i] for i in range(n)], x_cut
 
 
 def collaborative_sample(server_params, client_params, key, y, shape,
                          sched: DiffusionSchedule, cut: CutPoint, apply_fn,
-                         adjusted: bool = True, return_handoff: bool = False):
+                         adjusted: bool = True, return_handoff: bool = False,
+                         use_pallas: Optional[bool] = None,
+                         interpret: bool = False):
     """Full Alg. 2: server then client. GM (t_ζ=0) and ICM (t_ζ=T) are the
     degenerate cases and need no special-casing."""
     ks, kc = jax.random.split(key)
-    x_cut = server_denoise(server_params, ks, y, shape, sched, cut, apply_fn)
+    x_cut = server_denoise(server_params, ks, y, shape, sched, cut, apply_fn,
+                           use_pallas=use_pallas, interpret=interpret)
     x0 = client_denoise(client_params, kc, x_cut, y, sched, cut, apply_fn,
-                        adjusted)
+                        adjusted, use_pallas=use_pallas, interpret=interpret)
     if return_handoff:
         return x0, x_cut
     return x0

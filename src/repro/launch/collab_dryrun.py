@@ -3,12 +3,16 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Dry-run of the PAPER'S OWN technique on the production mesh: lower +
 compile one full Alg.-1 collaborative step (client fwd/bwd/update + server
-fwd/bwd/update from the re-noised payload) and one Alg.-2 server denoise
-pass, with the global batch sharded over ("pod","data") — clients are
-data-axis slices, the server model is replicated (DESIGN.md §4).
+fwd/bwd/update from the re-noised payload), one Alg.-2 server denoise
+pass — global batch sharded over ("pod","data"), server model replicated
+(DESIGN.md §4) — and one VECTORIZED multi-client round (core/collab.py):
+k stacked client models sharded over a dedicated "clients" mesh axis,
+per-batch client updates vmapped, one concatenated server update, scanned
+over batches in a single program.
 
     PYTHONPATH=src python -m repro.launch.collab_dryrun [--multi-pod] \
-        [--image-size 64] [--batch 256] [--t-cut 200] [--T 1000]
+        [--image-size 64] [--batch 256] [--t-cut 200] [--T 1000] \
+        [--clients 4] [--round-batches 2]
 """
 import argparse
 import dataclasses
@@ -21,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.ddpm_unet import CONFIG, UNetConfig
+from repro.core.collab import make_vectorized_round
 from repro.core.protocol import client_losses, server_loss
 from repro.core.sampler import server_denoise
 from repro.core.schedules import DiffusionSchedule
@@ -29,7 +34,9 @@ from repro.core.unet import init_unet, unet_apply
 from repro.launch.dryrun import collective_census
 from repro.launch.mesh import make_production_mesh
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
-from repro.sharding.specs import mesh_batch_axes
+from repro.sharding.specs import (CLIENT_AXIS, client_opt_specs,
+                                  client_stacked_specs, mesh_batch_axes,
+                                  sanitize_spec)
 
 
 def main():
@@ -39,6 +46,8 @@ def main():
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--T", type=int, default=1000)
     ap.add_argument("--t-cut", type=int, default=200)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--round-batches", type=int, default=2)
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -79,19 +88,65 @@ def main():
                               sharding=NamedSharding(mesh, P(baxes, None)))
     keyv = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rep)
 
+    # --- vectorized multi-client round on a ("clients", "data") mesh -----
+    k = args.clients
+    n_dev = len(jax.devices())
+    if n_dev % k or ucfg.base_width % k:
+        raise SystemExit(
+            f"--clients {k}: must divide the device count ({n_dev}) and the "
+            f"UNet base width ({ucfg.base_width}). XLA SPMD partitions the "
+            "vmapped per-client convs as grouped convolutions whose feature "
+            "dim interleaves clients x channels, so the sharded client count "
+            "must tile the channel blocks (powers of two here).")
+    cmesh = jax.make_mesh((k, n_dev // k), (CLIENT_AXIS, "data"))
+    csh = lambda s, spec: jax.ShapeDtypeStruct(
+        s.shape, s.dtype, sharding=jax.sharding.NamedSharding(
+            cmesh, sanitize_spec(spec, s.shape, cmesh)))
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((k,) + s.shape, s.dtype), shapes)
+    cparams = jax.tree.map(csh, stacked, client_stacked_specs(stacked))
+    copt_shapes = {
+        "m": stacked, "v": stacked,
+        "step": jax.ShapeDtypeStruct((k,), jnp.int32)}
+    cspecs = client_opt_specs(stacked)
+    copt = {kk: jax.tree.map(csh, copt_shapes[kk], cspecs[kk])
+            for kk in ("m", "v")}
+    copt["step"] = csh(copt_shapes["step"], cspecs["step"])
+    crep = jax.sharding.NamedSharding(cmesh, P())
+    sparams = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=crep),
+        shapes)
+    sopt = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=crep),
+        jax.eval_shape(init_opt_state, shapes))
+    per_client_b = max(args.batch // k, 1)
+    xs = csh(jax.ShapeDtypeStruct(
+        (args.round_batches, k, per_client_b, args.image_size,
+         args.image_size, 3), jnp.float32),
+        P(None, CLIENT_AXIS, "data", None, None, None))
+    ys = csh(jax.ShapeDtypeStruct(
+        (args.round_batches, k, per_client_b, ucfg.n_classes), jnp.float32),
+        P(None, CLIENT_AXIS, "data", None))
+    ckey = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=crep)
+    round_fn = make_vectorized_round(sched, cut, apply_fn, opt_cfg)
+
     results = {}
-    for name, fn, fargs in (
+    for name, fn, fargs, fmesh in (
         ("collab_train_step",
-         collab_step, (params, opt, params, opt, x0, yv, keyv)),
+         collab_step, (params, opt, params, opt, x0, yv, keyv), mesh),
         ("server_denoise",
-         lambda p, k, y: server_denoise(
-             p, k, y, (args.batch, args.image_size, args.image_size, 3),
-             sched, cut, apply_fn), (params, keyv, yv)),
+         lambda p, k_, y: server_denoise(
+             p, k_, y, (args.batch, args.image_size, args.image_size, 3),
+             sched, cut, apply_fn), (params, keyv, yv), mesh),
+        ("vectorized_round",
+         round_fn, (cparams, copt, sparams, sopt, xs, ys, ckey), cmesh),
     ):
         t0 = time.time()
-        with mesh:
+        with fmesh:
             compiled = jax.jit(fn).lower(*fargs).compile()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, list):  # older jax: one dict per device
+            cost = cost[0] if cost else {}
         census = collective_census(compiled.as_text())
         mem = compiled.memory_analysis()
         results[name] = {

@@ -138,6 +138,83 @@ def opt_state_specs(params) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# Stacked-client axis (vectorized CollaFuse engine, core/collab.py)
+# ---------------------------------------------------------------------------
+
+CLIENT_AXIS = "clients"
+
+
+def client_stacked_specs(stacked_params, inference: bool = False,
+                         client_axis: str = CLIENT_AXIS):
+    """Specs for a client-stacked param pytree (leading (n_clients,) axis on
+    every leaf): shard ONLY the stack axis — k identical-shape models train
+    as pure model parallelism over clients, no cross-client collectives.
+
+    Within-client dims stay replicated on purpose: the vmapped client axis
+    lowers convolutions to feature_group_count=k grouped convs, whose
+    feature dims XLA SPMD cannot partition independently of the group axis
+    (combining "clients" with the per-client FSDP factors trips
+    "feature dimension not divisible by feature_group_count"). Per-client
+    FSDP over an inner axis is a ROADMAP open item."""
+    del inference
+    return jax.tree.map(
+        lambda leaf: P(client_axis, *([None] * (leaf.ndim - 1))),
+        stacked_params)
+
+
+def client_opt_specs(stacked_params, client_axis: str = CLIENT_AXIS):
+    """AdamW moments follow the stacked param specs; the per-client ``step``
+    scalar is a (n_clients,) vector sharded over the client axis."""
+    ps = client_stacked_specs(stacked_params, client_axis=client_axis)
+    return {"m": ps, "v": ps, "step": P(client_axis)}
+
+
+def client_batch_spec(ndim: int, client_axis: str = CLIENT_AXIS) -> P:
+    """Round inputs xs/ys are (n_batches, n_clients, B, ...): shard the
+    client axis (dim 1), replicate the scanned batch dim."""
+    return P(None, client_axis, *([None] * (ndim - 2)))
+
+
+def make_client_mesh(n_clients: int):
+    """1-D ``clients`` mesh over the most local devices that evenly divide
+    n_clients (1 device on a plain CPU host — specs still apply, making the
+    layout portable to real multi-device runs unchanged)."""
+    n_dev = len(jax.devices())
+    use = max(d for d in range(1, n_dev + 1) if n_clients % d == 0)
+    return jax.make_mesh((use,), (CLIENT_AXIS,))
+
+
+def shard_vectorized_state(state, mesh):
+    """Place a VectorizedCollabState on ``mesh``: stacked client trees over
+    the ``clients`` axis, server model/opt replicated. jit then follows the
+    input shardings — the vectorized round needs no collectives except the
+    psum implied by the shared server update."""
+    put = lambda tree, spec_tree: jax.tree.map(
+        lambda x, s: jax.device_put(
+            x, NamedSharding(mesh, sanitize_spec(s, x.shape, mesh))),
+        tree, spec_tree)
+    rep = jax.tree.map(lambda x: P(*([None] * jnp.ndim(x))),
+                       state.server_params)
+    state.server_params = put(state.server_params, rep)
+    state.server_opt = jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P(*([None] *
+                                                            jnp.ndim(x))))),
+        state.server_opt)
+    state.client_params = put(state.client_params,
+                              client_stacked_specs(state.client_params))
+    copt_specs = client_opt_specs(state.client_params)
+    state.client_opt = {
+        "m": put(state.client_opt["m"], copt_specs["m"]),
+        "v": put(state.client_opt["v"], copt_specs["v"]),
+        "step": jax.device_put(
+            state.client_opt["step"],
+            NamedSharding(mesh, sanitize_spec(
+                copt_specs["step"], state.client_opt["step"].shape, mesh))),
+    }
+    return state
+
+
+# ---------------------------------------------------------------------------
 # Activations / inputs
 # ---------------------------------------------------------------------------
 
@@ -207,17 +284,25 @@ def ssm_state_specs(mesh, cfg, global_batch: int, state_tree) -> Any:
 
 def sanitize_spec(spec: P, shape, mesh) -> P:
     """Drop mesh axes from dims they don't evenly divide (e.g. vocab 51865
-    on a 16-way axis): JAX in_shardings require exact divisibility."""
+    on a 16-way axis — JAX in_shardings require exact divisibility) and
+    axes the mesh doesn't have (a clients-only mesh has no "data"/"model")."""
     out = []
     for i, entry in enumerate(spec):
         if entry is None:
             out.append(None)
             continue
         axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(a for a in axes if a in mesh.shape)
+        if not kept:
+            out.append(None)
+            continue
         size = 1
-        for a in axes:
+        for a in kept:
             size *= mesh.shape[a]
-        out.append(entry if shape[i] % size == 0 else None)
+        if shape[i] % size != 0:
+            out.append(None)
+        else:
+            out.append(kept if isinstance(entry, tuple) else kept[0])
     return P(*out)
 
 

@@ -1,0 +1,117 @@
+"""Thin ``hypothesis`` shim so the suite collects (and runs) everywhere.
+
+When the real ``hypothesis`` package is installed (see requirements-dev.txt)
+this module re-exports it untouched. When it is absent — the bare container
+ships only pytest — a minimal deterministic fallback stands in:
+
+  * ``st.integers`` / ``st.floats`` / ``st.sampled_from`` become seeded
+    draw functions (seeded per test name, so runs are reproducible);
+  * ``@hypothesis.given(**strategies)`` runs the test body once per example
+    with drawn keyword arguments, always including the strategy's boundary
+    values first (min/max), then random interior draws;
+  * ``@hypothesis.settings(max_examples=N)`` caps the example count
+    (``deadline`` and other knobs are accepted and ignored).
+
+This trades hypothesis's shrinking and coverage-guided search for zero
+dependencies — the property tests still execute their invariants over a
+boundary-inclusive sample instead of silently skipping.
+
+Usage in test modules (replaces ``import hypothesis`` +
+``import hypothesis.strategies as st``)::
+
+    from _hypothesis_compat import hypothesis, st
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import inspect
+    import random
+    import types
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        """A draw function plus the boundary examples to always try."""
+
+        def __init__(self, draw, boundaries=()):
+            self._draw = draw
+            self.boundaries = tuple(boundaries)
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value=None, max_value=None):
+        lo = 0 if min_value is None else int(min_value)
+        hi = 1000 if max_value is None else int(max_value)
+        return _Strategy(lambda rng: rng.randint(lo, hi),
+                         boundaries=(lo, hi) if lo != hi else (lo,))
+
+    def _floats(min_value=None, max_value=None, **_kw):
+        lo = 0.0 if min_value is None else float(min_value)
+        hi = 1.0 if max_value is None else float(max_value)
+        return _Strategy(lambda rng: rng.uniform(lo, hi),
+                         boundaries=(lo, hi) if lo != hi else (lo,))
+
+    def _sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))],
+                         boundaries=(seq[0], seq[-1]) if seq else ())
+
+    st = types.SimpleNamespace(
+        integers=_integers, floats=_floats, sampled_from=_sampled_from)
+
+    def _settings(deadline=None, max_examples=_DEFAULT_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def _given(**strategies):
+        assert strategies, "shim supports keyword-style given(...) only"
+
+        def deco(fn):
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples",
+                                    _DEFAULT_EXAMPLES))
+                rng = random.Random(fn.__name__)
+                names = sorted(strategies)
+                # boundary examples first: i-th boundary of every strategy
+                n_bound = max((len(strategies[k].boundaries) for k in names),
+                              default=0)
+                examples = []
+                for i in range(n_bound):
+                    examples.append({
+                        k: (strategies[k].boundaries[
+                            min(i, len(strategies[k].boundaries) - 1)]
+                            if strategies[k].boundaries
+                            else strategies[k].draw(rng))
+                        for k in names})
+                while len(examples) < max(n, n_bound):
+                    examples.append(
+                        {k: strategies[k].draw(rng) for k in names})
+                for ex in examples[:max(n, n_bound)]:
+                    fn(*args, **kwargs, **ex)
+
+            # pytest must not treat the drawn names as fixtures: expose a
+            # signature with the strategy parameters removed.
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in strategies]
+            runner.__signature__ = sig.replace(parameters=params)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__dict__.update(fn.__dict__)
+            return runner
+
+        return deco
+
+    hypothesis = types.SimpleNamespace(given=_given, settings=_settings)
+
+__all__ = ["hypothesis", "st", "HAVE_HYPOTHESIS"]

@@ -1,0 +1,248 @@
+"""Vectorized multi-client engine tests (core/collab.py).
+
+Differential testing: the vectorized round (vmap over the stacked client
+axis + lax.scan over batches + one concatenated server update per batch)
+must match ``train_round_reference`` — identical semantics and PRNG
+discipline, plain Python loops — on client AND server state. Plus the
+GM/ICM cut-point edge cases, the stacked-state plumbing, the zero-batch
+regression for the sequential path, and the "clients" mesh-axis specs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collab import (CollabConfig, CollabState,
+                               make_vectorized_round, setup,
+                               setup_vectorized, stack_clients,
+                               stack_round_batches, to_sequential,
+                               to_vectorized, train_round,
+                               train_round_reference,
+                               train_round_vectorized, unstack_clients)
+from repro.core.schedules import DiffusionSchedule
+from repro.core.splitting import CutPoint
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.sharding import specs as S
+
+SCHED = DiffusionSchedule.linear(100)
+
+
+def tiny_apply(params, x, t, y):
+    return x * params["a"] + params["b"]
+
+
+def tiny_params(v=0.5):
+    return {"a": jnp.float32(v), "b": jnp.float32(0.0)}
+
+
+def _tiny_states(k=3):
+    cp = [tiny_params(0.4 + 0.1 * c) for c in range(k)]
+    return CollabState(
+        server_params=tiny_params(), server_opt=init_opt_state(tiny_params()),
+        client_params=cp, client_opt=[init_opt_state(p) for p in cp])
+
+
+def _data(key, nb=2, k=3, b=8):
+    xs = jax.random.normal(key, (nb, k, b, 8, 8, 3))
+    ys = jnp.zeros((nb, k, b, 4)).at[..., 0].set(1.0)
+    return xs, ys
+
+
+def _assert_trees_close(a, b, **tol):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), **tol)
+
+
+# ---------------------------------------------------------------------------
+# stacked-state plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_stack_unstack_roundtrip(key):
+    cps = [tiny_params(0.1 * c) for c in range(4)]
+    stacked = stack_clients(cps)
+    assert stacked["a"].shape == (4,)
+    back = unstack_clients(stacked, 4)
+    _assert_trees_close(back, cps, rtol=0, atol=0)
+
+
+def test_to_vectorized_roundtrip(key):
+    state = _tiny_states()
+    v = to_vectorized(state)
+    assert v.n_clients == 3
+    assert v.client_opt["step"].shape == (3,)
+    back = to_sequential(v)
+    _assert_trees_close(back.client_params, state.client_params,
+                        rtol=0, atol=0)
+
+
+def test_stack_round_batches(key):
+    per_client = [[(jnp.ones((4, 8, 8, 3)), jnp.ones((4, 2)))] * 3,
+                  [(jnp.ones((4, 8, 8, 3)), jnp.ones((4, 2)))] * 2]
+    xs, ys = stack_round_batches(per_client)
+    assert xs.shape == (2, 2, 4, 8, 8, 3)  # truncated to shortest client
+    assert ys.shape == (2, 2, 4, 2)
+    assert stack_round_batches([[], [(jnp.ones((1,)), jnp.ones((1,)))]]) \
+        == (None, None)
+    # an empty round is a no-op, not a crash (found driving collab_train
+    # with n_per_client < batch_size)
+    assert train_round_vectorized(None, None, None, None, None) == {}
+
+
+# ---------------------------------------------------------------------------
+# sequential path regression: zero-batch client (NameError at seed)
+# ---------------------------------------------------------------------------
+
+
+def test_train_round_zero_batch_client(key):
+    """A client with no batches must neither crash (the seed bug: metrics
+    variable referenced before assignment) nor inherit the previous
+    client's metrics."""
+    cut = CutPoint(100, 30)
+    from repro.core.protocol import make_collab_step
+    step = jax.jit(make_collab_step(SCHED, cut, tiny_apply,
+                                    AdamWConfig(lr=1e-3)))
+    state = _tiny_states(3)
+    x0 = jax.random.normal(key, (8, 8, 8, 3))
+    y = jnp.zeros((8, 4)).at[:, 0].set(1.0)
+    metrics = train_round(state, step, [[(x0, y)], [], [(x0, y)]], key)
+    assert metrics[1] == {}           # no metrics invented for idle client
+    assert "client_loss" in metrics[0] and "client_loss" in metrics[2]
+    assert state.step == 2
+
+
+# ---------------------------------------------------------------------------
+# vectorized round == sequential reference oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t_cut", [30, 0, 100])
+def test_vectorized_matches_reference_tiny(key, t_cut):
+    """3-client toy config, 2 batches: the single-program round must equal
+    the python-loop oracle on every client/server param and opt leaf —
+    including the GM (t_cut=0) and ICM (t_cut=T) degenerate cuts."""
+    cut = CutPoint(100, t_cut)
+    opt_cfg = AdamWConfig(lr=1e-2)
+    xs, ys = _data(key)
+    round_fn = make_vectorized_round(SCHED, cut, tiny_apply, opt_cfg)
+
+    vstate = to_vectorized(_tiny_states())
+    m = train_round_vectorized(vstate, round_fn, xs, ys, key)
+
+    ref = _tiny_states()
+    train_round_reference(ref, xs, ys, key, SCHED, cut, tiny_apply, opt_cfg)
+
+    _assert_trees_close(to_sequential(vstate).client_params,
+                        ref.client_params, atol=1e-7, rtol=1e-6)
+    _assert_trees_close(vstate.server_params, ref.server_params,
+                        atol=1e-7, rtol=1e-6)
+    _assert_trees_close(to_sequential(vstate).client_opt, ref.client_opt,
+                        atol=1e-7, rtol=1e-6)
+    _assert_trees_close(vstate.server_opt, ref.server_opt,
+                        atol=1e-7, rtol=1e-6)
+    assert vstate.step == ref.step
+    assert set(m[0]) >= {"client_loss", "server_loss", "payload_bytes"}
+
+
+@pytest.mark.slow
+def test_vectorized_matches_reference_unet(key):
+    """Same differential test through the real (tiny) U-Net denoiser.
+    Tolerance 1e-5: vmap batches the per-client convolutions into grouped
+    convolutions whose reduction order differs from the sequential loop's
+    by a few float32 ulps."""
+    cfg = CollabConfig(n_clients=3, T=40, t_cut=10, image_size=8,
+                       batch_size=4, n_classes=4)
+    vstate, round_fn, apply_fn = setup_vectorized(key, cfg)
+    sstate, _, _ = setup(key, cfg)  # same init keys -> same params
+
+    _assert_trees_close(vstate.client_params,
+                        stack_clients(sstate.client_params), rtol=0, atol=0)
+
+    kd = jax.random.fold_in(key, 1)
+    xs = jax.random.normal(kd, (2, 3, 4, 8, 8, 3))
+    ys = jax.nn.one_hot(jax.random.randint(kd, (2, 3, 4), 0, 4), 4)
+    rkey = jax.random.fold_in(key, 2)
+
+    train_round_vectorized(vstate, round_fn, xs, ys, rkey)
+    train_round_reference(sstate, xs, ys, rkey, cfg.sched(), cfg.cut(),
+                          apply_fn, AdamWConfig(lr=cfg.lr))
+
+    _assert_trees_close(to_sequential(vstate).client_params,
+                        sstate.client_params, atol=1e-5, rtol=1e-4)
+    _assert_trees_close(vstate.server_params, sstate.server_params,
+                        atol=1e-5, rtol=1e-4)
+
+
+def test_vectorized_gm_edge(key):
+    """GM (t_cut=0): client models must not move; the server must."""
+    cut = CutPoint(100, 0)
+    round_fn = make_vectorized_round(SCHED, cut, tiny_apply,
+                                     AdamWConfig(lr=1e-2))
+    vstate = to_vectorized(_tiny_states())
+    before_c = jax.tree.map(jnp.copy, vstate.client_params)
+    before_s = jax.tree.map(jnp.copy, vstate.server_params)
+    xs, ys = _data(key)
+    m = train_round_vectorized(vstate, round_fn, xs, ys, key)
+    _assert_trees_close(vstate.client_params, before_c, rtol=0, atol=0)
+    assert float(jnp.abs(vstate.server_params["a"] - before_s["a"])) > 0
+    assert m[0]["client_loss"] == 0.0
+    assert m[0]["client_grad_norm"] == 0.0
+
+
+def test_vectorized_icm_edge(key):
+    """ICM (t_cut=T): no server training; clients cover U[1, T] alone."""
+    cut = CutPoint(100, 100)
+    round_fn = make_vectorized_round(SCHED, cut, tiny_apply,
+                                     AdamWConfig(lr=1e-2))
+    vstate = to_vectorized(_tiny_states())
+    before_c = jax.tree.map(jnp.copy, vstate.client_params)
+    before_s = jax.tree.map(jnp.copy, vstate.server_params)
+    xs, ys = _data(key)
+    m = train_round_vectorized(vstate, round_fn, xs, ys, key)
+    _assert_trees_close(vstate.server_params, before_s, rtol=0, atol=0)
+    for c in range(3):
+        assert float(jnp.abs(
+            vstate.client_params["a"][c] - before_c["a"][c])) > 0
+    assert m[0]["server_loss"] == 0.0
+    assert "server_grad_norm" not in m[0]
+
+
+# ---------------------------------------------------------------------------
+# "clients" mesh axis
+# ---------------------------------------------------------------------------
+
+
+def test_client_stacked_specs(key):
+    cfg = CollabConfig(n_clients=2, T=20, t_cut=5, image_size=8,
+                       batch_size=2, n_classes=4)
+    vstate, _, _ = setup_vectorized(key, cfg)
+    specs = S.client_stacked_specs(vstate.client_params)
+    for spec, leaf in zip(
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.leaves(vstate.client_params)):
+        assert spec[0] == S.CLIENT_AXIS
+        assert len(spec) == leaf.ndim
+        assert all(e is None for e in spec[1:])
+    ospecs = S.client_opt_specs(vstate.client_params)
+    assert ospecs["step"] == P(S.CLIENT_AXIS)
+
+
+def test_sharded_round_runs(key):
+    """shard_vectorized_state + a round on the 'clients' mesh (1 CPU device
+    here — the specs are what port to real multi-device runs)."""
+    cut = CutPoint(100, 30)
+    round_fn = make_vectorized_round(SCHED, cut, tiny_apply,
+                                     AdamWConfig(lr=1e-2))
+    vstate = to_vectorized(_tiny_states())
+    mesh = S.make_client_mesh(3)
+    vstate = S.shard_vectorized_state(vstate, mesh)
+    xs, ys = _data(key)
+    m = train_round_vectorized(vstate, round_fn, xs, ys, key)
+    assert np.isfinite(m[0]["client_loss"])
+    assert vstate.client_params["a"].shape == (3,)

@@ -81,6 +81,7 @@ _SUBPROCESS = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow  # subprocess + 8-device XLA compile
 def test_ep_equals_dense_8_devices():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
@@ -136,6 +137,7 @@ _SUBPROCESS_2D = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow  # subprocess + 8-device XLA compile
 def test_ep2d_equals_dense_8_devices():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"

@@ -79,8 +79,16 @@ def test_edge_cut_points(key, t_cut):
 
 
 def test_collab_step_trains_both(key):
-    """A few steps of the jitted Alg.-1 step reduce both losses on a
-    learnable toy problem."""
+    """30 jitted Alg.-1 steps must improve BOTH models on a fixed held-out
+    draw.
+
+    Calibration note: the per-step training losses are the wrong signal for
+    this assertion — every step samples fresh (t_c, t_s, ε), and on this toy
+    problem the draw-to-draw loss variance (~0.05) exceeds the server's
+    30-step improvement (~0.005, the linear denoiser is near its floor on
+    the t ∈ [t_ζ, T] range), so comparing step 0 to step 29 is a coin flip.
+    Evaluating before/after on ONE fixed evaluation draw isolates the model
+    improvement from the sampling noise."""
     cut = CutPoint(100, 30)
     sched = DiffusionSchedule.linear(100)
     opt_cfg = AdamWConfig(lr=5e-2)
@@ -88,15 +96,20 @@ def test_collab_step_trains_both(key):
     cp, sp = tiny_params(), tiny_params()
     co, so = init_opt_state(cp), init_opt_state(sp)
     x0, y = _data(key, 32)
-    first, last = None, None
+    eval_key = jax.random.fold_in(key, 999)
+
+    def eval_losses(cp_, sp_):
+        lc, pay = client_losses(cp_, x0, y, eval_key, sched, cut, tiny_apply)
+        ls = server_loss(sp_, pay, sched, tiny_apply)
+        return float(lc), float(ls)
+
+    before = eval_losses(cp, sp)
     for i in range(30):
         cp, co, sp, so, m = step(cp, co, sp, so, x0, y,
                                  jax.random.fold_in(key, i))
-        if i == 0:
-            first = (float(m["client_loss"]), float(m["server_loss"]))
-        last = (float(m["client_loss"]), float(m["server_loss"]))
-    assert last[0] < first[0]
-    assert last[1] < first[1]
+    after = eval_losses(cp, sp)
+    assert after[0] < before[0]
+    assert after[1] < before[1]
 
 
 def test_payload_bytes_scale_with_batch(key):

@@ -1,7 +1,6 @@
 """Property tests for the DDPM schedule (paper eq. 1–3) — hypothesis-driven
 invariants plus the continuous-t interpolation CollaFuse's Alg. 2 relies on."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,6 +1,5 @@
 """CutPoint invariants (paper Alg. 1 line 6 + Alg. 2 lines 2–3)."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -11,6 +11,8 @@ import pytest
 
 from repro.core.collab import (CollabConfig, sample_for_client, setup,
                                train_round)
+
+pytestmark = pytest.mark.slow  # miniature end-to-end runs, minutes on CPU
 from repro.core.schedules import DiffusionSchedule
 from repro.data.synthetic import SyntheticConfig, batches, make_client_datasets
 from repro.eval.fd_proxy import fd_proxy

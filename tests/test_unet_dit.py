@@ -1,6 +1,5 @@
 """U-Net + DiT denoiser tests."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
