@@ -14,6 +14,13 @@ Two regimes, reported separately because they answer different questions:
   modest (~1.1–1.4×); the entry documents that honestly. On accelerator
   backends the stacked client axis shards over the "clients" mesh
   dimension (sharding/specs.py) and this regime is where the engine pays.
+* ``ragged`` — heterogeneous clients with a 1:2:4 batch-count skew (the
+  regime the PR-1 engine truncated or punted to the sequential loop).
+  Sequential dispatches one program per REAL (client, batch) pair; the
+  masked engine pads to (n_batches_max, k, B) with a validity mask and
+  runs one program, trading k·n_batches_max − Σn_c cells of wasted padded
+  compute (reported as ``pad_waste``) for the dispatch collapse — the win
+  condition on dispatch-bound shapes.
 """
 from __future__ import annotations
 
@@ -24,8 +31,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core.collab import (CollabConfig, make_vectorized_round, setup,
-                               setup_vectorized, train_round,
-                               train_round_vectorized)
+                               setup_vectorized, stack_round_batches,
+                               train_round, train_round_vectorized)
 from repro.core.protocol import make_collab_step
 from repro.core.schedules import DiffusionSchedule
 from repro.core.splitting import CutPoint
@@ -59,7 +66,8 @@ def _bench_toy(key, k: int, nb: int, batch: int = 8):
 
     xs, ys = _toy_data(key, k, nb, batch)
     step_fn = jax.jit(make_collab_step(sched, cut, apply_fn, opt_cfg))
-    round_fn = make_vectorized_round(sched, cut, apply_fn, opt_cfg)
+    round_fn = make_vectorized_round(sched, cut, apply_fn, opt_cfg,
+                                     masked=False)
 
     cp = [params() for _ in range(k)]
     co = [init_opt_state(p) for p in cp]
@@ -117,11 +125,73 @@ def _bench_dit(key, k: int, nb: int):
          f"cpu_compute_bound=see_module_docstring")
 
 
+def _bench_ragged(key, skew=(1, 2, 4), nb_unit: int = 2, batch: int = 8):
+    """Ragged-skew regime: client c brings ``skew[c] * nb_unit`` batches.
+    Sequential = one dispatch per real (client, batch) pair; masked engine
+    = ONE program over the padded (max_nb, k, B) stack + validity mask."""
+    sched = DiffusionSchedule.linear(100)
+    cut = CutPoint(100, 30)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    apply_fn = lambda p, x, t, y: x * p["a"] + p["b"]
+    params = lambda: {"a": jnp.float32(0.5), "b": jnp.float32(0.0)}
+    k = len(skew)
+    counts = [s * nb_unit for s in skew]
+    per_client = []
+    for c, n_c in enumerate(counts):
+        kc = jax.random.fold_in(key, c)
+        per_client.append([
+            (jax.random.normal(jax.random.fold_in(kc, b), (batch, 8, 8, 3)),
+             jax.nn.one_hot(
+                 jax.random.randint(jax.random.fold_in(kc, b), (batch,),
+                                    0, 4), 4))
+            for b in range(n_c)])
+
+    step_fn = jax.jit(make_collab_step(sched, cut, apply_fn, opt_cfg))
+    cp = [params() for _ in range(k)]
+    co = [init_opt_state(p) for p in cp]
+    sp, so = params(), init_opt_state(params())
+
+    def seq():
+        nonlocal sp, so
+        for c in range(k):
+            for b, (x0, y) in enumerate(per_client[c]):
+                bk = jax.random.fold_in(key, b * k + c)
+                cp[c], co[c], sp, so, m = step_fn(cp[c], co[c], sp, so,
+                                                  x0, y, bk)
+        jax.block_until_ready(m["client_loss"])
+
+    xs, ys, mask = stack_round_batches(per_client)
+    round_fn = make_vectorized_round(sched, cut, apply_fn, opt_cfg)
+    vcp = jax.tree.map(lambda *t: jnp.stack(t), *[params() for _ in range(k)])
+    vco = jax.tree.map(lambda *t: jnp.stack(t),
+                       *[init_opt_state(params()) for _ in range(k)])
+    vsp, vso = params(), init_opt_state(params())
+
+    def vec():
+        nonlocal vcp, vco, vsp, vso
+        vcp, vco, vsp, vso, m = round_fn(vcp, vco, vsp, vso, xs, ys, mask,
+                                         key)
+        jax.block_until_ready(m["client_loss"])
+
+    steps = sum(counts)
+    waste = max(counts) * k - steps
+    tag = "to".join(str(s) for s in skew)
+    us_seq = _median_round_us(seq)
+    us_vec = _median_round_us(vec)
+    emit(f"collab_round/ragged_sequential_k{k}_{tag}", us_seq,
+         f"steps={steps}")
+    emit(f"collab_round/ragged_masked_k{k}_{tag}", us_vec,
+         f"steps={steps};pad_waste={waste}cells;"
+         f"speedup={us_seq / us_vec:.2f}x")
+
+
 def main(quick: bool = False):
     key = jax.random.PRNGKey(0)
     nb = 5 if quick else 10
     for k in ([5] if quick else [2, 5, 8]):
         _bench_toy(jax.random.fold_in(key, k), k, nb)
+    _bench_ragged(jax.random.fold_in(key, 777),
+                  nb_unit=1 if quick else 2)
     if not quick:
         _bench_dit(jax.random.fold_in(key, 1000), 5, 4)
 

@@ -1,7 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 verify (ROADMAP.md): a fresh checkout goes red/green in one step.
 #   scripts/ci.sh            - full suite
-#   scripts/ci.sh -m 'not slow'  - skip the long system/equivalence tests
+#   scripts/ci.sh tier1      - fast tier: everything but the slow marker
+#                              (includes the masked-engine equivalence and
+#                              ragged property tests — they are tier-1)
+#   scripts/ci.sh slow       - only the long system/sampler/U-Net tests
+#   scripts/ci.sh <pytest args...>  - passed through unchanged
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+run() { PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"; }
+case "${1:-}" in
+  tier1) shift; run -m "not slow" "$@";;
+  slow)  shift; run -m "slow" "$@";;
+  *)     run "$@";;
+esac

@@ -26,10 +26,30 @@ The stacked client axis shards over a ``"clients"`` mesh axis
 (sharding/specs.client_stacked_specs + shard_vectorized_state); the
 server model stays replicated.
 
+Ragged / heterogeneous clients (the paper's actual regime — k clients
+with their *own*, differently-sized datasets): ``stack_round_batches``
+zero-pads every client to ``(n_batches_max, k, B_max, ...)`` and emits a
+``(n_batches_max, k, B_max)`` 0/1 validity **mask**. The masked round
+(``make_vectorized_round(..., masked=True)``, the default engine) threads
+the mask through ``mse_eps_loss(..., weights=)`` — padded rows carry zero
+loss/gradient weight and the mean normalizes by the REAL sample count —
+masks the concatenated server batch with the flattened mask, and skips
+the AdamW update (params, moments, AND the step counter) for any
+(client, batch) cell or server batch slot whose mask is all-zero. No
+sample is ever dropped and no sequential fallback exists for ragged data.
+``masked=False`` keeps the PR-1 dense body (no mask input) as the
+differential baseline for the mask-of-ones ≡ unmasked property test and
+the dense-path benchmark entries.
+
 PRNG discipline (shared by the vectorized engine and its python reference
 oracle ``train_round_reference``): per-batch key ``fold_in(round_key, b)``,
-per-client key ``fold_in(batch_key, c)`` — so the vectorized round is
-bit-comparable to the reference. The legacy sequential ``train_round``
+per-client key ``fold_in(batch_key, c)``, and — inside the protocol
+(core/protocol.row_keys) — per-SAMPLE key ``fold_in(draw_key, i)`` for
+every ε/t draw. The first two make the vectorized round bit-comparable to
+the reference; the last makes row i's randomness independent of the batch
+size, so zero-padding a ragged batch to B_max leaves every real row's
+draws untouched (the padding-invariance property,
+tests/test_ragged_properties.py). The legacy sequential ``train_round``
 derives keys by chained ``jax.random.split`` in client-major order and is
 therefore NOT key-compatible with the vectorized engine; it remains the
 Alg.-1-faithful baseline, not a bit-equivalence oracle.
@@ -44,10 +64,12 @@ directly (tests/test_collab_engine.py).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig, get_arch, reduced
 from repro.configs.ddpm_unet import SMALL, UNetConfig
@@ -196,22 +218,56 @@ def to_sequential(state: VectorizedCollabState) -> CollabState:
         client_opt=unstack_clients(state.client_opt, n), step=state.step)
 
 
-def stack_round_batches(batches_per_client):
-    """List over clients of lists of (x0, y) batches ->
-    (xs (n_batches, k, B, ...), ys (n_batches, k, B, n_classes)).
+def stack_round_batches(batches_per_client, pad: bool = True):
+    """List over clients of lists of (x0, y) batches -> padded stacks.
 
-    Requires equally-shaped batches; truncates every client to the shortest
-    client's batch count (route leftovers through the sequential path).
-    Returns (None, None) when any client has zero batches."""
-    nb = min((len(b) for b in batches_per_client), default=0)
+    ``pad=True`` (the engine default): zero-pads ragged clients — unequal
+    batch COUNTS and unequal batch SIZES — to
+    ``(n_batches_max, k, B_max, ...)`` and returns ``(xs, ys, mask)`` where
+    ``mask`` is a ``(n_batches_max, k, B_max)`` float32 0/1 validity mask
+    (1 = real sample). Every sample of every client is represented exactly
+    once; nothing is truncated. Returns ``(None, None, None)`` only when NO
+    client has any batch.
+
+    ``pad=False``: the legacy dense layout — truncates every client to the
+    shortest client's batch count and requires equal batch shapes; kept for
+    the dense (maskless) engine. Truncation is no longer silent: dropping
+    batches emits a ``UserWarning`` with the dropped-batch count. Returns
+    ``(xs, ys)``, or ``(None, None)`` when any client has zero batches."""
+    if not pad:
+        nb = min((len(b) for b in batches_per_client), default=0)
+        if nb == 0:
+            return None, None
+        k = len(batches_per_client)
+        dropped = sum(len(b) - nb for b in batches_per_client)
+        if dropped:
+            warnings.warn(
+                f"stack_round_batches(pad=False) truncating to the shortest "
+                f"client: dropping {dropped} batch(es); use the padded/"
+                f"masked engine (pad=True) to train on every sample",
+                UserWarning, stacklevel=2)
+        xs = jnp.stack([jnp.stack([batches_per_client[c][b][0]
+                                   for c in range(k)]) for b in range(nb)])
+        ys = jnp.stack([jnp.stack([batches_per_client[c][b][1]
+                                   for c in range(k)]) for b in range(nb)])
+        return xs, ys
+
+    nb = max((len(b) for b in batches_per_client), default=0)
     if nb == 0:
-        return None, None
+        return None, None, None
     k = len(batches_per_client)
-    xs = jnp.stack([jnp.stack([batches_per_client[c][b][0]
-                               for c in range(k)]) for b in range(nb)])
-    ys = jnp.stack([jnp.stack([batches_per_client[c][b][1]
-                               for c in range(k)]) for b in range(nb)])
-    return xs, ys
+    b_max = max(x.shape[0] for bs in batches_per_client for (x, _) in bs)
+    x0, y0 = next((x, y) for bs in batches_per_client for (x, y) in bs)
+    xs = np.zeros((nb, k, b_max) + tuple(x0.shape[1:]), dtype=x0.dtype)
+    ys = np.zeros((nb, k, b_max) + tuple(y0.shape[1:]), dtype=y0.dtype)
+    mask = np.zeros((nb, k, b_max), dtype=np.float32)
+    for c, bs in enumerate(batches_per_client):
+        for b, (x, y) in enumerate(bs):
+            n = x.shape[0]
+            xs[b, c, :n] = np.asarray(x)
+            ys[b, c, :n] = np.asarray(y)
+            mask[b, c, :n] = 1.0
+    return jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask)
 
 
 def _flatten_payload(payload: ServerPayload) -> ServerPayload:
@@ -219,58 +275,115 @@ def _flatten_payload(payload: ServerPayload) -> ServerPayload:
     return ServerPayload(*[t.reshape((-1,) + t.shape[2:]) for t in payload])
 
 
+def _select_tree(pred, new, old):
+    """tree_map of ``where(pred, new, old)`` — the masked engine's "skip
+    this update" primitive (params, moments, and step counter together)."""
+    return jax.tree.map(lambda a, b: jnp.where(pred, a, b), new, old)
+
+
+def _masked_adamw(params, grads, opt, opt_cfg, active):
+    """AdamW update gated on ``active``: an all-padding cell keeps params,
+    moments, AND the step counter untouched (zero grads alone would still
+    decay the moments and advance the bias correction) and reports a zero
+    grad norm. One definition so client and server skip semantics can never
+    diverge."""
+    new_p, new_opt, gn = adamw_update(params, grads, opt, opt_cfg)
+    return (_select_tree(active, new_p, params),
+            _select_tree(active, new_opt, opt),
+            jnp.where(active, gn, 0.0))
+
+
 def make_vectorized_round(sched: DiffusionSchedule, cut: CutPoint, apply_fn,
-                          opt_cfg: AdamWConfig):
+                          opt_cfg: AdamWConfig, masked: bool = True):
     """Builds the jitted whole-round function:
 
-    (client_params, client_opt, server_params, server_opt, xs, ys, key)
-      -> (client_params, client_opt, server_params, server_opt, metrics)
+    (client_params, client_opt, server_params, server_opt, xs, ys, [mask,]
+     key) -> (client_params, client_opt, server_params, server_opt, metrics)
 
     client_params/client_opt are stacked (leading (k,) axis); xs/ys are
     (n_batches, k, B, ...). One lax.scan over batches; per batch the client
     loss/update is vmapped over the client axis and the k payloads train the
     server as a single concatenated batch. metrics leaves carry a leading
-    (n_batches,) scan axis (client leaves additionally (n_batches, k))."""
+    (n_batches,) scan axis (client leaves additionally (n_batches, k)).
+
+    ``masked=True`` (default): the round additionally takes a
+    (n_batches, k, B) 0/1 validity mask (between ys and key). Per-sample
+    losses are weighted by the mask with real-count normalization
+    (mse_eps_loss weights=), the concatenated server batch is weighted by
+    the flattened mask, and a (client, batch) cell — or a whole server
+    batch slot — whose mask is all-zero keeps params, optimizer moments,
+    and the AdamW step counter untouched. ``masked=False`` builds the dense
+    PR-1 body (no mask argument), kept as the differential baseline."""
     train_client = cut.t_cut > 0
     train_server = cut.t_cut < cut.T
 
-    def client_update(cp, copt, x0, y, k):
+    def client_update(cp, copt, x0, y, w, k):
         (loss_c, payload), grads = jax.value_and_grad(
-            lambda p: client_losses(p, x0, y, k, sched, cut, apply_fn),
+            lambda p: client_losses(p, x0, y, k, sched, cut, apply_fn,
+                                    weights=w),
             has_aux=True)(cp)
         if train_client:
-            cp, copt, gn = adamw_update(cp, grads, copt, opt_cfg)
+            if w is None:
+                cp, copt, gn = adamw_update(cp, grads, copt, opt_cfg)
+            else:
+                cp, copt, gn = _masked_adamw(cp, grads, copt, opt_cfg,
+                                             jnp.sum(w) > 0)
         else:
             gn = jnp.float32(0.0)
         return cp, copt, payload, loss_c, gn
 
     def batch_step(carry, inp):
         cp, copt, sp, sopt = carry
-        x0, y, bkey = inp
+        if masked:
+            x0, y, w, bkey = inp
+        else:
+            x0, y, bkey = inp
+            w = None
         n_clients = x0.shape[0]
         ckeys = jax.vmap(lambda c: jax.random.fold_in(bkey, c))(
             jnp.arange(n_clients))
-        cp, copt, payload, loss_c, gn = jax.vmap(client_update)(
-            cp, copt, x0, y, ckeys)
+        if masked:
+            cp, copt, payload, loss_c, gn = jax.vmap(client_update)(
+                cp, copt, x0, y, w, ckeys)
+        else:
+            cp, copt, payload, loss_c, gn = jax.vmap(
+                lambda c, o, x, yy, k: client_update(c, o, x, yy, None, k))(
+                cp, copt, x0, y, ckeys)
         metrics = {"client_loss": loss_c, "client_grad_norm": gn}
         if train_server:
             flat = _flatten_payload(payload)
+            wflat = None if w is None else w.reshape(-1)
             loss_s, grads_s = jax.value_and_grad(server_loss)(
-                sp, flat, sched, apply_fn)
-            sp, sopt, gns = adamw_update(sp, grads_s, sopt, opt_cfg)
+                sp, flat, sched, apply_fn, wflat)
+            if wflat is None:
+                sp, sopt, gns = adamw_update(sp, grads_s, sopt, opt_cfg)
+            else:
+                sp, sopt, gns = _masked_adamw(sp, grads_s, sopt, opt_cfg,
+                                              jnp.sum(wflat) > 0)
             metrics["server_loss"] = loss_s
             metrics["server_grad_norm"] = gns
         else:
             metrics["server_loss"] = jnp.float32(0.0)
         return (cp, copt, sp, sopt), metrics
 
-    def round_fn(client_params, client_opt, server_params, server_opt,
-                 xs, ys, key):
+    def _scan(client_params, client_opt, server_params, server_opt, xss,
+              key):
         bkeys = jax.vmap(lambda b: jax.random.fold_in(key, b))(
-            jnp.arange(xs.shape[0]))
+            jnp.arange(xss[0].shape[0]))
         carry = (client_params, client_opt, server_params, server_opt)
-        carry, metrics = jax.lax.scan(batch_step, carry, (xs, ys, bkeys))
+        carry, metrics = jax.lax.scan(batch_step, carry, xss + (bkeys,))
         return (*carry, metrics)
+
+    if masked:
+        def round_fn(client_params, client_opt, server_params, server_opt,
+                     xs, ys, mask, key):
+            return _scan(client_params, client_opt, server_params,
+                         server_opt, (xs, ys, mask), key)
+    else:
+        def round_fn(client_params, client_opt, server_params, server_opt,
+                     xs, ys, key):
+            return _scan(client_params, client_opt, server_params,
+                         server_opt, (xs, ys), key)
 
     return jax.jit(round_fn)
 
@@ -279,7 +392,9 @@ def setup_vectorized(key, cfg: CollabConfig
                      ) -> Tuple[VectorizedCollabState, Callable, Callable]:
     """Vectorized counterpart of ``setup``: same per-client init keys (so a
     freshly set-up vectorized state equals ``stack_clients`` of the
-    sequential one), returns (state, jitted round fn, apply_fn)."""
+    sequential one), returns (state, jitted round fn, apply_fn). The round
+    fn is the masked engine — drive it via ``train_round_vectorized``,
+    which synthesizes the all-ones mask for dense (non-ragged) rounds."""
     init_one, apply_fn = build_denoiser(key, cfg)
     ks, *kc = jax.random.split(key, cfg.n_clients + 1)
     server_params = init_one(ks)
@@ -296,68 +411,102 @@ def setup_vectorized(key, cfg: CollabConfig
 
 
 def train_round_vectorized(state: VectorizedCollabState, round_fn, xs, ys,
-                           key):
+                           key, mask=None):
     """One full round in one device program. Mutates ``state`` in place;
-    returns per-client last-batch metrics shaped like ``train_round``'s
-    (server entries are the shared per-round values). Returns ``{}`` for an
-    empty round (``stack_round_batches`` yielded no common batches)."""
+    returns per-client last-REAL-batch metrics shaped like ``train_round``'s
+    (server entries are the shared per-round values; ``{}`` for a client
+    whose mask is all-padding). Returns ``{}`` for an empty round
+    (``stack_round_batches`` yielded no batches at all).
+
+    ``round_fn`` must be a masked round (``make_vectorized_round`` default);
+    ``mask=None`` synthesizes the all-ones mask — identical to the dense
+    path. ``state.step`` counts only real (client, batch) cells."""
     if xs is None or xs.shape[0] == 0:
         return {}
+    if mask is None:
+        mask = jnp.ones(xs.shape[:3], jnp.float32)
     (state.client_params, state.client_opt, state.server_params,
      state.server_opt, metrics) = round_fn(
         state.client_params, state.client_opt, state.server_params,
-        state.server_opt, xs, ys, key)
-    n_batches, n_clients = xs.shape[0], xs.shape[1]
-    state.step += n_batches * n_clients
-    payload_bytes = ServerPayload(
+        state.server_opt, xs, ys, mask, key)
+    n_clients = xs.shape[1]
+    mask_np = np.asarray(mask)
+    valid = mask_np.any(axis=2)                    # (n_batches, k)
+    state.step += int(valid.sum())
+    # protocol-level wire cost: padded rows never need shipping, so report
+    # per-ROW payload bytes x the client's real rows in its last batch
+    # (equals the dense per-batch nbytes when nothing is padded)
+    row_bytes = ServerPayload(
         xs[0, 0], xs[0, 0], jnp.zeros((xs.shape[2],), jnp.int32),
-        ys[0, 0]).nbytes()
+        ys[0, 0]).nbytes() / xs.shape[2]
+    # last batch slot where ANYONE had data: an all-padding trailing slot
+    # skipped the server update, so its metrics row is not the round's
+    any_rows = np.nonzero(valid.any(axis=1))[0]
+    if any_rows.size == 0:            # an entirely-padded round is a no-op
+        return {c: {} for c in range(n_clients)}
+    b_srv = int(any_rows[-1])
     last = {}
     for c in range(n_clients):
+        real_b = np.nonzero(valid[:, c])[0]
+        if real_b.size == 0:
+            last[c] = {}
+            continue
+        b = int(real_b[-1])
         last[c] = {
-            "client_loss": float(metrics["client_loss"][-1, c]),
-            "client_grad_norm": float(metrics["client_grad_norm"][-1, c]),
-            "server_loss": float(metrics["server_loss"][-1]),
-            "payload_bytes": float(payload_bytes),
+            "client_loss": float(metrics["client_loss"][b, c]),
+            "client_grad_norm": float(metrics["client_grad_norm"][b, c]),
+            "server_loss": float(metrics["server_loss"][b_srv]),
+            "payload_bytes": float(row_bytes * mask_np[b, c].sum()),
         }
         if "server_grad_norm" in metrics:
             last[c]["server_grad_norm"] = float(
-                metrics["server_grad_norm"][-1])
+                metrics["server_grad_norm"][b_srv])
     return last
 
 
 def train_round_reference(state: CollabState, xs, ys, key,
                           sched: DiffusionSchedule, cut: CutPoint, apply_fn,
-                          opt_cfg: AdamWConfig):
+                          opt_cfg: AdamWConfig, mask=None):
     """Differential-testing oracle for the vectorized engine: identical
     semantics and PRNG discipline (per-batch fold_in, per-client fold_in,
-    one concatenated server update per batch), but plain Python loops and
-    per-client pytrees — no vmap, no scan. Mutates ``state`` in place."""
+    one concatenated server update per batch, masked losses with real-count
+    normalization, all-padding cells skipped), but plain Python loops and
+    per-client pytrees — no vmap, no scan, no ``where``-select (a skipped
+    update is simply not executed). Mutates ``state`` in place.
+    ``mask=None`` means every sample is real (the dense case);
+    ``state.step`` counts only real (client, batch) cells either way."""
     train_client = cut.t_cut > 0
     train_server = cut.t_cut < cut.T
     n_batches, n_clients = xs.shape[0], xs.shape[1]
     for b in range(n_batches):
         bkey = jax.random.fold_in(key, b)
         payloads = []
+        wrows = []
         for c in range(n_clients):
             ckey = jax.random.fold_in(bkey, c)
+            w = None if mask is None else mask[b, c]
+            active = mask is None or bool(np.asarray(mask[b, c]).sum() > 0)
             (loss_c, payload), grads = jax.value_and_grad(
                 lambda p: client_losses(p, xs[b, c], ys[b, c], ckey, sched,
-                                        cut, apply_fn),
+                                        cut, apply_fn, weights=w),
                 has_aux=True)(state.client_params[c])
-            if train_client:
+            if train_client and active:
                 state.client_params[c], state.client_opt[c], _ = adamw_update(
                     state.client_params[c], grads, state.client_opt[c],
                     opt_cfg)
             payloads.append(payload)
+            wrows.append(w)
+            if active:
+                state.step += 1
         if train_server:
             flat = ServerPayload(*[jnp.concatenate(ts)
                                    for ts in zip(*payloads)])
-            _, grads_s = jax.value_and_grad(server_loss)(
-                state.server_params, flat, sched, apply_fn)
-            state.server_params, state.server_opt, _ = adamw_update(
-                state.server_params, grads_s, state.server_opt, opt_cfg)
-        state.step += n_clients
+            wflat = None if mask is None else jnp.concatenate(wrows)
+            if wflat is None or bool(np.asarray(wflat).sum() > 0):
+                _, grads_s = jax.value_and_grad(server_loss)(
+                    state.server_params, flat, sched, apply_fn, wflat)
+                state.server_params, state.server_opt, _ = adamw_update(
+                    state.server_params, grads_s, state.server_opt, opt_cfg)
     return state
 
 

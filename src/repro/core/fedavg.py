@@ -75,8 +75,20 @@ def make_local_step(sched: DiffusionSchedule, T: int, apply_fn,
 
 
 def average_weights(client_params: List[Dict], weights=None) -> Dict:
+    """Weighted FedAvg aggregation. ``weights`` is one non-negative
+    coefficient per client and is normalized to sum to 1 internally, so raw
+    per-client dataset sizes are valid input — [McMahan et al. 2017]'s
+    n_c/Σn aggregation for unbalanced clients is ``average_weights(params,
+    sizes)``. Default: uniform (equal-sized clients)."""
     n = len(client_params)
-    w = weights or [1.0 / n] * n
+    w = [1.0 / n] * n if weights is None else [float(x) for x in weights]
+    if len(w) != n:
+        raise ValueError(f"one weight per client: {len(w)} != {n}")
+    tot = sum(w)
+    if tot <= 0 or any(x < 0 for x in w):
+        raise ValueError(f"weights must be non-negative with a positive "
+                         f"sum, got {w}")
+    w = [x / tot for x in w]
 
     def avg(*leaves):
         out = sum(wi * l.astype(jnp.float32) for wi, l in zip(w, leaves))
@@ -87,15 +99,29 @@ def average_weights(client_params: List[Dict], weights=None) -> Dict:
 
 def fedavg_round(state: FedAvgState, step_fn, batches_per_client, key
                  ) -> Dict[str, float]:
-    """One FedAvg round: local training, weight upload, average, download."""
+    """One FedAvg round: local training, weight upload, average, download.
+    Aggregation is sample-count weighted (n_c/Σn over the samples each
+    client actually trained on this round), which equals uniform averaging
+    when clients are balanced and matches the ragged-client story of the
+    masked engine when they are not."""
     losses = []
+    seen = []
     for c, batches in enumerate(batches_per_client):
+        loss = None
         for (x0, y) in batches:
             key, k = jax.random.split(key)
             state.client_params[c], state.client_opt[c], loss = step_fn(
                 state.client_params[c], state.client_opt[c], x0, y, k)
-        losses.append(float(loss))
-    state.global_params = average_weights(state.client_params)
+        # a zero-batch client contributes neither a loss sample nor
+        # aggregation weight (same idle-client contract as
+        # collab.train_round — don't inherit the previous client's loss)
+        if loss is not None:
+            losses.append(float(loss))
+        seen.append(sum(int(x0.shape[0]) for (x0, _) in batches))
+    if not losses:
+        raise ValueError("fedavg_round: no client contributed any batch")
+    state.global_params = average_weights(
+        state.client_params, seen if any(seen) else None)
     per_model = params_nbytes(state.global_params)
     state.comm_bytes += 2 * per_model * len(state.client_params)  # up + down
     state.client_params = [jax.tree.map(jnp.copy, state.global_params)

@@ -32,8 +32,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.schedules import DiffusionSchedule
-from repro.core.splitting import CutPoint
+from repro.core.splitting import CutPoint, row_keys
 from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+def rowwise_normal(key, shape):
+    """(B, ...) standard normals with row-keyed draws (see
+    splitting.row_keys): row i depends only on (key, i), never on B — the
+    padding-invariance discipline shared with CutPoint.sample_*_t."""
+    return jax.vmap(
+        lambda k: jax.random.normal(k, shape[1:], dtype=jnp.float32))(
+        row_keys(key, shape[0]))
 
 
 class ServerPayload(NamedTuple):
@@ -50,13 +59,20 @@ class ServerPayload(NamedTuple):
 
 
 def mse_eps_loss(apply_fn, params, x_t, t, y, eps, weights=None):
+    """ω_t ≡ 1 MSE. ``weights`` (B,) — typically a 0/1 validity mask over a
+    padded batch (core/collab.py masked engine) — selects which samples
+    count: the loss is the weighted mean sum(per·w)/max(sum(w), 1), so
+    padded rows contribute zero gradient and the normalization matches the
+    unpadded batch size (an all-ones weight vector equals the unweighted
+    mean exactly)."""
     pred = apply_fn(params, x_t, t, y)
     per = jnp.mean(jnp.square(pred.astype(jnp.float32) -
                               eps.astype(jnp.float32)),
                    axis=tuple(range(1, eps.ndim)))
-    if weights is not None:
-        per = per * weights
-    return jnp.mean(per)
+    if weights is None:
+        return jnp.mean(per)
+    w = weights.astype(jnp.float32)
+    return jnp.sum(per * w) / jnp.maximum(jnp.sum(w), 1.0)
 
 
 def make_payload(x0, y, key, sched: DiffusionSchedule, cut: CutPoint,
@@ -74,9 +90,9 @@ def make_payload(x0, y, key, sched: DiffusionSchedule, cut: CutPoint,
     B = x0.shape[0]
     k_ts, k_es, k_ec, k_dp = jax.random.split(key, 4)
     if eps_c is None:
-        eps_c = jax.random.normal(k_ec, x0.shape, dtype=jnp.float32)
+        eps_c = rowwise_normal(k_ec, x0.shape)
     t_s = cut.sample_server_t(k_ts, B)
-    eps_s = jax.random.normal(k_es, x0.shape, dtype=jnp.float32)
+    eps_s = rowwise_normal(k_es, x0.shape)
     x_cut = sched.q_sample(x0, jnp.full((B,), float(cut.t_cut)), eps_c)
     x_ts = sched.renoise(x_cut, cut.t_cut, t_s, eps_s)
     if dp_sigma > 0.0 and dp_clip > 0.0:
@@ -85,22 +101,29 @@ def make_payload(x0, y, key, sched: DiffusionSchedule, cut: CutPoint,
                                keepdims=True)
         scale = jnp.minimum(1.0, dp_clip / jnp.maximum(norm, 1e-9))
         clipped = (flat * scale).reshape(x_ts.shape)
-        noise = jax.random.normal(k_dp, x_ts.shape, dtype=jnp.float32)
+        noise = rowwise_normal(k_dp, x_ts.shape)
         x_ts = (clipped + dp_sigma * dp_clip * noise).astype(x_ts.dtype)
     return ServerPayload(x_ts, eps_s, t_s, y)
 
 
 def client_losses(client_params, x0, y, key, sched: DiffusionSchedule,
-                  cut: CutPoint, apply_fn) -> Tuple[jnp.ndarray, ServerPayload]:
+                  cut: CutPoint, apply_fn, weights=None
+                  ) -> Tuple[jnp.ndarray, ServerPayload]:
     """Returns (client loss, server payload). Differentiable in
-    client_params only; the payload is stop-gradiented by construction."""
+    client_params only; the payload is stop-gradiented by construction.
+    ``weights`` (B,): optional per-sample validity mask over a padded batch
+    — masked rows carry zero loss/gradient weight, and because every draw
+    is row-keyed (``row_keys``) the real rows see exactly the randomness
+    their unpadded batch would. The payload is emitted for ALL rows; the
+    caller masks the server loss with the same weights."""
     B = x0.shape[0]
     k_tc, k_ec, k_pay = jax.random.split(key, 3)
-    eps_c = jax.random.normal(k_ec, x0.shape, dtype=jnp.float32)
+    eps_c = rowwise_normal(k_ec, x0.shape)
     if cut.t_cut > 0:
         t_c = cut.sample_client_t(k_tc, B)
         x_tc = sched.q_sample(x0, t_c, eps_c)
-        loss_c = mse_eps_loss(apply_fn, client_params, x_tc, t_c, y, eps_c)
+        loss_c = mse_eps_loss(apply_fn, client_params, x_tc, t_c, y, eps_c,
+                              weights=weights)
     else:
         loss_c = jnp.float32(0.0)
     payload = make_payload(x0, y, k_pay, sched, cut, eps_c=eps_c)
@@ -110,9 +133,10 @@ def client_losses(client_params, x0, y, key, sched: DiffusionSchedule,
 
 
 def server_loss(server_params, payload: ServerPayload,
-                sched: DiffusionSchedule, apply_fn) -> jnp.ndarray:
+                sched: DiffusionSchedule, apply_fn,
+                weights=None) -> jnp.ndarray:
     return mse_eps_loss(apply_fn, server_params, payload.x_ts, payload.t_s,
-                        payload.y, payload.eps_s)
+                        payload.y, payload.eps_s, weights=weights)
 
 
 # ---------------------------------------------------------------------------

@@ -20,6 +20,18 @@ import jax
 import jax.numpy as jnp
 
 
+def row_keys(key, batch: int):
+    """One PRNG key per batch row: ``fold_in(key, i)``. The single source
+    of the training protocol's per-sample keying discipline — every
+    per-sample ε/t draw (here and in core/protocol.py) goes through it, so
+    row i's randomness depends only on (key, i), never on the batch size.
+    That is what makes zero-padding a batch semantically inert: the masked
+    engine (core/collab.py) pads ragged clients to a common B_max and the
+    real rows still see exactly the draws their unpadded batch would
+    (padding-invariance, tests/test_ragged_properties.py)."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(batch))
+
+
 @dataclasses.dataclass(frozen=True)
 class CutPoint:
     T: int
@@ -46,16 +58,22 @@ class CutPoint:
         return self.T - self.t_cut
 
     # --- training timestep ranges (Alg. 1 line 6) -------------------------
+    # Timesteps are drawn ROW-KEYED (``row_keys`` below: one fold_in(key, i)
+    # per sample, scalar randint each) rather than as one batch-shaped draw:
+    # sample i's timestep then never depends on the batch size, which is
+    # what lets the masked ragged engine (core/collab.py) zero-pad a batch
+    # without perturbing the real rows' draws (padding-invariance).
     def sample_client_t(self, key, batch: int):
         """t_c ~ U[1, t_ζ] (integer, inclusive)."""
-        return jax.random.randint(key, (batch,), 1, max(self.t_cut, 1) + 1)
+        return jax.vmap(lambda k: jax.random.randint(
+            k, (), 1, max(self.t_cut, 1) + 1))(row_keys(key, batch))
 
     def sample_server_t(self, key, batch: int):
         """t_s ~ U[t_ζ, T] (integer, inclusive). With the paper's re-noising
         x_{t_s} = α(t_s)·x_{t_ζ} + σ(t_s)·ε_s these timesteps index the
         *global* schedule."""
-        return jax.random.randint(key, (batch,), max(self.t_cut, 1),
-                                  self.T + 1)
+        return jax.vmap(lambda k: jax.random.randint(
+            k, (), max(self.t_cut, 1), self.T + 1))(row_keys(key, batch))
 
     # --- inference schedules (Alg. 2) --------------------------------------
     @property

@@ -104,21 +104,37 @@ def client_attr_priors(cfg: SyntheticConfig, k: int, non_iid: bool,
 
 
 def make_client_datasets(key, cfg: SyntheticConfig, k: int, n_per_client: int,
-                         non_iid: bool = True
+                         non_iid: bool = True, sizes: List[int] = None
                          ) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Per-client datasets. ``sizes`` (len k) overrides ``n_per_client``
+    with a per-client sample count — the ragged / unbalanced regime the
+    masked engine (core/collab.py) trains without dropping samples. A
+    client's draws depend only on its own fold_in(key, c) stream, so
+    resizing one client never changes another's data."""
+    if sizes is not None and len(sizes) != k:
+        raise ValueError(f"sizes must have one entry per client: "
+                         f"len(sizes)={len(sizes)} != k={k}")
     priors = client_attr_priors(cfg, k, non_iid)
     out = []
     for c in range(k):
         kc = jax.random.fold_in(key, c)
-        out.append(make_dataset(kc, n_per_client, cfg, priors[c]))
+        n = n_per_client if sizes is None else int(sizes[c])
+        out.append(make_dataset(kc, n, cfg, priors[c]))
     return out
 
 
-def batches(x, y, batch_size: int, key=None):
-    """Yield (x, y) minibatches; shuffled when a key is given."""
+def batches(x, y, batch_size: int, key=None, drop_last: bool = True):
+    """Yield (x, y) minibatches; shuffled when a key is given.
+    ``drop_last=False`` also yields the trailing partial batch (ragged
+    batch SIZES — the masked engine pads and masks it; the dense engine
+    requires equal shapes and keeps the default)."""
     n = x.shape[0]
     idx = (jax.random.permutation(key, n) if key is not None
            else jnp.arange(n))
     for i in range(0, n - batch_size + 1, batch_size):
         sl = idx[i:i + batch_size]
+        yield x[sl], y[sl]
+    tail = n % batch_size
+    if not drop_last and tail:
+        sl = idx[n - tail:]
         yield x[sl], y[sl]

@@ -8,7 +8,10 @@ pass — global batch sharded over ("pod","data"), server model replicated
 (DESIGN.md §4) — and one VECTORIZED multi-client round (core/collab.py):
 k stacked client models sharded over a dedicated "clients" mesh axis,
 per-batch client updates vmapped, one concatenated server update, scanned
-over batches in a single program.
+over batches in a single program. The ``ragged_round`` entry compiles the
+MASKED engine — padded (n_batches, k, B_max) stacks plus a validity mask
+sharded like the data — proving heterogeneous-client rounds lower on the
+same mesh with no extra collectives beyond the dense round's.
 
     PYTHONPATH=src python -m repro.launch.collab_dryrun [--multi-pod] \
         [--image-size 64] [--batch 256] [--t-cut 200] [--T 1000] \
@@ -128,7 +131,13 @@ def main():
         (args.round_batches, k, per_client_b, ucfg.n_classes), jnp.float32),
         P(None, CLIENT_AXIS, "data", None))
     ckey = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=crep)
-    round_fn = make_vectorized_round(sched, cut, apply_fn, opt_cfg)
+    round_fn = make_vectorized_round(sched, cut, apply_fn, opt_cfg,
+                                     masked=False)
+    masked_round_fn = make_vectorized_round(sched, cut, apply_fn, opt_cfg,
+                                            masked=True)
+    mask = csh(jax.ShapeDtypeStruct(
+        (args.round_batches, k, per_client_b), jnp.float32),
+        P(None, CLIENT_AXIS, "data"))
 
     results = {}
     for name, fn, fargs, fmesh in (
@@ -140,6 +149,9 @@ def main():
              sched, cut, apply_fn), (params, keyv, yv), mesh),
         ("vectorized_round",
          round_fn, (cparams, copt, sparams, sopt, xs, ys, ckey), cmesh),
+        ("ragged_round",
+         masked_round_fn,
+         (cparams, copt, sparams, sopt, xs, ys, mask, ckey), cmesh),
     ):
         t0 = time.time()
         with fmesh:

@@ -12,9 +12,15 @@ FD-proxy fidelity + disclosure. This is deliverable (b)'s end-to-end
 example; benchmarks/ runs the full cut-point sweeps.
 
 Uses the vectorized multi-client engine (one jitted scan per round, clients
-stacked and sharded over a "clients" mesh axis) by default; ``--sequential``
-selects the per-(client, batch) Alg.-1 loop — the differential-testing
-oracle and the fallback for ragged per-client batch counts.
+stacked and sharded over a "clients" mesh axis) by default. Heterogeneous /
+unbalanced clients — ``--client-sizes 128,256,512`` — run through the SAME
+engine: batches are zero-padded to a common shape with a validity mask
+(core/collab.stack_round_batches) and every sample, including trailing
+partial batches, trains exactly once; there is no ragged fallback.
+``--sequential`` selects the per-(client, batch) Alg.-1 loop — the
+paper-faithful baseline (it drops no samples either — trailing partial
+batches just cost it one extra jit specialization per tail shape — but it
+dispatches one program per real (client, batch) pair).
 """
 from __future__ import annotations
 
@@ -32,7 +38,8 @@ from repro.core.collab import (CollabConfig, CollabState, sample_for_client,
 from repro.data.synthetic import (SyntheticConfig, batches,
                                   make_client_datasets)
 from repro.eval.fd_proxy import fd_proxy
-from repro.sharding.specs import make_client_mesh, shard_vectorized_state
+from repro.sharding.specs import (make_client_mesh, shard_round_batches,
+                                  shard_vectorized_state)
 
 
 def main(argv=None):
@@ -45,6 +52,11 @@ def main(argv=None):
     ap.add_argument("--image-size", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--n-per-client", type=int, default=512)
+    ap.add_argument("--client-sizes", default=None,
+                    help="comma-separated per-client dataset sizes, e.g. "
+                         "128,256,512 — unbalanced clients train through "
+                         "the masked engine with no dropped samples "
+                         "(overrides --n-per-client)")
     ap.add_argument("--denoiser", default="unet")
     ap.add_argument("--iid", action="store_true")
     ap.add_argument("--sequential", action="store_true",
@@ -61,37 +73,45 @@ def main(argv=None):
                         batch_size=args.batch)
     dcfg = SyntheticConfig(image_size=args.image_size,
                            n_attrs=ccfg.n_classes)
+    sizes = (None if args.client_sizes is None else
+             [int(s) for s in args.client_sizes.split(",")])
     data = make_client_datasets(key, dcfg, args.clients, args.n_per_client,
-                                non_iid=not args.iid)
+                                non_iid=not args.iid, sizes=sizes)
 
+    mesh = None
     if args.sequential:
         state, step_fn, apply_fn = setup(key, ccfg)
     else:
         vstate, round_fn, apply_fn = setup_vectorized(key, ccfg)
-        vstate = shard_vectorized_state(vstate,
-                                        make_client_mesh(args.clients))
+        mesh = make_client_mesh(args.clients)
+        vstate = shard_vectorized_state(vstate, mesh)
     engine = "sequential" if args.sequential else "vectorized"
     print(f"CollaFuse: k={args.clients} T={args.T} t_cut={args.t_cut} "
-          f"denoiser={args.denoiser} non_iid={not args.iid} engine={engine}")
+          f"denoiser={args.denoiser} non_iid={not args.iid} engine={engine}"
+          + (f" sizes={sizes}" if sizes else ""))
 
     for r in range(args.rounds):
         t0 = time.time()
         kr = jax.random.fold_in(key, 10_000 + r)
         per_client = []
         for c, (x, y) in enumerate(data):
-            bs = list(batches(x, y, args.batch, jax.random.fold_in(kr, c)))
+            bs = list(batches(x, y, args.batch, jax.random.fold_in(kr, c),
+                              drop_last=False))
             per_client.append(bs[:args.steps_per_round])
         if args.sequential:
             metrics = train_round(state, step_fn, per_client, kr)
         else:
-            xs, ys = stack_round_batches(per_client)
-            metrics = train_round_vectorized(vstate, round_fn, xs, ys, kr)
-        if not metrics or not metrics.get(0):
-            print(f"round {r}: no full batches "
-                  f"(n_per_client={args.n_per_client} < batch={args.batch}?)"
-                  " — skipped")
+            xs, ys, mask = stack_round_batches(per_client)
+            if xs is not None:
+                xs, ys, mask = shard_round_batches(mesh, xs, ys, mask)
+            metrics = train_round_vectorized(vstate, round_fn, xs, ys, kr,
+                                             mask=mask)
+        # a data-less client reports {}; the round is empty only when EVERY
+        # client does
+        m0 = next((m for m in metrics.values() if m), None)
+        if m0 is None:
+            print(f"round {r}: no client had any data — skipped")
             continue
-        m0 = metrics[0]
         print(f"round {r}: client_loss={m0['client_loss']:.4f} "
               f"server_loss={m0['server_loss']:.4f} "
               f"payload={m0['payload_bytes']:.0f}B "
@@ -103,6 +123,9 @@ def main(argv=None):
     # --- evaluation: fidelity per client + disclosure at the cut ---
     n_eval = args.eval_samples
     for c, (x, y) in enumerate(data[: min(2, args.clients)]):
+        if y.shape[0] == 0:
+            print(f"client {c}: no data — skipping eval")
+            continue
         ke = jax.random.fold_in(key, 20_000 + c)
         ys = y[:n_eval]
         samp, handoff = sample_for_client(state, c, ke, ys, ccfg, apply_fn,

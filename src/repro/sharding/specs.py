@@ -170,9 +170,24 @@ def client_opt_specs(stacked_params, client_axis: str = CLIENT_AXIS):
 
 
 def client_batch_spec(ndim: int, client_axis: str = CLIENT_AXIS) -> P:
-    """Round inputs xs/ys are (n_batches, n_clients, B, ...): shard the
-    client axis (dim 1), replicate the scanned batch dim."""
+    """Round inputs xs/ys/mask are (n_batches, n_clients, B, ...) — the
+    validity mask of the masked ragged engine is just the ndim=3 case:
+    shard the client axis (dim 1), replicate the scanned batch dim."""
     return P(None, client_axis, *([None] * (ndim - 2)))
+
+
+def shard_round_batches(mesh, xs, ys, mask=None):
+    """Place padded round stacks (and the ragged-validity mask, when given)
+    on ``mesh`` with the client axis sharded — the data-side counterpart of
+    ``shard_vectorized_state``. The mask follows xs/ys's spec on its three
+    shared dims, so a (client, batch) cell and its validity always live on
+    the same shard (masking is local; no collectives)."""
+    put = lambda a: jax.device_put(
+        a, NamedSharding(mesh, sanitize_spec(client_batch_spec(a.ndim),
+                                             a.shape, mesh)))
+    if mask is None:
+        return put(xs), put(ys), None
+    return put(xs), put(ys), put(mask)
 
 
 def make_client_mesh(n_clients: int):

@@ -3,8 +3,11 @@
 Differential testing: the vectorized round (vmap over the stacked client
 axis + lax.scan over batches + one concatenated server update per batch)
 must match ``train_round_reference`` — identical semantics and PRNG
-discipline, plain Python loops — on client AND server state. Plus the
-GM/ICM cut-point edge cases, the stacked-state plumbing, the zero-batch
+discipline, plain Python loops — on client AND server state; ragged
+fixtures (unequal per-client batch counts AND batch sizes) run the same
+comparison through the masked engine with zero-padded stacks. Plus the
+GM/ICM cut-point edge cases, the stacked-state plumbing, the no-dropped-
+samples regression (per-client seen-sample counter), the zero-batch
 regression for the sequential path, and the "clients" mesh-axis specs.
 """
 import dataclasses
@@ -82,17 +85,45 @@ def test_to_vectorized_roundtrip(key):
                         rtol=0, atol=0)
 
 
-def test_stack_round_batches(key):
+def test_stack_round_batches_pads(key):
+    """Ragged clients pad to (n_batches_max, k, B_max, ...) + 0/1 mask —
+    every sample represented exactly once, nothing truncated."""
     per_client = [[(jnp.ones((4, 8, 8, 3)), jnp.ones((4, 2)))] * 3,
-                  [(jnp.ones((4, 8, 8, 3)), jnp.ones((4, 2)))] * 2]
-    xs, ys = stack_round_batches(per_client)
-    assert xs.shape == (2, 2, 4, 8, 8, 3)  # truncated to shortest client
-    assert ys.shape == (2, 2, 4, 2)
-    assert stack_round_batches([[], [(jnp.ones((1,)), jnp.ones((1,)))]]) \
-        == (None, None)
+                  [(2 * jnp.ones((2, 8, 8, 3)), jnp.ones((2, 2)))] * 2]
+    xs, ys, mask = stack_round_batches(per_client)
+    assert xs.shape == (3, 2, 4, 8, 8, 3)      # max count, max batch size
+    assert ys.shape == (3, 2, 4, 2)
+    assert mask.shape == (3, 2, 4)
+    np.testing.assert_allclose(np.asarray(mask.sum(axis=(0, 2))), [12, 4])
+    # padded cells are zero and masked; real cells keep their values
+    assert float(xs[2, 1].sum()) == 0.0 and float(mask[2, 1].sum()) == 0.0
+    np.testing.assert_allclose(np.asarray(xs[0, 1, :2]), 2.0)
+    assert float(mask[0, 1, 2]) == 0.0          # size-2 batch padded to 4
+    # a client with zero batches is fully masked, not a round-killer
+    xs2, ys2, m2 = stack_round_batches(
+        [[], [(jnp.ones((1, 2)), jnp.ones((1, 2)))]])
+    assert xs2.shape == (1, 2, 1, 2) and float(m2[0, 0].sum()) == 0.0
+    assert stack_round_batches([[], []]) == (None, None, None)
     # an empty round is a no-op, not a crash (found driving collab_train
     # with n_per_client < batch_size)
     assert train_round_vectorized(None, None, None, None, None) == {}
+
+
+def test_stack_round_batches_truncation_warns(key):
+    """The legacy dense layout (pad=False) still truncates to the shortest
+    client — but no longer silently: it must report the dropped count."""
+    per_client = [[(jnp.ones((4, 2)), jnp.ones((4, 2)))] * 3,
+                  [(jnp.ones((4, 2)), jnp.ones((4, 2)))] * 1]
+    with pytest.warns(UserWarning, match=r"dropping 2 batch"):
+        xs, ys = stack_round_batches(per_client, pad=False)
+    assert xs.shape == (1, 2, 4, 2)
+    # equal counts: no warning
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        stack_round_batches([per_client[0], per_client[0]], pad=False)
+    assert stack_round_batches([[], [(jnp.ones((1,)), jnp.ones((1,)))]],
+                               pad=False) == (None, None)
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +181,177 @@ def test_vectorized_matches_reference_tiny(key, t_cut):
     assert set(m[0]) >= {"client_loss", "server_loss", "payload_bytes"}
 
 
+# ---------------------------------------------------------------------------
+# masked ragged rounds == reference oracle (no sequential fallback,
+# no dropped samples)
+# ---------------------------------------------------------------------------
+
+
+def _ragged_fixture(key, counts=(1, 3, 5), sizes=(2, 8), n_classes=4):
+    """Client c brings counts[c] batches whose sizes alternate over
+    ``sizes`` — unequal batch counts AND unequal batch sizes at once."""
+    per_client = []
+    for c, n_c in enumerate(counts):
+        bs = []
+        for b in range(n_c):
+            B = sizes[(b + c) % len(sizes)]
+            kk = jax.random.fold_in(key, 100 * c + b)
+            bs.append((jax.random.normal(kk, (B, 8, 8, 3)),
+                       jax.nn.one_hot(
+                           jax.random.randint(kk, (B,), 0, n_classes),
+                           n_classes)))
+        per_client.append(bs)
+    return per_client
+
+
+@pytest.mark.ragged
+@pytest.mark.parametrize("t_cut", [30, 0, 100])
+@pytest.mark.parametrize("counts,sizes", [
+    ((1, 3, 5), (2, 8)),     # the ISSUE's canonical ragged fixture
+    ((2, 2, 2), (8, 8)),     # degenerate all-equal (covered bitwise below)
+    ((5, 1, 3), (8, 2)),
+])
+def test_masked_matches_reference_ragged(key, t_cut, counts, sizes):
+    """Ragged rounds run through the ONE vectorized engine — no sequential
+    fallback — and match the masked reference oracle per-leaf at fp32
+    tolerance, including the GM/ICM degenerate cuts."""
+    cut = CutPoint(100, t_cut)
+    opt_cfg = AdamWConfig(lr=1e-2)
+    per_client = _ragged_fixture(key, counts, sizes)
+    xs, ys, mask = stack_round_batches(per_client)
+    assert xs.shape[:2] == (max(counts), len(counts))
+    round_fn = make_vectorized_round(SCHED, cut, tiny_apply, opt_cfg)
+
+    vstate = to_vectorized(_tiny_states())
+    m = train_round_vectorized(vstate, round_fn, xs, ys, key, mask=mask)
+
+    ref = _tiny_states()
+    train_round_reference(ref, xs, ys, key, SCHED, cut, tiny_apply, opt_cfg,
+                          mask=mask)
+
+    _assert_trees_close(to_sequential(vstate).client_params,
+                        ref.client_params, atol=1e-7, rtol=1e-6)
+    _assert_trees_close(vstate.server_params, ref.server_params,
+                        atol=1e-7, rtol=1e-6)
+    _assert_trees_close(to_sequential(vstate).client_opt, ref.client_opt,
+                        atol=1e-7, rtol=1e-6)
+    _assert_trees_close(vstate.server_opt, ref.server_opt,
+                        atol=1e-7, rtol=1e-6)
+    assert vstate.step == ref.step == sum(counts)
+    for c in range(len(counts)):
+        assert "client_loss" in m[c]
+
+
+@pytest.mark.ragged
+def test_masked_all_ones_degenerate_bitwise(key):
+    """The degenerate all-equal case: an all-ones mask reproduces today's
+    dense behavior bit-for-bit on the eager oracle (identical update
+    sequence, weighted mean == mean exactly), and to a few float32 ulps on
+    the compiled engine (XLA fuses the two loss graphs differently)."""
+    cut = CutPoint(100, 30)
+    opt_cfg = AdamWConfig(lr=1e-2)
+    xs, ys = _data(key)
+    ones = jnp.ones(xs.shape[:3], jnp.float32)
+
+    dense, masked = _tiny_states(), _tiny_states()
+    train_round_reference(dense, xs, ys, key, SCHED, cut, tiny_apply,
+                          opt_cfg)
+    train_round_reference(masked, xs, ys, key, SCHED, cut, tiny_apply,
+                          opt_cfg, mask=ones)
+    for a, b in zip(
+            jax.tree.leaves((dense.client_params, dense.server_params,
+                             dense.client_opt, dense.server_opt)),
+            jax.tree.leaves((masked.client_params, masked.server_params,
+                             masked.client_opt, masked.server_opt))):
+        assert bool(jnp.all(a == b))            # bit-for-bit
+
+    vd = to_vectorized(_tiny_states())
+    vm = to_vectorized(_tiny_states())
+    dense_fn = make_vectorized_round(SCHED, cut, tiny_apply, opt_cfg,
+                                     masked=False)
+    masked_fn = make_vectorized_round(SCHED, cut, tiny_apply, opt_cfg)
+    out = dense_fn(vd.client_params, vd.client_opt, vd.server_params,
+                   vd.server_opt, xs, ys, key)
+    vd.client_params, vd.client_opt, vd.server_params, vd.server_opt = \
+        out[:4]
+    train_round_vectorized(vm, masked_fn, xs, ys, key, mask=ones)
+    _assert_trees_close(vm.client_params, vd.client_params,
+                        atol=1e-7, rtol=1e-6)
+    _assert_trees_close(vm.server_params, vd.server_params,
+                        atol=1e-7, rtol=1e-6)
+    _assert_trees_close(vm.client_opt, vd.client_opt, atol=1e-7, rtol=1e-6)
+    _assert_trees_close(vm.server_opt, vd.server_opt, atol=1e-7, rtol=1e-6)
+
+
+@pytest.mark.ragged
+def test_masked_engine_consumes_every_sample(key):
+    """No-dropped-samples regression for the ragged engine: the per-client
+    seen-sample counter (mask row sums) must equal each client's dataset
+    size exactly — including trailing partial batches — and every client's
+    model must actually move."""
+    from repro.data.synthetic import SyntheticConfig, batches, \
+        make_client_datasets
+    dcfg = SyntheticConfig(image_size=8, n_attrs=4)
+    sizes = [5, 12, 7]
+    data = make_client_datasets(key, dcfg, 3, 0, sizes=sizes)
+    per_client = [list(batches(x, y, 4, drop_last=False)) for x, y in data]
+    assert [len(b) for b in per_client] == [2, 3, 2]
+    xs, ys, mask = stack_round_batches(per_client)
+    seen = np.asarray(mask.sum(axis=(0, 2)), np.int64)
+    assert seen.tolist() == sizes               # every sample, exactly once
+
+    cut = CutPoint(100, 30)
+    round_fn = make_vectorized_round(SCHED, cut, tiny_apply,
+                                     AdamWConfig(lr=1e-2))
+    vstate = to_vectorized(_tiny_states())
+    before = jax.tree.map(jnp.copy, vstate.client_params)
+    m = train_round_vectorized(vstate, round_fn, xs, ys, key, mask=mask)
+    for c in range(3):
+        assert float(jnp.abs(vstate.client_params["a"][c]
+                             - before["a"][c])) > 0
+        assert np.isfinite(m[c]["client_loss"])
+    assert vstate.step == sum(len(b) for b in per_client)
+    # wire-cost metric counts REAL rows, not the padded B_max: last real
+    # batches hold 1 / 4 / 3 samples (sizes 5,12,7 at batch 4)
+    ratios = [m[c]["payload_bytes"] / m[0]["payload_bytes"]
+              for c in range(3)]
+    np.testing.assert_allclose(ratios, [1.0, 4.0, 3.0])
+
+
+@pytest.mark.ragged
+def test_masked_metrics_last_real_batch(key):
+    """Per-client metrics come from the client's last REAL batch, and a
+    fully-padded client reports {} instead of inventing numbers."""
+    cut = CutPoint(100, 30)
+    round_fn = make_vectorized_round(SCHED, cut, tiny_apply,
+                                     AdamWConfig(lr=1e-2))
+    per_client = _ragged_fixture(key, counts=(2, 0, 4), sizes=(4, 4))
+    xs, ys, mask = stack_round_batches(per_client)
+    vstate = to_vectorized(_tiny_states())
+    before = jax.tree.map(jnp.copy, vstate.client_params)
+    m = train_round_vectorized(vstate, round_fn, xs, ys, key, mask=mask)
+    assert m[1] == {}                           # no-data client stays silent
+    assert "client_loss" in m[0] and "client_loss" in m[2]
+    # ... and its params/opt (incl. the AdamW step counter) never moved
+    assert float(vstate.client_params["a"][1]) == float(before["a"][1])
+    assert int(vstate.client_opt["step"][1]) == 0
+    assert int(vstate.client_opt["step"][0]) == 2
+    assert int(vstate.client_opt["step"][2]) == 4
+    # a trailing ALL-padding batch slot skipped the server update — its
+    # zeroed metrics row must not be reported as the round's server loss
+    xs2 = jnp.pad(xs, [(0, 1), (0, 0), (0, 0), (0, 0), (0, 0), (0, 0)])
+    ys2 = jnp.pad(ys, [(0, 1), (0, 0), (0, 0), (0, 0)])
+    mask2 = jnp.pad(mask, [(0, 1), (0, 0), (0, 0)])
+    v2 = to_vectorized(_tiny_states())
+    m2 = train_round_vectorized(v2, round_fn, xs2, ys2, key, mask=mask2)
+    assert m2[0]["server_loss"] == m[0]["server_loss"] != 0.0
+    assert m2[0]["server_grad_norm"] == m[0]["server_grad_norm"] != 0.0
+    # an entirely-padded round is a metrics-free no-op
+    assert train_round_vectorized(
+        to_vectorized(_tiny_states()), round_fn, xs, ys, key,
+        mask=jnp.zeros_like(mask)) == {c: {} for c in range(3)}
+
+
 @pytest.mark.slow
 def test_vectorized_matches_reference_unet(key):
     """Same differential test through the real (tiny) U-Net denoiser.
@@ -177,6 +379,33 @@ def test_vectorized_matches_reference_unet(key):
                         sstate.client_params, atol=1e-5, rtol=1e-4)
     _assert_trees_close(vstate.server_params, sstate.server_params,
                         atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.slow
+@pytest.mark.ragged
+def test_masked_matches_reference_unet_ragged(key):
+    """Ragged differential test through the real (tiny) U-Net denoiser:
+    the mask must survive vmap's grouped-conv lowering too. Tolerance as
+    the dense U-Net test (grouped-conv reduction-order ulps)."""
+    cfg = CollabConfig(n_clients=3, T=40, t_cut=10, image_size=8,
+                       batch_size=4, n_classes=4)
+    vstate, round_fn, apply_fn = setup_vectorized(key, cfg)
+    sstate, _, _ = setup(key, cfg)  # same init keys -> same params
+
+    per_client = _ragged_fixture(jax.random.fold_in(key, 7),
+                                 counts=(1, 3, 2), sizes=(2, 4))
+    xs, ys, mask = stack_round_batches(per_client)
+    rkey = jax.random.fold_in(key, 2)
+
+    train_round_vectorized(vstate, round_fn, xs, ys, rkey, mask=mask)
+    train_round_reference(sstate, xs, ys, rkey, cfg.sched(), cfg.cut(),
+                          apply_fn, AdamWConfig(lr=cfg.lr), mask=mask)
+
+    _assert_trees_close(to_sequential(vstate).client_params,
+                        sstate.client_params, atol=1e-5, rtol=1e-4)
+    _assert_trees_close(vstate.server_params, sstate.server_params,
+                        atol=1e-5, rtol=1e-4)
+    assert vstate.step == sstate.step == 6
 
 
 def test_vectorized_gm_edge(key):

@@ -25,6 +25,54 @@ def test_average_weights_exact():
     np.testing.assert_allclose(np.asarray(avg["w"]), [2.0, 3.0])
 
 
+def test_average_weights_unequal_sizes():
+    """Raw per-client dataset sizes are valid weights: n_c/Σn weighted mean
+    ([McMahan et al. 2017] for unbalanced clients — the FedAvg face of the
+    ragged-client story)."""
+    a = {"w": jnp.array([0.0, 8.0])}
+    b = {"w": jnp.array([4.0, 0.0])}
+    avg = average_weights([a, b], weights=[1, 3])   # sizes 1 and 3
+    np.testing.assert_allclose(np.asarray(avg["w"]), [3.0, 2.0])
+    # normalization is internal: scaled weights give the same answer
+    avg2 = average_weights([a, b], weights=[0.25, 0.75])
+    np.testing.assert_allclose(np.asarray(avg2["w"]), np.asarray(avg["w"]))
+    # a zero-size client contributes nothing
+    avg3 = average_weights([a, b], weights=[0, 5])
+    np.testing.assert_allclose(np.asarray(avg3["w"]), np.asarray(b["w"]))
+    # dtype preserved through the fp32 accumulation
+    c = {"w": jnp.array([1, 3], jnp.int32)}
+    assert average_weights([c, c], weights=[2, 6])["w"].dtype == jnp.int32
+
+
+def test_average_weights_bad_weights():
+    a = {"w": jnp.array([1.0])}
+    with pytest.raises(ValueError, match="one weight per client"):
+        average_weights([a, a], weights=[1.0])
+    with pytest.raises(ValueError, match="non-negative"):
+        average_weights([a, a], weights=[1.0, -1.0])
+    with pytest.raises(ValueError, match="non-negative"):
+        average_weights([a, a], weights=[0.0, 0.0])
+
+
+def test_fedavg_round_weights_by_samples(key):
+    """A round with unbalanced per-client data aggregates by sample count:
+    a client holding 3/4 of the samples pulls the global model 3x harder."""
+    sched = DiffusionSchedule.linear(50)
+    st = fedavg_setup(key, init_one, 2)
+    # deterministic "training": each local step adds +1 (client 0) or -1
+    # (client 1) to a; aggregation weight is all that differs
+    def fake_step(params, opt, x0, y, k):
+        delta = 1.0 if float(x0[0, 0, 0, 0]) > 0 else -1.0
+        return {"a": params["a"] + delta, "b": params["b"]}, opt, 0.0
+    x_pos = jnp.ones((2, 4, 4, 3))
+    x_neg = -jnp.ones((6, 4, 4, 3))
+    y = jnp.zeros((2, 4))
+    m = fedavg_round(st, fake_step, [[(x_pos, y)], [(x_neg, y)]], key)
+    # sizes 2 vs 6 -> weights 1/4, 3/4: a = 0.5 + (1/4)(+1) + (3/4)(-1)
+    np.testing.assert_allclose(float(st.global_params["a"]), 0.0, atol=1e-6)
+    assert m["comm_bytes_total"] > 0
+
+
 def test_fedavg_round_trains_and_syncs(key):
     sched = DiffusionSchedule.linear(50)
     st = fedavg_setup(key, init_one, 2)

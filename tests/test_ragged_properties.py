@@ -1,0 +1,140 @@
+"""Property tests for the masked ragged-round engine (core/collab.py).
+
+Two invariants lock the masking semantics down:
+
+* **Padding invariance** — appending masked rows (growing B_max) and/or
+  masked batch slots (growing n_batches_max) to a round changes NOTHING:
+  client params/opt, server params/opt, and the step count are identical
+  (fp32 allclose; shapes change, so XLA may re-associate reductions by a
+  few ulps — the padded terms themselves are exact zeros).
+* **All-ones mask == unmasked path** — a mask that marks every sample real
+  degrades exactly to the dense engine (and bit-for-bit on the eager
+  oracle; see test_collab_engine.test_masked_all_ones_degenerate_bitwise).
+
+Runs under the real ``hypothesis`` package when installed, or the seeded
+boundary-inclusive fallback in ``_hypothesis_compat`` on the bare
+container (the invariants still execute, minus shrinking).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+from repro.core.collab import (CollabState, make_vectorized_round,
+                               to_sequential, to_vectorized,
+                               train_round_vectorized)
+from repro.core.schedules import DiffusionSchedule
+from repro.core.splitting import CutPoint
+from repro.optim.adamw import AdamWConfig, init_opt_state
+
+SCHED = DiffusionSchedule.linear(100)
+OPT = AdamWConfig(lr=1e-2)
+CUT = CutPoint(100, 30)
+
+
+def tiny_apply(params, x, t, y):
+    return x * params["a"] + params["b"]
+
+
+def _states(k=3):
+    tp = lambda v: {"a": jnp.float32(v), "b": jnp.float32(0.0)}
+    cp = [tp(0.4 + 0.1 * c) for c in range(k)]
+    return CollabState(
+        server_params=tp(0.5), server_opt=init_opt_state(tp(0.5)),
+        client_params=cp, client_opt=[init_opt_state(p) for p in cp])
+
+
+def _ragged_round(key, counts=(2, 1, 3), b=4):
+    nb, k = max(counts), len(counts)
+    xs = jax.random.normal(key, (nb, k, b, 8, 8, 3))
+    ys = jnp.zeros((nb, k, b, 4)).at[..., 0].set(1.0)
+    mask = jnp.zeros((nb, k, b))
+    for c, n_c in enumerate(counts):
+        mask = mask.at[:n_c, c, :].set(1.0)
+    return xs, ys, mask
+
+
+def _pad_round(xs, ys, mask, extra_rows, extra_batches):
+    """Append masked rows (batch-size padding) and masked batch slots."""
+    pad_spec = [(0, extra_batches), (0, 0), (0, extra_rows)]
+    xs = jnp.pad(xs, pad_spec + [(0, 0)] * (xs.ndim - 3))
+    ys = jnp.pad(ys, pad_spec + [(0, 0)] * (ys.ndim - 3))
+    mask = jnp.pad(mask, pad_spec)
+    return xs, ys, mask
+
+
+def _run(xs, ys, mask, key):
+    round_fn = make_vectorized_round(SCHED, CUT, tiny_apply, OPT)
+    v = to_vectorized(_states())
+    train_round_vectorized(v, round_fn, xs, ys, key, mask=mask)
+    return v
+
+
+def _assert_same_state(a, b, **tol):
+    for la, lb in zip(
+            jax.tree.leaves((a.client_params, a.client_opt,
+                             a.server_params, a.server_opt)),
+            jax.tree.leaves((b.client_params, b.client_opt,
+                             b.server_params, b.server_opt))):
+        np.testing.assert_allclose(np.asarray(la, np.float32),
+                                   np.asarray(lb, np.float32), **tol)
+    assert a.step == b.step
+
+
+@pytest.mark.ragged
+@hypothesis.settings(max_examples=6, deadline=None)
+@hypothesis.given(extra_rows=st.integers(min_value=0, max_value=3),
+                  extra_batches=st.integers(min_value=0, max_value=2))
+def test_padding_invariance(extra_rows, extra_batches):
+    """Appending masked rows/batches to any client never changes client or
+    server params, optimizer state, or the step count."""
+    key = jax.random.PRNGKey(3)
+    xs, ys, mask = _ragged_round(key)
+    base = _run(xs, ys, mask, key)
+    xs2, ys2, mask2 = _pad_round(xs, ys, mask, extra_rows, extra_batches)
+    padded = _run(xs2, ys2, mask2, key)
+    _assert_same_state(padded, base, atol=1e-7, rtol=1e-6)
+
+
+@pytest.mark.ragged
+@hypothesis.settings(max_examples=4, deadline=None)
+@hypothesis.given(client=st.integers(min_value=0, max_value=2),
+                  extra_rows=st.integers(min_value=1, max_value=3))
+def test_padding_invariance_single_client(client, extra_rows):
+    """Padding only ONE client's rows (garbage, not zeros, under the mask)
+    perturbs nobody — masked values must be unread, not just zero."""
+    key = jax.random.PRNGKey(5)
+    xs, ys, mask = _ragged_round(key)
+    base = _run(xs, ys, mask, key)
+    # poison the padded region of one client with large garbage
+    nb, k, b = mask.shape
+    xs2, ys2, mask2 = _pad_round(xs, ys, mask, extra_rows, 0)
+    poison = 1e6 * jnp.ones(xs2.shape[3:])
+    xs2 = xs2.at[:, client, b:].set(poison)
+    padded = _run(xs2, ys2, mask2, key)
+    _assert_same_state(padded, base, atol=1e-7, rtol=1e-6)
+
+
+@pytest.mark.ragged
+@hypothesis.settings(max_examples=4, deadline=None)
+@hypothesis.given(nb=st.integers(min_value=1, max_value=3),
+                  b=st.sampled_from([2, 8]))
+def test_all_ones_mask_equals_unmasked(nb, b):
+    """A mask of all ones IS the dense path: same params/opt as the
+    maskless PR-1 engine body on the same inputs."""
+    key = jax.random.PRNGKey(7)
+    k = 3
+    xs = jax.random.normal(key, (nb, k, b, 8, 8, 3))
+    ys = jnp.zeros((nb, k, b, 4)).at[..., 0].set(1.0)
+    masked = _run(xs, ys, jnp.ones((nb, k, b)), key)
+
+    dense_fn = make_vectorized_round(SCHED, CUT, tiny_apply, OPT,
+                                     masked=False)
+    dense = to_vectorized(_states())
+    out = dense_fn(dense.client_params, dense.client_opt,
+                   dense.server_params, dense.server_opt, xs, ys, key)
+    (dense.client_params, dense.client_opt, dense.server_params,
+     dense.server_opt) = out[:4]
+    dense.step += nb * k
+    _assert_same_state(masked, dense, atol=1e-7, rtol=1e-6)
