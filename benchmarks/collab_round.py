@@ -30,8 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core.collab import (CollabConfig, make_vectorized_round, setup,
-                               setup_vectorized, stack_round_batches,
+from repro.core.collab import (CollabConfig, bucket_round_batches,
+                               make_vectorized_round, padded_row_waste,
+                               setup, setup_vectorized, stack_round_batches,
                                train_round, train_round_vectorized)
 from repro.core.protocol import make_collab_step
 from repro.core.schedules import DiffusionSchedule
@@ -126,9 +127,14 @@ def _bench_dit(key, k: int, nb: int):
 
 
 def _bench_ragged(key, skew=(1, 2, 4), nb_unit: int = 2, batch: int = 8):
-    """Ragged-skew regime: client c brings ``skew[c] * nb_unit`` batches.
+    """Ragged-skew regime: client c brings ``skew[c] * nb_unit`` batches,
+    and batch SIZES alternate ``batch``/``batch // 4`` (heavy row skew).
     Sequential = one dispatch per real (client, batch) pair; masked engine
-    = ONE program over the padded (max_nb, k, B) stack + validity mask."""
+    = ONE program over the padded (max_nb, k, B_max) stack + validity
+    mask.  The bucketing pass (``bucket_round_batches``: sort by size,
+    pad per width bucket) cuts the padded-ROW waste the single stack pays;
+    ``pad_waste`` (all-padding cells) and ``row_waste`` old/new are both
+    reported."""
     sched = DiffusionSchedule.linear(100)
     cut = CutPoint(100, 30)
     opt_cfg = AdamWConfig(lr=1e-3)
@@ -136,13 +142,15 @@ def _bench_ragged(key, skew=(1, 2, 4), nb_unit: int = 2, batch: int = 8):
     params = lambda: {"a": jnp.float32(0.5), "b": jnp.float32(0.0)}
     k = len(skew)
     counts = [s * nb_unit for s in skew]
+    sizes = lambda b: batch if b % 2 == 0 else max(batch // 4, 1)
     per_client = []
     for c, n_c in enumerate(counts):
         kc = jax.random.fold_in(key, c)
         per_client.append([
-            (jax.random.normal(jax.random.fold_in(kc, b), (batch, 8, 8, 3)),
+            (jax.random.normal(jax.random.fold_in(kc, b),
+                               (sizes(b), 8, 8, 3)),
              jax.nn.one_hot(
-                 jax.random.randint(jax.random.fold_in(kc, b), (batch,),
+                 jax.random.randint(jax.random.fold_in(kc, b), (sizes(b),),
                                     0, 4), 4))
             for b in range(n_c)])
 
@@ -183,6 +191,29 @@ def _bench_ragged(key, skew=(1, 2, 4), nb_unit: int = 2, batch: int = 8):
     emit(f"collab_round/ragged_masked_k{k}_{tag}", us_vec,
          f"steps={steps};pad_waste={waste}cells;"
          f"speedup={us_seq / us_vec:.2f}x")
+
+    # --- bucketing pass: sorted width buckets vs the single padded stack
+    buckets = bucket_round_batches(per_client)
+    waste_old = padded_row_waste((xs, ys, mask))
+    waste_new = padded_row_waste(buckets)
+    bcp = jax.tree.map(lambda *t: jnp.stack(t), *[params() for _ in range(k)])
+    bco = jax.tree.map(lambda *t: jnp.stack(t),
+                       *[init_opt_state(params()) for _ in range(k)])
+    bsp, bso = params(), init_opt_state(params())
+
+    def bucketed():
+        nonlocal bcp, bco, bsp, bso
+        for i, (bx, by, bm) in enumerate(buckets):
+            bcp, bco, bsp, bso, m = round_fn(
+                bcp, bco, bsp, bso, bx, by, bm, jax.random.fold_in(key, i))
+        jax.block_until_ready(m["client_loss"])
+
+    us_bucket = _median_round_us(bucketed)
+    emit(f"collab_round/ragged_bucketed_k{k}_{tag}", us_bucket,
+         f"steps={steps};buckets={len(buckets)};"
+         f"row_waste_old={waste_old};row_waste_new={waste_new};"
+         f"row_waste_cut={1 - waste_new / max(waste_old, 1):.0%};"
+         f"speedup_vs_seq={us_seq / us_bucket:.2f}x")
 
 
 def main(quick: bool = False):

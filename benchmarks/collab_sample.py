@@ -1,0 +1,101 @@
+"""Collaborative-inference benchmark: the batched sampling engine
+(core/sampler.make_sample_engine) vs sequential per-request Alg.-2
+sampling, at the protocol scale (toy linear denoiser, per-step model
+compute ~0) that isolates what the engine removes — per-request Python
+dispatch and per-step device round-trips.
+
+Regime: k clients with MIXED cut points in a 1:2:4 ratio (per-client
+compute budgets), 2 requests per client with labels drawn from 2 classes,
+so the queue carries duplicate (y, t_ζ) pairs and the planner's dedup
+pass has real work.  Sequential = one jitted per-cut Alg.-2 program per
+request (the pre-engine serving story); engine = ONE jitted call for the
+whole wave.  Reported per entry: samples/sec, speedup, and the server
+model calls the (y, t_ζ) dedup avoided (``server_calls_saved``).
+
+Like collab_round.py's toy entries this is the dispatch-bound acceptance
+regime; compute-bound backbones shift the win to the sharded client axis
+(sharding/specs.sample_stack_spec) on accelerator meshes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.sample_plan import SampleRequest, plan_requests
+from repro.core.sampler import make_per_request_sampler, make_sample_engine
+from repro.core.schedules import DiffusionSchedule
+
+
+def _median_us(fn, iters: int = 5) -> float:
+    fn()  # warmup (compile)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2] * 1e6
+
+
+def _bench_engine(key, k: int, T: int = 56, batch: int = 8,
+                  reqs_per_client: int = 2, n_classes: int = 4):
+    sched = DiffusionSchedule.linear(T)
+    apply_fn = lambda p, x, t, y: x * p["a"] + p["b"]
+    sp = {"a": jnp.float32(0.2), "b": jnp.float32(0.0)}
+    cp = {"a": jnp.linspace(0.1, 0.5, k), "b": jnp.zeros((k,))}
+    base = max(T // 8, 1)
+    cuts = [base * (2 ** (c % 3)) for c in range(k)]        # 1:2:4 mix
+    shape = (batch, 8, 8, 3)
+
+    eye = np.eye(n_classes, dtype=np.float32)
+    reqs = []
+    for i in range(reqs_per_client * k):
+        c = i % k
+        y = np.broadcast_to(eye[i % 2], (batch, n_classes)).copy()
+        reqs.append(SampleRequest(client=c, t_cut=cuts[c], y=y))
+    plan = plan_requests(reqs, T, n_clients=k)
+    R = plan.n_requests
+
+    engine = make_sample_engine(sched, apply_fn, shape[1:])
+
+    def run_engine():
+        out, _ = engine(sp, cp, key, plan.tables)
+        jax.block_until_ready(out)
+
+    # sequential baseline: one jitted Alg.-2 program per request, compiled
+    # once per distinct cut — the same harness collab_serve --compare uses
+    fn_for = make_per_request_sampler(sched, apply_fn, shape)
+    ys = [jnp.asarray(r.y) for r in reqs]
+
+    def run_sequential():
+        out = None
+        for i, r in enumerate(reqs):
+            cpar = jax.tree.map(lambda l: l[r.client], cp)
+            out = fn_for(r.t_cut)(sp, cpar, jax.random.fold_in(key, i),
+                                  ys[i])
+        jax.block_until_ready(out)
+
+    us_seq = _median_us(run_sequential)
+    us_eng = _median_us(run_engine)
+    n_samples = R * batch
+    emit(f"collab_sample/sequential_k{k}_r{R}", us_seq,
+         f"samples_per_s={n_samples / (us_seq / 1e6):.0f}")
+    emit(f"collab_sample/engine_k{k}_r{R}", us_eng,
+         f"samples_per_s={n_samples / (us_eng / 1e6):.0f};"
+         f"speedup={us_seq / us_eng:.2f}x;"
+         f"groups={plan.n_groups};"
+         f"server_calls_saved={plan.server_steps_saved}")
+
+
+def main(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    for k in ([5] if quick else [2, 5]):
+        _bench_engine(jax.random.fold_in(key, k), k,
+                      T=24 if quick else 56)
+
+
+if __name__ == "__main__":
+    main()

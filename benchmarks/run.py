@@ -5,6 +5,7 @@
 Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
 Suites:
   collab_round         sequential Alg.-1 loop vs vectorized round engine
+  collab_sample        per-request Alg.-2 sampling vs batched sampling engine
   fidelity_sweep       paper Fig. 4 (top): FD vs cut point, GM/ICM baselines
   attr_inference_sweep paper Fig. 7: attribute-inference F1 vs cut point
   inversion_sweep      paper Fig. 8: cross-client inversion vs cut point
@@ -23,7 +24,7 @@ import os
 import sys
 import time
 
-SUITES = ["kernel_bench", "collab_round", "compute_split",
+SUITES = ["kernel_bench", "collab_round", "collab_sample", "compute_split",
           "attr_inference_sweep", "inversion_sweep", "m_remap_ablation",
           "beyond_paper", "fl_comparison", "dp_payload", "fidelity_sweep"]
 

@@ -3,14 +3,18 @@
 #   scripts/ci.sh            - full suite
 #   scripts/ci.sh tier1      - fast tier: everything but the slow marker
 #                              (includes the masked-engine equivalence and
-#                              ragged property tests — they are tier-1)
+#                              ragged property tests — they are tier-1),
+#                              plus the collab_serve driver smoke (queue ->
+#                              plan -> one engine call -> report)
 #   scripts/ci.sh slow       - only the long system/sampler/U-Net tests
 #   scripts/ci.sh <pytest args...>  - passed through unchanged
 set -euo pipefail
 cd "$(dirname "$0")/.."
 run() { PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"; }
 case "${1:-}" in
-  tier1) shift; run -m "not slow" "$@";;
+  tier1) shift; run -m "not slow" "$@"
+         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+           python -m repro.launch.collab_serve --smoke;;
   slow)  shift; run -m "slow" "$@";;
   *)     run "$@";;
 esac

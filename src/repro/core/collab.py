@@ -270,6 +270,49 @@ def stack_round_batches(batches_per_client, pad: bool = True):
     return jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask)
 
 
+def bucket_round_batches(batches_per_client, sort: bool = True):
+    """Bucketing pass in front of ``stack_round_batches`` (ROADMAP open
+    item: padded-cell waste under heavy skew).  Sorts each client's batch
+    list by size (descending), groups batch SLOTS by the slot's max row
+    count, and pads each bucket only to its OWN width instead of the
+    global B_max.  Returns a list of ``(xs, ys, mask)`` stacks (slot
+    order), one per width bucket — drive the masked round over them in
+    sequence (``train_round_vectorized`` per stack, e.g. with
+    ``fold_in(key, bucket)``).
+
+    Sorting is what makes the per-slot widths monotone, so mixed batch
+    sizes collapse into a handful of buckets (each a distinct compiled
+    shape) rather than one per slot.  Batch-COUNT skew still pads
+    all-masked cells inside a bucket; only row padding shrinks.  NOTE:
+    reordering batches changes the key→batch mapping of a round — this is
+    a throughput knob for loops that don't need a fixed batch order, not a
+    semantics-preserving transform (benchmarks/collab_round.py reports the
+    old/new ``pad_waste``)."""
+    lists = [sorted(bs, key=lambda xy: -xy[0].shape[0]) if sort else list(bs)
+             for bs in batches_per_client]
+    nb_max = max((len(b) for b in lists), default=0)
+    if nb_max == 0:
+        return []
+    widths = [max(l[b][0].shape[0] for l in lists if len(l) > b)
+              for b in range(nb_max)]
+    stacks = []
+    start = 0
+    for b in range(1, nb_max + 1):
+        if b == nb_max or widths[b] != widths[start]:
+            stacks.append(stack_round_batches([l[start:b] for l in lists]))
+            start = b
+    return stacks
+
+
+def padded_row_waste(stacks) -> int:
+    """Padded sample slots across ``(xs, ys, mask)`` stacks: mask cells
+    that carry no real sample (the fine-grained version of the benchmark's
+    all-padding ``pad_waste`` cell count)."""
+    if stacks and not isinstance(stacks, list):
+        stacks = [stacks]
+    return int(sum(m.size - m.sum() for (_, _, m) in stacks))
+
+
 def _flatten_payload(payload: ServerPayload) -> ServerPayload:
     """(k, B, ...) stacked payload -> one (k*B, ...) server batch."""
     return ServerPayload(*[t.reshape((-1,) + t.shape[2:]) for t in payload])

@@ -1,0 +1,195 @@
+"""Planner for the batched collaborative sampling engine (Alg. 2 at serve
+scale).
+
+The paper's Algorithm 2 is a per-request program: the server denoises
+T … t_ζ+1, ships x̂_{t_ζ}, the client finishes t_ζ … 1 over the remapped
+range [1, M].  A serving system sees a *queue* of such requests — from k
+clients with possibly **different** cut points t_ζ^(i) (each edge device's
+compute budget) and overlapping conditioning labels.  The planner turns a
+wave of requests into padded, masked step tables that one jitted executor
+(core/sampler.make_sample_engine) can run as a single program:
+
+* **Server phase, deduplicated.**  Requests are grouped by ``(y, t_ζ)``:
+  the paper (§3.2) notes the server prefix for a shared label can run ONCE
+  — the same holds per (label, cut) pair, so each unique group gets one
+  row of the ``(G, S_max)`` server table (timesteps T … t_ζ+1, front-
+  aligned, zero-padded to the longest prefix with an ``active`` mask).
+  ``request_group`` maps every request back to its prefix.
+* **Client phase, per request.**  The ``(R, C_max)`` client tables carry
+  the Alg.-2 M-remap *baked in*: row r is ``CutPoint(T, t_ζ_r)
+  .client_t_list(adjusted)`` with its shifted ``t_prev`` (the remapped
+  float schedule), zero-padded to the longest client sweep.  GM rows
+  (t_ζ=0) are all-padding; ICM rows (t_ζ=T) have an all-padding server
+  row instead.  ``which model`` is encoded structurally: server-table
+  steps run ε_θs, client-table steps run the request's own ε_θc — the
+  two-phase split is exactly what makes the prefix dedup possible.
+
+Masked (padded) steps are no-ops in the executor, and every noise draw is
+row-keyed (splitting.row_keys, the PR-2 discipline), so growing S_max,
+C_max, R, or the request batch B never perturbs a real request's
+randomness — see tests/test_sample_engine.py padding-invariance tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.splitting import CutPoint
+
+
+class PlanTables(NamedTuple):
+    """The device-side plan: everything the executor scans/gathers.  A
+    NamedTuple so it is a pytree — it crosses the jit boundary as one
+    argument and shards leaf-by-leaf (sharding/specs.sample_plan_specs)."""
+    group_y: jnp.ndarray          # (G, B, n_classes) conditioning per group
+    group_t: jnp.ndarray          # (G, S_max) server timesteps, front-aligned
+    group_active: jnp.ndarray     # (G, S_max) 0/1 — 0 = padded no-op step
+    request_group: jnp.ndarray    # (R,) int32 — which server prefix to start from
+    request_client: jnp.ndarray   # (R,) int32 — row into the stacked client params
+    client_t: jnp.ndarray         # (R, C_max) remapped client timesteps
+    client_t_prev: jnp.ndarray    # (R, C_max) their shifted predecessors
+    client_active: jnp.ndarray    # (R, C_max) 0/1 validity
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleRequest:
+    """One queue entry: client ``client`` wants ``y.shape[0]`` samples
+    conditioned on ``y`` at its own cut point ``t_cut``."""
+    client: int
+    t_cut: int
+    y: np.ndarray                 # (B, n_classes); B shared across a plan
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplePlan:
+    T: int
+    adjusted: bool
+    tables: PlanTables
+    group_t_cut: Tuple[int, ...]      # (G,)
+    request_t_cut: Tuple[int, ...]    # (R,)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.group_t_cut)
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.request_t_cut)
+
+    @property
+    def server_steps_run(self) -> int:
+        """Server model calls the engine performs (one prefix per group)."""
+        return sum(self.T - tc for tc in self.group_t_cut)
+
+    @property
+    def server_steps_saved(self) -> int:
+        """Server model calls the (y, t_ζ) dedup avoids vs per-request."""
+        return sum(self.T - tc for tc in self.request_t_cut) - \
+            self.server_steps_run
+
+
+def _group_key(t_cut: int, y: np.ndarray):
+    return (int(t_cut), y.shape, y.dtype.str, y.tobytes())
+
+
+def plan_requests(requests: Sequence[SampleRequest], T: int,
+                  adjusted: bool = True,
+                  n_clients: Optional[int] = None) -> SamplePlan:
+    """Build the padded step tables for one wave of requests.
+
+    All requests must share the global T and the per-request batch size B
+    (the serve driver pads/buckets to a common B before planning — row-
+    keyed noise makes the padding rows inert).  Group order is first-seen
+    order, so appending requests to a wave never renumbers existing groups
+    (the padding-invariance tests rely on this).
+
+    Pass ``n_clients`` (the stacked client-params leading axis) whenever
+    it is known: the executor's ``l[request_client]`` gather CLAMPS
+    out-of-range indices under jit — a bad client id would silently sample
+    with the last client's weights — so range errors must be caught here,
+    at plan time."""
+    if not requests:
+        raise ValueError("plan_requests: empty request wave")
+    for r in requests:
+        if r.client < 0 or (n_clients is not None and r.client >= n_clients):
+            raise ValueError(
+                f"request client {r.client} outside [0, {n_clients}): the "
+                "engine's stacked-params gather would clamp, not error")
+    B = requests[0].y.shape[0]
+    groups = {}
+    group_cut: List[int] = []
+    group_y: List[np.ndarray] = []
+    req_group, req_client, req_cut = [], [], []
+    for r in requests:
+        y = np.asarray(r.y, np.float32)
+        if y.shape[0] != B:
+            raise ValueError(
+                f"plan_requests: request batch {y.shape[0]} != plan batch "
+                f"{B}; pad requests to a common B first")
+        if not 0 <= r.t_cut <= T:
+            raise ValueError(f"t_cut {r.t_cut} outside [0, {T}]")
+        gk = _group_key(r.t_cut, y)
+        g = groups.setdefault(gk, len(group_cut))
+        if g == len(group_cut):
+            group_cut.append(int(r.t_cut))
+            group_y.append(y)
+        req_group.append(g)
+        req_client.append(int(r.client))
+        req_cut.append(int(r.t_cut))
+
+    G, R = len(group_cut), len(requests)
+    s_max = max(T - tc for tc in group_cut)
+    c_max = max(req_cut)
+    # padded entries use t=1 / t_prev=0 — valid schedule coordinates, so a
+    # masked step computes finite garbage that the executor's where() drops
+    gt = np.ones((G, s_max), np.float32)
+    ga = np.zeros((G, s_max), np.float32)
+    for g, tc in enumerate(group_cut):
+        n = T - tc
+        if n:
+            gt[g, :n] = np.arange(T, tc, -1, dtype=np.float32)
+            ga[g, :n] = 1.0
+    ct = np.ones((R, c_max), np.float32)
+    ctp = np.zeros((R, c_max), np.float32)
+    ca = np.zeros((R, c_max), np.float32)
+    for i, tc in enumerate(req_cut):
+        tl, tp = CutPoint(T, tc).client_step_table(adjusted)
+        n = tl.shape[0]
+        if n:
+            ct[i, :n] = np.asarray(tl)
+            ctp[i, :n] = np.asarray(tp)
+            ca[i, :n] = 1.0
+    tables = PlanTables(
+        group_y=jnp.asarray(np.stack(group_y)),
+        group_t=jnp.asarray(gt), group_active=jnp.asarray(ga),
+        request_group=jnp.asarray(req_group, jnp.int32),
+        request_client=jnp.asarray(req_client, jnp.int32),
+        client_t=jnp.asarray(ct), client_t_prev=jnp.asarray(ctp),
+        client_active=jnp.asarray(ca))
+    return SamplePlan(T=T, adjusted=adjusted, tables=tables,
+                      group_t_cut=tuple(group_cut),
+                      request_t_cut=tuple(req_cut))
+
+
+def strided_server_table(cut: CutPoint, stride: int
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(t, t_prev) for the strided DDIM server schedule (beyond-paper §5):
+    model calls at T, T−stride, …, with the LAST entry's target clamped to
+    exactly t_cut — also when ``stride`` does not divide ``n_server_steps``
+    (the leftover n mod stride timesteps fold into the final, shorter DDIM
+    jump instead of the handoff landing above t_ζ).  Single source of the
+    table for core/sampler.server_denoise_ddim; pinned by
+    tests/test_sampler.test_ddim_stride_table_clamps_to_cut."""
+    if stride < 1:
+        raise ValueError(f"stride must be >= 1, got {stride}")
+    full = np.arange(cut.T, cut.t_cut, -1, dtype=np.float32)
+    t = full[::stride]
+    # ICM (t_ζ=T): zero server steps -> BOTH arrays empty (no phantom
+    # trailing t_prev entry; same contract as CutPoint.client_step_table)
+    t_prev = np.concatenate(
+        [t[1:], np.full((min(t.shape[0], 1),), float(cut.t_cut),
+                        np.float32)])
+    return jnp.asarray(t), jnp.asarray(t_prev)

@@ -1,30 +1,82 @@
-"""CollaFuse collaborative inference — paper Algorithm 2, faithful.
+"""CollaFuse collaborative inference — paper Algorithm 2, faithful, plus
+the batched planner/executor sampling engine that serves it at scale.
 
+Per-request samplers (paper Alg. 2 verbatim)
+--------------------------------------------
 Server: x_T ~ N(0, I), denoise T … t_ζ+1 with ε_θs → ship x̂_{t_ζ}.
 Client: remap its schedule over [1, M], M = ⌊t_ζ + (t_ζ/T)(T − t_ζ)⌋
 (Alg. 2 lines 2–3), then run its t_ζ steps with interpolated coefficients.
+``adjusted=False`` ablates the M-remap (EXPERIMENTS E6).  The server→client
+handoff x̂_{t_ζ} is the only tensor that crosses the wire at inference;
+``fori_loop`` keeps both loops O(1) in compiled-code size.  These remain
+the user-facing one-request API (``collaborative_sample``) and the paper-
+faithful baseline the engine benchmarks against.
 
-``adjusted=False`` ablates the M-remap (EXPERIMENTS E6). The paper reports
-the remap "significantly enhances the denoising capabilities on the client
-node" — our E6 reproduces that comparison.
+Batched sampling engine (``make_sample_engine``) — design notes
+---------------------------------------------------------------
+One jitted program samples a whole WAVE of requests spanning k clients
+with **heterogeneous cut points** t_ζ^(i), mirroring how the vectorized
+training engine (core/collab.py) replaced the per-(client, batch) Alg.-1
+loop:
 
-The server→client handoff x̂_{t_ζ} is the only tensor that crosses the wire
-at inference; ``fori_loop`` keeps both loops O(1) in compiled-code size. The
-per-step eq.-2 update routes through the fused ``ddpm_step`` kernel wrapper
-(kernels/ddpm_step/ops): ``use_pallas=None`` auto-selects the Pallas TPU
-kernel on TPU backends and the jnp oracle elsewhere; tests exercise the
-kernel path in interpret mode on CPU (``use_pallas=True, interpret=True``).
+* **Planner/executor split.**  core/sample_plan.plan_requests builds
+  padded per-group server tables ``(G, S_max)`` and per-request client
+  tables ``(R, C_max)`` with the Alg.-2 M-remap baked in, plus a dedup
+  pass grouping requests by ``(y, t_ζ)`` so each shared server prefix
+  runs ONCE (generalizing ``shared_handoff_sample``).  The executor here
+  never recomputes schedule logic — it scans the tables.
+* **Two masked scans, one program.**  Phase 1 scans the step axis over
+  the stacked group axis (server model, shared params, vmapped over G);
+  phase 2 gathers each request's handoff (``handoff[request_group]``) and
+  its client-param row (``tree.map(l[request_client])``), then scans the
+  client step axis vmapped over the request axis.  Inactive table entries
+  are no-ops via ``where(active, step(x), x)`` — a padded step passes x
+  through bitwise unchanged, so growing S_max/C_max (mixing in a deeper
+  cut) cannot perturb shorter requests (padding invariance,
+  tests/test_sample_engine.py).  Trade-off (same as the masked training
+  round's pad_waste): a masked step still EXECUTES its model call and
+  discards the result, so a wave mixing very uneven cuts burns
+  G·S_max + R·C_max applies instead of Σ(T−t_ζ_g) + Σt_ζ_r — bucketing
+  waves by prefix length, like ``bucket_round_batches`` does for
+  training, is the ROADMAP follow-up.
+* **Row-keyed noise.**  Every draw is ``rowwise_normal`` (splitting.
+  row_keys) keyed by (phase key, group/request index, STEP index, row):
+  fold_in-by-index rather than chained splits, so masked steps consume no
+  randomness and padding the request batch never perturbs a real row —
+  the PR-2 training discipline applied to inference.  This makes the
+  engine key-INcompatible with the legacy chained-split per-request
+  samplers above; the eager oracle with the engine's discipline is
+  ``sample_plan_reference`` (the inference counterpart of
+  core/collab.train_round_reference).
+* **Per-step update kernel.**  Each scan step routes through the fused
+  ``ddpm_step_batched`` wrapper: one launch advances all G (or R) states,
+  each at its own timestep, with the (K, 3) coefficient table in scalar
+  prefetch on the Pallas TPU path (kernels/ddpm_step).  ``use_pallas=
+  None`` auto-selects Pallas on TPU and the jnp oracle elsewhere; tests
+  run the kernel path in interpret mode on CPU.
+* **Sharding.**  The (G|R, B, ...) sampling stacks shard the lead axis
+  over the "clients" mesh dimension and the request-batch axis over
+  "data" (sharding/specs.sample_stack_spec / sample_plan_specs); the
+  launch/collab_dryrun.py ``vectorized_sample`` entry compiles the engine
+  on that mesh.
+
+GM (t_ζ=0) and ICM (t_ζ=T) are degenerate table rows (all-padding client
+row / all-padding server row) and need no special-casing anywhere.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple
+import warnings
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.protocol import rowwise_normal as _rowwise_normal
+from repro.core.sample_plan import PlanTables, SamplePlan, strided_server_table
 from repro.core.schedules import DiffusionSchedule
 from repro.core.splitting import CutPoint
-from repro.kernels.ddpm_step.ops import ddpm_step as fused_ddpm_step
+from repro.kernels.ddpm_step.ops import (ddpm_step as fused_ddpm_step,
+                                         ddpm_step_batched)
 
 
 def _resolve_kernel(use_pallas: Optional[bool]) -> bool:
@@ -70,8 +122,7 @@ def client_denoise(client_params, key, x_cut, y, sched: DiffusionSchedule,
     if cut.n_client_steps == 0:
         return x_cut
     up = _resolve_kernel(use_pallas)
-    t_list = cut.client_t_list(adjusted)          # descending, len t_ζ
-    t_prev = jnp.concatenate([t_list[1:], jnp.zeros((1,), jnp.float32)])
+    t_list, t_prev = cut.client_step_table(adjusted)  # descending, len t_ζ
 
     def body(i, carry):
         x, k = carry
@@ -92,16 +143,17 @@ def server_denoise_ddim(server_params, key, y, shape,
                         sched: DiffusionSchedule, cut: CutPoint, apply_fn,
                         stride: int = 4):
     """BEYOND-PAPER server schedule: deterministic DDIM with a stride —
-    (T − t_ζ)/stride model calls instead of T − t_ζ. The paper names DDIM
+    ⌈(T − t_ζ)/stride⌉ model calls instead of T − t_ζ. The paper names DDIM
     as future work (§5); EXPERIMENTS §Perf measures the fidelity cost of
-    the 2–8× server-compute reduction."""
+    the 2–8× server-compute reduction.  The step table comes from
+    sample_plan.strided_server_table, whose last entry clamps to t_ζ also
+    when the stride does not divide the server step count — the handoff
+    always lands exactly at the cut."""
     k0, _ = jax.random.split(key)
     x = jax.random.normal(k0, shape, dtype=jnp.float32)
     if cut.n_server_steps == 0:
         return x
-    full = cut.server_t_list().astype(jnp.float32)     # T … t_ζ+1
-    t_list = full[::stride]
-    t_prev = jnp.concatenate([t_list[1:], jnp.full((1,), float(cut.t_cut))])
+    t_list, t_prev = strided_server_table(cut, stride)
 
     def body(i, x):
         B = x.shape[0]
@@ -109,6 +161,150 @@ def server_denoise_ddim(server_params, key, y, shape,
         return sched.ddim_step(x, eps, t_list[i], t_prev[i])
 
     return jax.lax.fori_loop(0, t_list.shape[0], body, x)
+
+
+# ---------------------------------------------------------------------------
+# Batched planner/executor sampling engine (see module docstring).
+# ---------------------------------------------------------------------------
+
+
+def make_sample_engine(sched: DiffusionSchedule, apply_fn,
+                       image_shape: Tuple[int, ...],
+                       use_pallas: Optional[bool] = None,
+                       interpret: bool = False, jit: bool = True):
+    """Build the batched executor:
+
+        engine(server_params, stacked_client_params, key, tables)
+            -> (samples (R, B, *image_shape), handoffs (G, B, *image_shape))
+
+    ``tables`` is a sample_plan.PlanTables (one wave of requests);
+    ``stacked_client_params`` carries a leading (k,) client axis
+    (core/collab.stack_clients layout) which ``tables.request_client``
+    indexes.  ``image_shape`` is the per-sample trailing shape (H, W, C);
+    the request batch B comes from the tables.  jit recompiles per
+    distinct (G, R, S_max, C_max, B) signature — the serve driver buckets
+    waves to stabilize shapes."""
+    up = _resolve_kernel(use_pallas)
+
+    def engine(server_params, client_params, key, tables: PlanTables):
+        (gy, gt, ga, rgroup, rclient, ct, ctp, ca) = tables
+        G, B = gy.shape[0], gy.shape[1]
+        R = rgroup.shape[0]
+        shape = (B,) + tuple(image_shape)
+        skey, ckey = jax.random.split(key)
+        gkeys = jax.vmap(lambda g: jax.random.fold_in(skey, g))(
+            jnp.arange(G))
+        x0 = jax.vmap(
+            lambda gk: _rowwise_normal(jax.random.fold_in(gk, 0), shape))(
+            gkeys)                                           # (G, B, ...)
+
+        def server_step(x, inp):
+            t, active, sidx = inp                    # (G,), (G,), scalar
+            eps = jax.vmap(
+                lambda xg, tg, yg: apply_fn(server_params, xg,
+                                            jnp.full((B,), tg), yg))(
+                x, t, gy)
+            noise = jax.vmap(lambda gk: _rowwise_normal(
+                jax.random.fold_in(gk, 1 + sidx), shape))(gkeys)
+            xn = ddpm_step_batched(x, eps, noise, sched, t, use_pallas=up,
+                                   interpret=interpret)
+            keep = active.reshape((-1,) + (1,) * (x.ndim - 1)) > 0
+            return jnp.where(keep, xn, x), None
+
+        handoff, _ = jax.lax.scan(
+            server_step, x0,
+            (gt.T, ga.T, jnp.arange(gt.shape[1])))
+
+        params_r = jax.tree.map(lambda l: l[rclient], client_params)
+        y_r = gy[rgroup]                                     # (R, B, nc)
+        x = handoff[rgroup]                                  # (R, B, ...)
+        rkeys = jax.vmap(lambda r: jax.random.fold_in(ckey, r))(
+            jnp.arange(R))
+
+        def client_step(x, inp):
+            t, t_prev, active, cidx = inp
+            eps = jax.vmap(
+                lambda p, xr, tr, yr: apply_fn(p, xr, jnp.full((B,), tr),
+                                               yr))(params_r, x, t, y_r)
+            noise = jax.vmap(lambda rk: _rowwise_normal(
+                jax.random.fold_in(rk, cidx), shape))(rkeys)
+            xn = ddpm_step_batched(x, eps, noise, sched, t, t_prev=t_prev,
+                                   use_pallas=up, interpret=interpret)
+            keep = active.reshape((-1,) + (1,) * (x.ndim - 1)) > 0
+            return jnp.where(keep, xn, x), None
+
+        out, _ = jax.lax.scan(
+            client_step, x,
+            (ct.T, ctp.T, ca.T, jnp.arange(ct.shape[1])))
+        return out, handoff
+
+    return jax.jit(engine) if jit else engine
+
+
+def sample_plan_reference(server_params, client_params_list, key,
+                          plan: SamplePlan, sched: DiffusionSchedule,
+                          apply_fn, image_shape: Tuple[int, ...]):
+    """Differential-testing oracle for the batched engine — the inference
+    counterpart of core/collab.train_round_reference: identical semantics
+    and PRNG discipline (per-group/per-request fold_in, per-STEP fold_in,
+    row-keyed noise, one shared server prefix per (y, t_ζ) group), but
+    plain Python loops over per-request pytrees — no vmap, no scan, no
+    ``where`` (a masked step is simply not executed).  Returns the same
+    (samples, handoffs) pair, stacked."""
+    t = plan.tables
+    gy = t.group_y
+    G, B = gy.shape[0], gy.shape[1]
+    shape = (B,) + tuple(image_shape)
+    skey, ckey = jax.random.split(key)
+    handoffs = []
+    for g in range(G):
+        gk = jax.random.fold_in(skey, g)
+        x = _rowwise_normal(jax.random.fold_in(gk, 0), shape)
+        for s in range(plan.T - plan.group_t_cut[g]):
+            tt = t.group_t[g, s]
+            eps = apply_fn(server_params, x, jnp.full((B,), tt), gy[g])
+            noise = _rowwise_normal(jax.random.fold_in(gk, 1 + s), shape)
+            x = fused_ddpm_step(x, eps, noise, sched, tt)
+        handoffs.append(x)
+    outs = []
+    for r in range(plan.n_requests):
+        rk = jax.random.fold_in(ckey, r)
+        g = int(t.request_group[r])
+        x = handoffs[g]
+        cp = client_params_list[int(t.request_client[r])]
+        for c in range(plan.request_t_cut[r]):
+            tt, tp = t.client_t[r, c], t.client_t_prev[r, c]
+            eps = apply_fn(cp, x, jnp.full((B,), tt), gy[g])
+            noise = _rowwise_normal(jax.random.fold_in(rk, c), shape)
+            x = fused_ddpm_step(x, eps, noise, sched, tt, t_prev=tp)
+        outs.append(x)
+    return jnp.stack(outs), jnp.stack(handoffs)
+
+
+def make_per_request_sampler(sched: DiffusionSchedule, apply_fn,
+                             shape: Tuple[int, ...]):
+    """The pre-engine serving baseline, shared by launch/collab_serve
+    ``--compare`` and benchmarks/collab_sample so they measure the SAME
+    baseline: returns ``fn_for(t_cut)`` yielding a jitted one-request
+    Alg.-2 program ``(server_params, client_params, key, y) -> samples``,
+    compiled once per distinct cut point.  ``shape`` is the full
+    (B, H, W, C) request shape."""
+    compiled = {}
+
+    def fn_for(t_cut: int):
+        if t_cut not in compiled:
+            cut = CutPoint(sched.T, t_cut)
+            compiled[t_cut] = jax.jit(
+                lambda sp, cp, k, y: collaborative_sample(
+                    sp, cp, k, y, shape, sched, cut, apply_fn))
+        return compiled[t_cut]
+
+    return fn_for
+
+
+# ---------------------------------------------------------------------------
+# Per-request entry points and the single-(y, t_ζ) fast path.
+# ---------------------------------------------------------------------------
 
 
 def shared_handoff_sample(server_params, client_params_list, key, y, shape,
@@ -125,11 +321,13 @@ def shared_handoff_sample(server_params, client_params_list, key, y, shape,
     vmap's op-fusion/reduction reordering — a few float32 ulps, see
     tests/test_sampler.py parity tolerances). Server compute: 1×
     instead of k×. Trade-off (documented): the k clients' outputs share the
-    handoff and are therefore correlated.
+    handoff and are therefore correlated.  The general case — many (y, t_ζ)
+    groups with heterogeneous cuts in one program — is the batched engine
+    (``make_sample_engine``).
 
     ``client_params_list`` is either a list of per-client pytrees or one
     already-stacked pytree with a leading (k,) axis (core/collab.py layout);
-    returns (list of k outputs, handoff)."""
+    returns (stacked (k, B, ...) outputs, handoff)."""
     ks, kc = jax.random.split(key)
     if server_stride and server_stride > 1:
         x_cut = server_denoise_ddim(server_params, ks, y, shape, sched, cut,
@@ -139,9 +337,9 @@ def shared_handoff_sample(server_params, client_params_list, key, y, shape,
                                apply_fn, use_pallas=use_pallas,
                                interpret=interpret)
     if isinstance(client_params_list, (list, tuple)):
-        n = len(client_params_list)
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
                                *client_params_list)
+        n = len(client_params_list)
     else:
         stacked = client_params_list
         n = jax.tree.leaves(stacked)[0].shape[0]
@@ -150,7 +348,19 @@ def shared_handoff_sample(server_params, client_params_list, key, y, shape,
         lambda cp, k: client_denoise(cp, k, x_cut, y, sched, cut, apply_fn,
                                      adjusted, use_pallas=use_pallas,
                                      interpret=interpret))(stacked, keys)
-    return [outs[i] for i in range(n)], x_cut
+    return outs, x_cut
+
+
+def shared_handoff_sample_list(*args, **kwargs):
+    """Deprecated shim for the pre-engine API that rebuilt a Python list
+    from the stacked vmap output: use ``shared_handoff_sample`` (stacked
+    (k, B, ...) array) and index rows instead."""
+    warnings.warn(
+        "shared_handoff_sample_list is deprecated: shared_handoff_sample "
+        "now returns the stacked (k, B, ...) array directly",
+        DeprecationWarning, stacklevel=2)
+    outs, x_cut = shared_handoff_sample(*args, **kwargs)
+    return [outs[i] for i in range(outs.shape[0])], x_cut
 
 
 def collaborative_sample(server_params, client_params, key, y, shape,

@@ -90,6 +90,18 @@ class CutPoint:
         hi = float(self.M) if adjusted else float(self.t_cut)
         return jnp.linspace(hi, 1.0, self.t_cut, dtype=jnp.float32)
 
+    def client_step_table(self, adjusted: bool = True
+                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(t, t_prev) pairs for the client sweep: the remapped descending
+        t_list and its shifted predecessor (the last step lands at 0; both
+        arrays are empty for the GM cut t_ζ=0). Single source for the
+        per-request sampler loop (core/sampler.client_denoise) and the
+        planner's padded client tables (core/sample_plan.plan_requests)."""
+        t = self.client_t_list(adjusted)
+        t_prev = jnp.concatenate(
+            [t[1:], jnp.zeros((min(t.shape[0], 1),), jnp.float32)])
+        return t, t_prev
+
     def server_t_list(self) -> jnp.ndarray:
         """Integer timesteps the server sweeps: T, T-1, …, t_ζ+1."""
         return jnp.arange(self.T, self.t_cut, -1, dtype=jnp.int32)

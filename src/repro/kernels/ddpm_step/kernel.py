@@ -4,6 +4,16 @@ The input is viewed as 2D (rows, lanes); blocks are (BLOCK_R, BLOCK_L) tiles
 in VMEM (lane dim 128-aligned for the VPU). Scalar schedule coefficients
 arrive via scalar prefetch (SMEM) so one compiled kernel serves every
 timestep of the sampling loop.
+
+Two entry points share the kernel body math:
+
+* ``ddpm_step_pallas`` — one scalar coefficient triple for the whole
+  tensor (the per-(client, request) sequential samplers).
+* ``ddpm_step_pallas_batched`` — a leading stack axis K (groups or
+  requests of the batched sampling engine, core/sampler.py) where every
+  slab k is at its OWN timestep: coefficients arrive as a (K, 3) scalar-
+  prefetch table indexed by ``pl.program_id(0)``, so one kernel launch
+  advances K heterogeneous-cut denoising states in lockstep.
 """
 from __future__ import annotations
 
@@ -57,3 +67,50 @@ def ddpm_step_pallas(x_t, eps_pred, noise, inv_sqrt_alpha, coef, sigma,
         interpret=interpret,
     )(scalars, xf, ef, nf)
     return out.reshape(-1)[:n].reshape(shape)
+
+
+def _kernel_batched(scalars_ref, x_ref, eps_ref, noise_ref, out_ref):
+    k = pl.program_id(0)
+    inv_sqrt_alpha = scalars_ref[k, 0]
+    coef = scalars_ref[k, 1]
+    sigma = scalars_ref[k, 2]
+    x = x_ref[...].astype(jnp.float32)
+    e = eps_ref[...].astype(jnp.float32)
+    n = noise_ref[...].astype(jnp.float32)
+    out_ref[...] = ((x - coef * e) * inv_sqrt_alpha + sigma * n
+                    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ddpm_step_pallas_batched(x_t, eps_pred, noise, inv_sqrt_alpha, coef,
+                             sigma, interpret: bool = False):
+    """x_t/eps_pred/noise: (K, ...) identical shapes; coefficients (K,) —
+    slab k steps with its own (inv_sqrt_alpha, coef, sigma) triple.
+    Returns x_{t-1} per slab."""
+    shape = x_t.shape
+    K = shape[0]
+    per = x_t[0].size
+    lanes = BLOCK_L
+    rows = pl.cdiv(per, lanes)
+    pad = rows * lanes - per
+    flat = lambda t: jnp.pad(t.reshape(K, -1),
+                             ((0, 0), (0, pad))).reshape(K, rows, lanes)
+    xf, ef, nf = flat(x_t), flat(eps_pred), flat(noise)
+    scalars = jnp.stack([inv_sqrt_alpha, coef, sigma],
+                        axis=1).astype(jnp.float32)          # (K, 3)
+
+    grid = (K, pl.cdiv(rows, BLOCK_R))
+    # index maps receive (grid idx..., scalar ref) under scalar prefetch
+    spec = pl.BlockSpec((1, BLOCK_R, lanes), lambda k, i, s: (k, i, 0))
+    out = pl.pallas_call(
+        _kernel_batched,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[spec, spec, spec],
+            out_specs=spec,
+        ),
+        out_shape=jax.ShapeDtypeStruct((K, rows, lanes), x_t.dtype),
+        interpret=interpret,
+    )(scalars, xf, ef, nf)
+    return out.reshape(K, -1)[:, :per].reshape(shape)

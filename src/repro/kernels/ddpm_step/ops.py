@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.schedules import DiffusionSchedule
-from repro.kernels.ddpm_step.kernel import ddpm_step_pallas
+from repro.kernels.ddpm_step.kernel import (ddpm_step_pallas,
+                                            ddpm_step_pallas_batched)
 from repro.kernels.ddpm_step.ref import ddpm_step_ref
 
 
@@ -35,3 +36,22 @@ def ddpm_step(x_t, eps_pred, noise, sched: DiffusionSchedule, t, t_prev=None,
         return ddpm_step_pallas(x_t, eps_pred, noise, a, c, s,
                                 interpret=interpret)
     return ddpm_step_ref(x_t, eps_pred, noise, a, c, s)
+
+
+def ddpm_step_batched(x_t, eps_pred, noise, sched: DiffusionSchedule, t,
+                      t_prev=None, use_pallas: bool = False,
+                      interpret: bool = False):
+    """Stacked-timestep variant for the batched sampling engine
+    (core/sampler.py): ``x_t`` is (K, ...) and ``t``/``t_prev`` are (K,) —
+    slab k (a dedup group or a request of the collaborative plan) advances
+    at its OWN timestep. Row k equals ``ddpm_step(x_t[k], ..., t[k],
+    t_prev[k])`` exactly; the Pallas path runs one kernel launch with the
+    (K, 3) coefficient table in scalar prefetch."""
+    t = jnp.asarray(t, jnp.float32)
+    a, c, s = step_coefficients(sched, t, t_prev)
+    if use_pallas:
+        return ddpm_step_pallas_batched(x_t, eps_pred, noise, a, c, s,
+                                        interpret=interpret)
+    bshape = (t.shape[0],) + (1,) * (x_t.ndim - 1)
+    return ddpm_step_ref(x_t, eps_pred, noise, a.reshape(bshape),
+                         c.reshape(bshape), s.reshape(bshape))

@@ -11,7 +11,12 @@ per-batch client updates vmapped, one concatenated server update, scanned
 over batches in a single program. The ``ragged_round`` entry compiles the
 MASKED engine — padded (n_batches, k, B_max) stacks plus a validity mask
 sharded like the data — proving heterogeneous-client rounds lower on the
-same mesh with no extra collectives beyond the dense round's.
+same mesh with no extra collectives beyond the dense round's. The
+``vectorized_sample`` entry compiles the batched SAMPLING engine
+(core/sampler.make_sample_engine): one program serving k+1 requests with
+heterogeneous cut points (GM, ICM, and two collaborative cuts, plus one
+dedup'd duplicate), request/group stacks sharded ("clients", "data")
+per sharding/specs.sample_plan_specs.
 
     PYTHONPATH=src python -m repro.launch.collab_dryrun [--multi-pod] \
         [--image-size 64] [--batch 256] [--t-cut 200] [--T 1000] \
@@ -27,10 +32,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+import numpy as np
+
 from repro.configs.ddpm_unet import CONFIG, UNetConfig
 from repro.core.collab import make_vectorized_round
 from repro.core.protocol import client_losses, server_loss
-from repro.core.sampler import server_denoise
+from repro.core.sample_plan import SampleRequest, plan_requests
+from repro.core.sampler import make_sample_engine, server_denoise
 from repro.core.schedules import DiffusionSchedule
 from repro.core.splitting import CutPoint
 from repro.core.unet import init_unet, unet_apply
@@ -39,7 +47,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
 from repro.sharding.specs import (CLIENT_AXIS, client_opt_specs,
                                   client_stacked_specs, mesh_batch_axes,
-                                  sanitize_spec)
+                                  sample_plan_specs, sanitize_spec)
 
 
 def main():
@@ -139,6 +147,28 @@ def main():
         (args.round_batches, k, per_client_b), jnp.float32),
         P(None, CLIENT_AXIS, "data"))
 
+    # --- batched sampling engine: k requests, heterogeneous cuts ---------
+    # one request per client; cuts span GM (0), the configured t_cut, its
+    # half, and ICM (T) — plus a duplicate of request 0 so the plan carries
+    # a dedup'd group. The (G|R, B) stacks shard over ("clients", "data").
+    cut_menu = [args.t_cut, max(args.t_cut // 2, 1), 0, args.T]
+    reqs = []
+    for c in range(k):
+        yy = np.zeros((per_client_b, ucfg.n_classes), np.float32)
+        yy[:, c % ucfg.n_classes] = 1.0
+        reqs.append(SampleRequest(client=c, t_cut=cut_menu[c % len(cut_menu)],
+                                  y=yy))
+    reqs.append(SampleRequest(client=0, t_cut=reqs[0].t_cut, y=reqs[0].y))
+    plan = plan_requests(reqs, args.T, n_clients=k)
+    tables = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=jax.sharding.NamedSharding(
+                cmesh, sanitize_spec(s, a.shape, cmesh))),
+        plan.tables, sample_plan_specs(plan.tables))
+    sample_engine = make_sample_engine(
+        sched, apply_fn, (args.image_size, args.image_size, 3),
+        use_pallas=False, jit=False)
+
     results = {}
     for name, fn, fargs, fmesh in (
         ("collab_train_step",
@@ -152,6 +182,8 @@ def main():
         ("ragged_round",
          masked_round_fn,
          (cparams, copt, sparams, sopt, xs, ys, mask, ckey), cmesh),
+        ("vectorized_sample",
+         sample_engine, (sparams, cparams, ckey, tables), cmesh),
     ):
         t0 = time.time()
         with fmesh:

@@ -1,0 +1,239 @@
+"""Request-batching serve driver for the collaborative sampling engine.
+
+    PYTHONPATH=src python -m repro.launch.collab_serve --smoke
+    PYTHONPATH=src python -m repro.launch.collab_serve \
+        --clients 5 --requests 24 --T 60 --t-cuts 5,10,20,10,40 --compare
+
+The ROADMAP north star is serving CollaFuse inference under heavy traffic;
+this driver is the queue-facing layer on top of the planner/executor
+engine (core/sample_plan.py + core/sampler.make_sample_engine):
+
+  queue → waves of ≤ --max-wave requests → plan_requests (dedup by
+  (y, t_ζ)) → ONE jitted engine call per wave → per-request latency /
+  throughput report.
+
+Each synthetic request is (client, label, t_ζ) where t_ζ is the CLIENT's
+own cut point (--t-cuts): the per-client heterogeneity regime — each edge
+device finishes the number of denoising steps its compute budget allows —
+that the per-request samplers could only serve one program at a time.
+``--compare`` additionally runs the sequential per-request baseline (one
+jitted Alg.-2 program per request, compiled per distinct cut) on the same
+queue.  The dedup column reports the server model calls the (y, t_ζ)
+grouping avoided.  ``--toy`` (default) uses the protocol-scale linear
+denoiser so the smoke entry in scripts/ci.sh stays seconds-cheap on CPU;
+``--unet`` swaps in the reduced paper U-Net.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.ddpm_unet import SMALL
+from repro.core.sample_plan import SampleRequest, plan_requests
+from repro.core.sampler import make_per_request_sampler, make_sample_engine
+from repro.core.schedules import DiffusionSchedule
+from repro.core.unet import init_unet, unet_apply
+
+
+def build_models(args, key):
+    """Returns (server_params, stacked_client_params, apply_fn)."""
+    if args.unet:
+        ucfg = dataclasses.replace(
+            SMALL, image_size=args.image_size, channels=3,
+            n_classes=args.n_classes)
+        ks, *kc = jax.random.split(key, args.clients + 1)
+        sp = init_unet(ks, ucfg)
+        cp = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[init_unet(k, ucfg) for k in kc])
+        return sp, cp, lambda p, x, t, y: unet_apply(p, x, t, y, ucfg)
+    sp = {"a": jnp.float32(0.2), "b": jnp.float32(0.0)}
+    cp = {"a": jnp.linspace(0.1, 0.5, args.clients),
+          "b": jnp.zeros((args.clients,))}
+    return sp, cp, lambda p, x, t, y: x * p["a"] + p["b"]
+
+
+def synth_queue(args, rng: np.random.Generator,
+                cuts: List[int]) -> List[SampleRequest]:
+    reqs = []
+    eye = np.eye(args.n_classes, dtype=np.float32)
+    for _ in range(args.requests):
+        c = int(rng.integers(args.clients))
+        label = int(rng.integers(args.n_classes))
+        y = np.broadcast_to(eye[label], (args.batch, args.n_classes)).copy()
+        reqs.append(SampleRequest(client=c, t_cut=cuts[c], y=y))
+    return reqs
+
+
+def serve(args, engine, sp, cp, queue, key):
+    """Drain the queue in waves; returns (outputs, report dict). Plans are
+    built up front and every distinct table-shape signature is warmed once
+    before the clock starts, so the report measures steady-state serving
+    rather than XLA compiles."""
+    waves = []
+    for start in range(0, len(queue), args.max_wave):
+        wave = queue[start:start + args.max_wave]
+        n_real = len(wave)
+        if args.pad_waves and n_real < args.max_wave:
+            # repeat the tail request so the final partial wave keeps the
+            # request-axis size R of the full waves (the dup rows dedup
+            # into the tail's server group and are sliced off below);
+            # the group count G still varies with each wave's label/cut
+            # mix, so distinct G signatures can still compile — the warm
+            # pass below absorbs those (padding G is a ROADMAP open item)
+            wave = wave + [wave[-1]] * (args.max_wave - n_real)
+        plan = plan_requests(wave, args.T, n_clients=args.clients)
+        # dedup/latency stats count only the real requests; the padded
+        # plan is recomputed just for the final partial wave
+        stats = plan if n_real == len(wave) else \
+            plan_requests(queue[start:start + args.max_wave], args.T,
+                          n_clients=args.clients)
+        waves.append((plan, stats, n_real))
+    warmed = set()
+    for plan, _, _ in waves:
+        sig = tuple(a.shape for a in plan.tables)
+        if sig not in warmed:
+            jax.block_until_ready(engine(
+                sp, cp, jax.random.fold_in(key, 10**6), plan.tables)[0])
+            warmed.add(sig)
+
+    t_start = time.perf_counter()
+    latencies, wave_sizes = [], []
+    groups_total, saved = 0, 0
+    outs = []
+    for w, (plan, stats, n_real) in enumerate(waves):
+        out, _ = engine(sp, cp, jax.random.fold_in(key, w), plan.tables)
+        jax.block_until_ready(out)
+        done = time.perf_counter() - t_start
+        latencies.extend([done] * n_real)      # whole wave completes together
+        wave_sizes.append(n_real)
+        groups_total += stats.n_groups
+        saved += stats.server_steps_saved
+        outs.append(out[:n_real])
+    wall = time.perf_counter() - t_start
+    lat = np.asarray(latencies)
+    return outs, {
+        "requests": len(queue), "waves": len(wave_sizes),
+        "wall_s": wall, "req_per_s": len(queue) / wall,
+        "samples_per_s": len(queue) * args.batch / wall,
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p95_s": float(np.percentile(lat, 95)),
+        "server_prefix_groups": groups_total,
+        "server_calls_saved_by_dedup": saved,
+    }
+
+
+def serve_sequential(args, sp, cp, apply_fn, sched, queue, key):
+    """Baseline: one jitted per-request Alg.-2 program per queue entry
+    (compiled once per distinct t_ζ; same harness as
+    benchmarks/collab_sample via sampler.make_per_request_sampler)."""
+    shape = (args.batch, args.image_size, args.image_size, 3)
+    fn_for = make_per_request_sampler(sched, apply_fn, shape)
+
+    # warm every distinct per-cut program so the baseline, like the engine
+    # path, reports steady-state dispatch cost rather than compiles
+    y0 = jnp.asarray(queue[0].y)
+    cp0 = jax.tree.map(lambda l: l[0], cp)
+    for tc in {r.t_cut for r in queue}:
+        jax.block_until_ready(fn_for(tc)(sp, cp0, key, y0))
+
+    t_start = time.perf_counter()
+    latencies = []
+    for i, r in enumerate(queue):
+        cpar = jax.tree.map(lambda l: l[r.client], cp)
+        out = fn_for(r.t_cut)(sp, cpar, jax.random.fold_in(key, i),
+                              jnp.asarray(r.y))
+        jax.block_until_ready(out)
+        latencies.append(time.perf_counter() - t_start)
+    wall = time.perf_counter() - t_start
+    lat = np.asarray(latencies)
+    return {
+        "requests": len(queue), "wall_s": wall,
+        "req_per_s": len(queue) / wall,
+        "samples_per_s": len(queue) * args.batch / wall,
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p95_s": float(np.percentile(lat, 95)),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--T", type=int, default=40)
+    ap.add_argument("--t-cuts", default="",
+                    help="comma list, one per client (default 1:2:4 ramp "
+                         "incl. a t_cut=0 GM client when clients >= 4)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="samples per request")
+    ap.add_argument("--max-wave", type=int, default=8,
+                    help="max requests batched into one engine call")
+    ap.add_argument("--no-pad-waves", dest="pad_waves", action="store_false",
+                    help="don't pad the final partial wave to max_wave "
+                         "(saves a little compute; the partial wave then "
+                         "compiles its own request-axis size R)")
+    ap.add_argument("--image-size", type=int, default=8)
+    ap.add_argument("--n-classes", type=int, default=4)
+    ap.add_argument("--unet", action="store_true",
+                    help="reduced paper U-Net instead of the toy denoiser")
+    ap.add_argument("--compare", action="store_true",
+                    help="also run the sequential per-request baseline")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI preset (toy model, small queue)")
+    args = ap.parse_args(argv)
+    if args.requests < 1 or args.max_wave < 1 or args.clients < 1:
+        raise SystemExit("--requests, --max-wave, and --clients must be >= 1")
+    if args.smoke:
+        # one full wave of 12 requests: wide enough that batching beats
+        # per-request dispatch even on the toy model (per-step row-keying
+        # overhead amortizes over the request axis; see
+        # benchmarks/collab_sample.py for the measured regime)
+        args.requests, args.T, args.max_wave = 12, 20, 12
+        args.compare, args.unet = True, False
+
+    if args.t_cuts:
+        cuts = [int(c) for c in args.t_cuts.split(",")]
+        if len(cuts) != args.clients:
+            raise SystemExit(f"--t-cuts needs {args.clients} entries")
+    else:
+        base = max(args.T // 8, 1)
+        ramp = [base, 2 * base, 4 * base]
+        cuts = [0 if (args.clients >= 4 and c == 3) else ramp[c % 3]
+                for c in range(args.clients)]
+    for tc in cuts:
+        assert 0 <= tc <= args.T, (tc, args.T)
+
+    key = jax.random.PRNGKey(args.seed)
+    sp, cp, apply_fn = build_models(args, key)
+    sched = DiffusionSchedule.linear(args.T)
+    engine = make_sample_engine(
+        sched, apply_fn, (args.image_size, args.image_size, 3))
+    rng = np.random.default_rng(args.seed)
+    queue = synth_queue(args, rng, cuts)
+
+    print(f"serving {args.requests} requests x {args.batch} samples, "
+          f"k={args.clients} clients, cuts={cuts}, T={args.T}, "
+          f"max_wave={args.max_wave}")
+    _, report = serve(args, engine, sp, cp, queue, key)
+    for k_, v in report.items():
+        print(f"engine/{k_}: {v:.4g}" if isinstance(v, float)
+              else f"engine/{k_}: {v}")
+    if args.compare:
+        base = serve_sequential(args, sp, cp, apply_fn, sched, queue,
+                                jax.random.fold_in(key, 1))
+        for k_, v in base.items():
+            print(f"sequential/{k_}: {v:.4g}" if isinstance(v, float)
+                  else f"sequential/{k_}: {v}")
+        print(f"speedup: {base['wall_s'] / report['wall_s']:.2f}x "
+              f"(engine vs per-request dispatch)")
+    return report
+
+
+if __name__ == "__main__":
+    main()

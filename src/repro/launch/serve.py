@@ -27,7 +27,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--greedy", action="store_true", default=True)
+    # --greedy was previously declared store_true with default=True — i.e.
+    # permanently on and never read. It now actually selects the decode
+    # rule: --no-greedy samples from softmax(logits / --temperature).
+    ap.add_argument("--greedy", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--temperature", type=float, default=1.0,
+                    help="softmax temperature for --no-greedy sampling")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -58,13 +64,23 @@ def main(argv=None):
 
     decode = jax.jit(
         lambda p, tok, st, pos: api.decode_fn(p, tok, st, pos, cfg, runtime))
-    tok = jnp.argmax(logits[:, -1, :], axis=-1, keepdims=True).astype(jnp.int32)
+
+    def pick(logits, k):
+        last = logits[:, -1, :]
+        if args.greedy:
+            tok = jnp.argmax(last, axis=-1)
+        else:
+            tok = jax.random.categorical(
+                k, last.astype(jnp.float32) / max(args.temperature, 1e-6))
+        return tok[:, None].astype(jnp.int32)
+
+    tok = pick(logits, jax.random.fold_in(key, 0))
     out = [tok]
     t0 = time.time()
     start = batch["tokens"].shape[1] + prefix
     for i in range(args.new_tokens - 1):
         logits, state = decode(params, tok, state, jnp.int32(start + i))
-        tok = jnp.argmax(logits[:, -1, :], axis=-1, keepdims=True).astype(jnp.int32)
+        tok = pick(logits, jax.random.fold_in(key, i + 1))
         out.append(tok)
     dt = time.time() - t0
     gen = jnp.concatenate(out, axis=1)

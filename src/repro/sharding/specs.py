@@ -230,6 +230,46 @@ def shard_vectorized_state(state, mesh):
 
 
 # ---------------------------------------------------------------------------
+# Batched sampling engine (core/sample_plan.py + core/sampler.py)
+# ---------------------------------------------------------------------------
+
+
+def sample_stack_spec(ndim: int, lead_axis: str = CLIENT_AXIS,
+                      batch_axis: str = "data") -> P:
+    """Sampling-engine stacks are (G|R, B, ...): the group/request lead
+    axis shards over the "clients" mesh dimension (requests are
+    client-parallel work, exactly like the stacked training axis) and the
+    request-batch axis B over "data". ``sanitize_spec`` drops either axis
+    when the wave size doesn't divide the mesh."""
+    return P(lead_axis, batch_axis, *([None] * (ndim - 2)))
+
+
+def sample_plan_specs(tables):
+    """PartitionSpecs for a sample_plan.PlanTables: step tables and index
+    vectors shard their lead (group/request) axis over "clients"; only
+    group_y carries a request-batch dim to put on "data". Returned as the
+    same NamedTuple so it zips leaf-for-leaf with the tables pytree."""
+    return type(tables)(
+        group_y=sample_stack_spec(tables.group_y.ndim),
+        group_t=P(CLIENT_AXIS, None),
+        group_active=P(CLIENT_AXIS, None),
+        request_group=P(CLIENT_AXIS),
+        request_client=P(CLIENT_AXIS),
+        client_t=P(CLIENT_AXIS, None),
+        client_t_prev=P(CLIENT_AXIS, None),
+        client_active=P(CLIENT_AXIS, None))
+
+
+def shard_sample_plan(mesh, tables):
+    """Place plan tables on ``mesh`` with the sampling specs — the
+    inference counterpart of ``shard_round_batches``."""
+    return type(tables)(*[
+        jax.device_put(a, NamedSharding(
+            mesh, sanitize_spec(s, a.shape, mesh)))
+        for a, s in zip(tables, sample_plan_specs(tables))])
+
+
+# ---------------------------------------------------------------------------
 # Activations / inputs
 # ---------------------------------------------------------------------------
 

@@ -109,6 +109,31 @@ def test_stack_round_batches_pads(key):
     assert train_round_vectorized(None, None, None, None, None) == {}
 
 
+def test_bucket_round_batches_cuts_row_waste(key):
+    """The bucketing pass (sort by size, pad per width bucket) represents
+    every sample exactly once while paying strictly less row padding than
+    the single global-B_max stack under batch-size skew."""
+    from repro.core.collab import bucket_round_batches, padded_row_waste
+    mk = lambda n, v: (v * jnp.ones((n, 2)), jnp.ones((n, 2)))
+    per_client = [[mk(8, 1), mk(2, 2), mk(2, 3)],
+                  [mk(2, 4), mk(8, 5)],
+                  [mk(8, 6)]]
+    stacks = bucket_round_batches(per_client)
+    assert len(stacks) == 2                       # widths 8 and 2, sorted
+    widths = [xs.shape[2] for (xs, _, _) in stacks]
+    assert widths == sorted(widths, reverse=True) == [8, 2]
+    total = sum(n for bs in per_client for (x, _) in bs for n in [x.shape[0]])
+    assert int(sum(m.sum() for (_, _, m) in stacks)) == total
+    dense = stack_round_batches(per_client)
+    assert padded_row_waste(stacks) < padded_row_waste(dense)
+    # sample multiset preserved: sum over real rows matches the raw lists
+    raw = sum(float(x.sum()) for bs in per_client for (x, _) in bs)
+    stacked = sum(float((xs * m[..., None]).sum())
+                  for (xs, _, m) in stacks)
+    assert raw == stacked
+    assert bucket_round_batches([[], []]) == []
+
+
 def test_stack_round_batches_truncation_warns(key):
     """The legacy dense layout (pad=False) still truncates to the shortest
     client — but no longer silently: it must report the dropped count."""

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core.schedules import DiffusionSchedule
-from repro.kernels.ddpm_step.ops import ddpm_step
+from repro.kernels.ddpm_step.ops import ddpm_step, ddpm_step_batched
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.grouped_matmul.ops import grouped_matmul
 from repro.kernels.ssd_scan.ops import ssd_scan
@@ -34,6 +34,32 @@ def test_ddpm_step_kernel(key, shape, t, dtype):
     tol = TOL if dtype == jnp.float32 else TOL_BF16
     np.testing.assert_allclose(np.asarray(pal, np.float32),
                                np.asarray(ref, np.float32), **tol)
+
+
+@pytest.mark.parametrize("shape", [(5, 4, 8, 8, 3), (3, 2, 37), (1, 129)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ddpm_step_batched_kernel(key, shape, dtype):
+    """Batched sampling-engine path: slab k steps at its OWN timestep
+    (heterogeneous cuts); the (K, 3) scalar-prefetch Pallas kernel in
+    interpret mode must match the broadcast jnp oracle, and each slab must
+    match the scalar-coefficient ddpm_step exactly."""
+    K = shape[0]
+    sched = DiffusionSchedule.linear(100)
+    x = jax.random.normal(key, shape).astype(dtype)
+    e = jax.random.normal(jax.random.fold_in(key, 1), shape).astype(dtype)
+    n = jax.random.normal(jax.random.fold_in(key, 2), shape).astype(dtype)
+    t = jnp.linspace(1.0, 99.0, K)
+    t_prev = jnp.maximum(t - 1.5, 0.0)
+    ref = ddpm_step_batched(x, e, n, sched, t, t_prev=t_prev)
+    pal = ddpm_step_batched(x, e, n, sched, t, t_prev=t_prev,
+                            use_pallas=True, interpret=True)
+    tol = TOL if dtype == jnp.float32 else TOL_BF16
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+    for k_ in range(K):
+        row = ddpm_step(x[k_], e[k_], n[k_], sched, t[k_], t_prev=t_prev[k_])
+        np.testing.assert_allclose(np.asarray(ref[k_], np.float32),
+                                   np.asarray(row, np.float32), **tol)
 
 
 def test_ddpm_step_matches_schedule(key):

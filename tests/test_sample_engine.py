@@ -1,0 +1,304 @@
+"""Batched sampling engine tests: planner tables, engine-vs-oracle parity
+across heterogeneous cut points (GM/ICM degenerate rows included), the
+(y, t_ζ) server-prefix dedup, and the padding-invariance properties of the
+masked step tables (``ragged`` marker — the PR-2 discipline applied to
+inference)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+from repro.core.sample_plan import (PlanTables, SampleRequest, plan_requests,
+                                    strided_server_table)
+from repro.core.sampler import make_sample_engine, sample_plan_reference
+from repro.core.schedules import DiffusionSchedule
+from repro.core.splitting import CutPoint
+
+T = 50
+SCHED = DiffusionSchedule.linear(T)
+IMG = (8, 8, 3)
+B, NC = 4, 4
+
+
+def scale_apply(params, x, t, y):
+    """Param- and label-dependent toy denoiser, row-independent."""
+    return x * params["a"] + 0.01 * y.sum(-1).reshape(
+        (-1,) + (1,) * (x.ndim - 1))
+
+
+def _y(label: int, batch: int = B) -> np.ndarray:
+    return np.broadcast_to(np.eye(NC, dtype=np.float32)[label],
+                           (batch, NC)).copy()
+
+
+def _models(k: int = 3):
+    cps = [{"a": jnp.float32(0.1 * (i + 1))} for i in range(k)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *cps)
+    return {"a": jnp.float32(0.2)}, cps, stacked
+
+
+# one shared jitted engine for the default (scale_apply, jnp-path) tests —
+# same-shape calls then hit the jit cache instead of recompiling per test
+ENGINE = make_sample_engine(SCHED, scale_apply, IMG)
+
+
+def _mixed_requests():
+    """Four requests spanning three distinct cuts incl. GM (0) and ICM (T),
+    with a duplicate (y, t_ζ) pair for the dedup pass."""
+    return [SampleRequest(0, 10, _y(0)), SampleRequest(1, 0, _y(0)),
+            SampleRequest(2, T, _y(1)), SampleRequest(1, 10, _y(0))]
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+
+def test_plan_tables_shapes_and_dedup():
+    plan = plan_requests(_mixed_requests(), T)
+    t = plan.tables
+    assert plan.n_requests == 4 and plan.n_groups == 3
+    # requests 0 and 3 share (y, t_cut) -> one group; dedup saves its prefix
+    assert int(t.request_group[0]) == int(t.request_group[3])
+    assert plan.server_steps_saved == T - 10
+    # server rows: front-aligned T..t_cut+1 then padding
+    s_max = t.group_t.shape[1]
+    assert s_max == T  # the GM group runs all T server steps
+    g0 = int(t.request_group[0])
+    np.testing.assert_array_equal(
+        np.asarray(t.group_t[g0, :T - 10]),
+        np.arange(T, 10, -1, dtype=np.float32))
+    assert float(t.group_active[g0, :T - 10].min()) == 1.0
+    assert float(t.group_active[g0, T - 10:].max()) == 0.0
+    # ICM group: all-padding server row
+    gi = int(t.request_group[2])
+    assert float(t.group_active[gi].max()) == 0.0
+    # client rows carry the M-remap: row 0 == CutPoint(T, 10).client_t_list()
+    cut = CutPoint(T, 10)
+    np.testing.assert_array_equal(np.asarray(t.client_t[0, :10]),
+                                  np.asarray(cut.client_t_list(True)))
+    assert float(t.client_active[0, :10].min()) == 1.0
+    assert float(t.client_active[0, 10:].max()) == 0.0
+    # GM request: all-padding client row
+    assert float(t.client_active[1].max()) == 0.0
+
+
+def test_plan_rejects_mixed_batch_and_bad_cut():
+    with pytest.raises(ValueError):
+        plan_requests([SampleRequest(0, 10, _y(0)),
+                       SampleRequest(0, 10, _y(0, batch=B + 1))], T)
+    with pytest.raises(ValueError):
+        plan_requests([SampleRequest(0, T + 1, _y(0))], T)
+    with pytest.raises(ValueError):
+        plan_requests([], T)
+    # the executor's stacked-params gather CLAMPS out-of-range client ids
+    # under jit (silent wrong-params sampling) — the planner must catch
+    # them when the stack size is known, and negatives always
+    with pytest.raises(ValueError):
+        plan_requests([SampleRequest(3, 10, _y(0))], T, n_clients=3)
+    with pytest.raises(ValueError):
+        plan_requests([SampleRequest(-1, 10, _y(0))], T)
+    plan_requests([SampleRequest(2, 10, _y(0))], T, n_clients=3)
+
+
+# ---------------------------------------------------------------------------
+# Engine vs the eager per-request oracle
+# ---------------------------------------------------------------------------
+
+
+def test_engine_matches_reference_mixed_cuts(key):
+    """One jitted engine call over cuts {0, 10, T} (GM and ICM rows
+    included) matches the sequential oracle within the established vmap
+    float32 tolerances."""
+    sp, cps, stacked = _models()
+    plan = plan_requests(_mixed_requests(), T)
+    out, hand = ENGINE(sp, stacked, key, plan.tables)
+    ref_out, ref_hand = sample_plan_reference(sp, cps, key, plan, SCHED,
+                                              scale_apply, IMG)
+    assert out.shape == (4, B) + IMG and hand.shape == (3, B) + IMG
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(hand), np.asarray(ref_hand),
+                               atol=1e-5, rtol=1e-5)
+    t = plan.tables
+    # GM degenerate row: the client contributes nothing
+    np.testing.assert_array_equal(np.asarray(out[1]),
+                                  np.asarray(hand[int(t.request_group[1])]))
+    # ICM degenerate row: the server hands off pure noise
+    h = hand[int(t.request_group[2])]
+    assert abs(float(h.mean())) < 0.1 and abs(float(h.std()) - 1.0) < 0.1
+    # duplicate requests share the prefix but differ per client
+    assert float(jnp.abs(out[0] - out[3]).max()) > 1e-4
+
+
+def test_engine_deterministic(key):
+    sp, _, stacked = _models()
+    plan = plan_requests(_mixed_requests(), T)
+    a, _ = ENGINE(sp, stacked, key, plan.tables)
+    b, _ = ENGINE(sp, stacked, key, plan.tables)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engine_dedup_runs_one_server_prefix(key):
+    """Identical-(y, t_ζ) requests trigger exactly ONE server prefix
+    computation. Proven two ways:
+
+    * structurally on the ENGINE: in the traced program, the server scan's
+      denoising carry has exactly G rows — with 3 duplicate requests the
+      server state is (1, B, ...) while the client scan runs (3, B, ...),
+      so the program physically cannot run the prefix more than once;
+    * behaviorally on the eager ORACLE the engine is differentially tested
+      against: a counting apply_fn sees exactly T − t_ζ server calls
+      regardless of the duplicate count (plus t_ζ client calls per
+      request)."""
+    sp, cps, stacked = _models()
+    t_cut, n_dup = 10, 3
+    reqs = [SampleRequest(c % 3, t_cut, _y(0)) for c in range(n_dup)]
+    plan = plan_requests(reqs, T)
+    assert plan.n_groups == 1
+    assert plan.server_steps_saved == (n_dup - 1) * (T - t_cut)
+
+    engine = make_sample_engine(SCHED, scale_apply, IMG, jit=False)
+    jaxpr = jax.make_jaxpr(engine)(sp, stacked, key, plan.tables)
+    scans = [e for e in jaxpr.jaxpr.eqns if e.primitive.name == "scan"]
+    state_shape = lambda e: [v.aval.shape for v in e.outvars
+                             if len(v.aval.shape) == 2 + len(IMG)]
+    # server scan: one (G, B, ...) = (1, B, ...) carry; client: (R, B, ...)
+    assert state_shape(scans[0]) == [(1, B) + IMG]
+    assert state_shape(scans[-1]) == [(n_dup, B) + IMG]
+
+    counts = {"server": 0, "client": 0}
+
+    def counting_apply(params, x, t, y):
+        counts["server" if params is sp else "client"] += 1
+        return scale_apply(params, x, t, y)
+
+    out, hand = sample_plan_reference(sp, cps, key, plan, SCHED,
+                                      counting_apply, IMG)
+    assert counts["server"] == T - t_cut           # ONE prefix, not n_dup
+    assert counts["client"] == n_dup * t_cut
+    assert hand.shape[0] == 1
+    # every duplicate starts from that one shared handoff
+    eng_out, eng_hand = ENGINE(sp, stacked, key, plan.tables)
+    assert eng_hand.shape[0] == 1
+    np.testing.assert_allclose(np.asarray(eng_out), np.asarray(out),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_engine_pallas_interpret_parity(key):
+    """The batched ddpm_step Pallas path (interpret mode on CPU) matches
+    the jnp-oracle engine across mixed cuts."""
+    sp, _, stacked = _models()
+    plan = plan_requests(_mixed_requests(), T)
+    ref_engine = make_sample_engine(SCHED, scale_apply, IMG,
+                                    use_pallas=False)
+    pal_engine = make_sample_engine(SCHED, scale_apply, IMG,
+                                    use_pallas=True, interpret=True)
+    ref, _ = ref_engine(sp, stacked, key, plan.tables)
+    pal, _ = pal_engine(sp, stacked, key, plan.tables)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               atol=2e-5, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Padding invariance of the step tables (ragged marker)
+# ---------------------------------------------------------------------------
+
+
+def _pad_tables(t: PlanTables, extra_server: int, extra_client: int
+                ) -> PlanTables:
+    """Append masked no-op steps to both tables (grow S_max / C_max).
+    Padded entries use the planner's (t=1, t_prev=0, active=0) convention."""
+    pad_t = lambda a, n: jnp.pad(a, ((0, 0), (0, n)), constant_values=1.0)
+    pad_z = lambda a, n: jnp.pad(a, ((0, 0), (0, n)))
+    return t._replace(
+        group_t=pad_t(t.group_t, extra_server),
+        group_active=pad_z(t.group_active, extra_server),
+        client_t=pad_t(t.client_t, extra_client),
+        client_t_prev=pad_z(t.client_t_prev, extra_client),
+        client_active=pad_z(t.client_active, extra_client))
+
+
+@pytest.mark.ragged
+@hypothesis.settings(max_examples=6, deadline=None)
+@hypothesis.given(extra_server=st.integers(min_value=0, max_value=3),
+                  extra_client=st.integers(min_value=0, max_value=3))
+def test_step_table_padding_invariance(extra_server, extra_client):
+    """Growing S_max/C_max with masked steps changes NOTHING — masked
+    steps are where()-dropped no-ops and the per-step fold_in keying means
+    they consume no randomness. Bitwise."""
+    key = jax.random.PRNGKey(3)
+    sp, _, stacked = _models()
+    plan = plan_requests(_mixed_requests(), T)
+    base_out, base_hand = ENGINE(sp, stacked, key, plan.tables)
+    padded = _pad_tables(plan.tables, extra_server, extra_client)
+    out, hand = ENGINE(sp, stacked, key, padded)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base_out))
+    np.testing.assert_array_equal(np.asarray(hand), np.asarray(base_hand))
+
+
+@pytest.mark.ragged
+@hypothesis.settings(max_examples=4, deadline=None)
+@hypothesis.given(extra_reqs=st.integers(min_value=1, max_value=3))
+def test_appending_requests_leaves_existing_rows(extra_reqs):
+    """Appending requests to a wave (even ones that open new groups and
+    deepen C_max) never perturbs the existing requests' samples: group and
+    request keys are fold_in-by-index in first-seen order. Bitwise on the
+    shared rows."""
+    key = jax.random.PRNGKey(5)
+    sp, _, stacked = _models()
+    reqs = _mixed_requests()
+    base_out, _ = ENGINE(sp, stacked, key, plan_requests(reqs, T).tables)
+    grown = reqs + [SampleRequest((7 * i) % 3, [5, 30, T][i % 3], _y(i % NC))
+                    for i in range(extra_reqs)]
+    out, _ = ENGINE(sp, stacked, key, plan_requests(grown, T).tables)
+    np.testing.assert_array_equal(np.asarray(out[:len(reqs)]),
+                                  np.asarray(base_out))
+
+
+@pytest.mark.ragged
+@hypothesis.settings(max_examples=4, deadline=None)
+@hypothesis.given(extra_rows=st.integers(min_value=1, max_value=3))
+def test_request_batch_padding_invariance(extra_rows):
+    """Padding the request batch B (garbage conditioning rows under the
+    row-keyed noise) leaves the real rows bitwise unchanged — the serve
+    driver's pad-to-common-B step is semantically inert."""
+    key = jax.random.PRNGKey(7)
+    sp, _, stacked = _models()
+    reqs = _mixed_requests()
+    base_out, _ = ENGINE(sp, stacked, key, plan_requests(reqs, T).tables)
+    padded = [SampleRequest(r.client, r.t_cut,
+                            np.concatenate([r.y, 1e3 * np.ones(
+                                (extra_rows, NC), np.float32)]))
+              for r in reqs]
+    out, _ = ENGINE(sp, stacked, key, plan_requests(padded, T).tables)
+    np.testing.assert_array_equal(np.asarray(out[:, :B]),
+                                  np.asarray(base_out))
+
+
+# ---------------------------------------------------------------------------
+# Strided server table (DDIM) regression
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T_, tc, stride", [
+    (50, 10, 3), (50, 7, 8), (20, 3, 6), (10, 3, 4), (50, 10, 4),
+])
+def test_ddim_stride_table_clamps_to_cut(T_, tc, stride):
+    """The strided server schedule's LAST entry lands exactly on t_cut —
+    including when stride does not divide n_server_steps (the leftover
+    steps fold into a final, shorter jump; the handoff never sits above
+    the cut)."""
+    t, tp = strided_server_table(CutPoint(T_, tc), stride)
+    assert float(t[0]) == T_
+    assert float(tp[-1]) == tc
+    np.testing.assert_array_equal(np.asarray(tp[:-1]), np.asarray(t[1:]))
+    gaps = np.asarray(t) - np.asarray(tp)
+    assert (gaps >= 1).all() and (gaps <= stride).all()
+    assert (np.asarray(t) > tc).all()
+    with pytest.raises(ValueError):
+        strided_server_table(CutPoint(T_, tc), 0)
+    # ICM degenerate cut: both arrays empty, no phantom t_prev entry
+    ti, tpi = strided_server_table(CutPoint(T_, T_), stride)
+    assert ti.shape == tpi.shape == (0,)

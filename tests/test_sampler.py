@@ -86,12 +86,13 @@ def test_ddim_step_properties(key):
     np.testing.assert_allclose(np.asarray(back), np.asarray(x0), atol=1e-4)
 
 
-def test_ddim_strided_server_shapes(key):
+@pytest.mark.parametrize("stride", [4, 7])  # 7 does not divide the 40 steps
+def test_ddim_strided_server_shapes(key, stride):
     from repro.core.sampler import server_denoise_ddim
     y = jnp.zeros((4, 4))
     cut = CutPoint(50, 10)
     out = server_denoise_ddim({}, key, y, SHAPE, SCHED, cut, zero_apply,
-                              stride=4)
+                              stride=stride)
     assert out.shape == SHAPE and np.isfinite(np.asarray(out)).all()
 
 
@@ -101,11 +102,29 @@ def test_shared_handoff(key):
     cut = CutPoint(50, 10)
     outs, handoff = shared_handoff_sample({}, [{}, {}, {}], key, y, SHAPE,
                                           SCHED, cut, zero_apply)
-    assert len(outs) == 3
+    # stacked (k, B, ...) array straight from the vmapped client sweep
+    assert isinstance(outs, jnp.ndarray) and outs.shape == (3,) + SHAPE
     # all clients start from the SAME server handoff (computed once)
     assert handoff.shape == SHAPE
     for o in outs:
         assert o.shape == SHAPE and np.isfinite(np.asarray(o)).all()
+
+
+def test_shared_handoff_list_shim(key):
+    """The deprecated list-returning API survives behind a shim that warns."""
+    from repro.core.sampler import (shared_handoff_sample,
+                                    shared_handoff_sample_list)
+    y = jnp.zeros((4, 4))
+    cut = CutPoint(50, 10)
+    with pytest.warns(DeprecationWarning):
+        outs, handoff = shared_handoff_sample_list(
+            {}, [{}, {}, {}], key, y, SHAPE, SCHED, cut, zero_apply)
+    assert isinstance(outs, list) and len(outs) == 3
+    stacked, h2 = shared_handoff_sample({}, [{}, {}, {}], key, y, SHAPE,
+                                        SCHED, cut, zero_apply)
+    np.testing.assert_array_equal(np.asarray(handoff), np.asarray(h2))
+    for i, o in enumerate(outs):
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(stacked[i]))
 
 
 def scale_apply(params, x, t, y):

@@ -57,3 +57,19 @@ def test_server_t_list():
     c = CutPoint(100, 30)
     tl = np.asarray(c.server_t_list())
     assert tl[0] == 100 and tl[-1] == 31 and len(tl) == 70
+
+
+def test_client_step_table_pairs():
+    """(t, t_prev) stay length-matched for every cut — including the GM
+    degenerate t_ζ=0 where both must be empty (a trailing phantom t_prev
+    entry would break callers that zip/stack/scan the pair)."""
+    for t_cut in (0, 1, 30, 100):
+        c = CutPoint(100, t_cut)
+        t, tp = c.client_step_table()
+        assert t.shape == tp.shape == (t_cut,)
+        if t_cut:
+            assert float(tp[-1]) == 0.0
+            np.testing.assert_array_equal(np.asarray(tp[:-1]),
+                                          np.asarray(t[1:]))
+            np.testing.assert_array_equal(np.asarray(t),
+                                          np.asarray(c.client_t_list()))
