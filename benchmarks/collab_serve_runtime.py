@@ -1,0 +1,103 @@
+"""Serve-runtime benchmark: the cross-wave prefix cache + shape-stable
+scheduler (repro.serve) vs the PR-3 per-wave driver (fifo waves, no
+cache — reproduced exactly by ``ServeConfig(policy="fifo", cache=False)``)
+on REPEATED traffic, where the serve subsystem earns its keep.
+
+Workload: a Zipf-skewed label stream (p ∝ 1/rank^1.1 over 8 classes — a
+few hot labels dominate, the web-traffic shape) from k clients with
+mixed 1:2:4 cut points, replayed for several passes (a stationary
+service in steady state).  Both runtimes see the SAME queue and produce
+BITWISE the same samples (checked here; pinned harder in
+tests/test_serve_runtime.py) — what differs is the work:
+
+* old: every wave re-runs every server prefix; mixed cuts pad every
+  row to the deepest prefix/sweep in the wave (padded_model_calls);
+  the group-count G drifts per wave, so signatures keep compiling.
+* new: depth buckets kill the step padding, fixed G/R/H tiers converge
+  to one signature per bucket, and once the cache is warm the server
+  scan runs ZERO steps for hit groups — physical server model calls
+  drop toward Σ over distinct (y, t_ζ) of ⌈(T−t_ζ)/stride⌉, then
+  toward zero as the label set saturates.
+
+Reported per k (toy denoiser — the dispatch-bound regime, like
+collab_sample.py): steady-pass us/request and samples/s for both
+drivers, the speedup, cache hit rate, recompile (engine re-trace)
+counts, and the physical-server-call + padded-call totals old vs new
+with the reduction percentage — the ISSUE-4 acceptance gate is ≥30%
+fewer physical server calls at equal output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.schedules import DiffusionSchedule
+from repro.launch.collab_serve import synth_queue
+from repro.serve import ServeConfig, ServeRuntime
+
+
+def _bench(key, k: int, T: int = 48, batch: int = 4, requests: int = 24,
+           n_classes: int = 8, passes: int = 4):
+    sched = DiffusionSchedule.linear(T)
+    apply_fn = lambda p, x, t, y: x * p["a"] + p["b"]
+    sp = {"a": jnp.float32(0.2), "b": jnp.float32(0.0)}
+    cp = {"a": jnp.linspace(0.1, 0.5, k), "b": jnp.zeros((k,))}
+    base = max(T // 8, 1)
+    cuts = [base * (2 ** (c % 3)) for c in range(k)]        # 1:2:4 mix
+    rng = np.random.default_rng(k)
+    queue = synth_queue(rng, clients=k, cuts=cuts, requests=requests,
+                        batch=batch, n_classes=n_classes, zipf=1.1)
+
+    mk = lambda policy, cache: ServeRuntime(
+        ServeConfig(T=T, image_shape=(8, 8, 3), max_wave=8, policy=policy,
+                    cache=cache), sp, cp, apply_fn, sched, key)
+    new, old = mk("depth", True), mk("fifo", False)
+
+    stats = {"old": [], "new": []}
+    for p in range(passes):
+        outs_new, rep_new = new.process(queue)
+        outs_old, rep_old = old.process(queue)
+        stats["new"].append(rep_new)
+        stats["old"].append(rep_old)
+        if p == 0:      # equal output at equal keys (cache/bucketing are
+            for a, b in zip(outs_new, outs_old):    # pure perf knobs)
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    tot = lambda side, key_: sum(r[key_] for r in stats[side])
+    phys_old = tot("old", "server_calls_physical")
+    phys_new = tot("new", "server_calls_physical")
+    red = 100.0 * (1.0 - phys_new / max(phys_old, 1))
+    steady_old, steady_new = stats["old"][-1], stats["new"][-1]
+    us = lambda rep: rep["wall_s"] / rep["requests"] * 1e6
+    emit(f"collab_serve_runtime/old_fifo_k{k}_r{requests}",
+         us(steady_old),
+         f"samples_per_s={steady_old['samples_per_s']:.0f};"
+         f"server_calls_physical={phys_old};"
+         f"padded_model_calls={tot('old', 'padded_model_calls')};"
+         f"recompiles={sum(r['engine_traces'] for r in stats['old'])}")
+    emit(f"collab_serve_runtime/new_cached_k{k}_r{requests}",
+         us(steady_new),
+         f"samples_per_s={steady_new['samples_per_s']:.0f};"
+         f"speedup={us(steady_old) / us(steady_new):.2f}x;"
+         f"server_calls_physical={phys_new};"
+         f"physical_reduction={red:.1f}%;"
+         f"padded_model_calls={tot('new', 'padded_model_calls')};"
+         f"steady_hit_rate={steady_new['cache_hit_rate']:.2f};"
+         f"steady_traces={steady_new['engine_traces']};"
+         f"steady_sigs_per_bucket={steady_new['max_signatures_per_bucket']};"
+         f"recompiles={sum(r['engine_traces'] for r in stats['new'])}")
+
+
+def main(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    for k in ([5] if quick else [2, 5]):
+        _bench(jax.random.fold_in(key, k), k,
+               T=24 if quick else 48,
+               requests=12 if quick else 24,
+               passes=3 if quick else 4)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
 Suites:
   collab_round         sequential Alg.-1 loop vs vectorized round engine
   collab_sample        per-request Alg.-2 sampling vs batched sampling engine
+  collab_serve_runtime serve runtime (prefix cache + shape-stable waves)
+                       vs the PR-3 fifo/no-cache driver on Zipf traffic
   fidelity_sweep       paper Fig. 4 (top): FD vs cut point, GM/ICM baselines
   attr_inference_sweep paper Fig. 7: attribute-inference F1 vs cut point
   inversion_sweep      paper Fig. 8: cross-client inversion vs cut point
@@ -24,7 +26,8 @@ import os
 import sys
 import time
 
-SUITES = ["kernel_bench", "collab_round", "collab_sample", "compute_split",
+SUITES = ["kernel_bench", "collab_round", "collab_sample",
+          "collab_serve_runtime", "compute_split",
           "attr_inference_sweep", "inversion_sweep", "m_remap_ablation",
           "beyond_paper", "fl_comparison", "dp_payload", "fidelity_sweep"]
 

@@ -4,8 +4,15 @@
 #   scripts/ci.sh tier1      - fast tier: everything but the slow marker
 #                              (includes the masked-engine equivalence and
 #                              ragged property tests — they are tier-1),
-#                              plus the collab_serve driver smoke (queue ->
-#                              plan -> one engine call -> report)
+#                              plus the serve-runtime smoke (queue ->
+#                              scheduler -> cache probe -> engine -> cache
+#                              fill -> report), which ASSERTS the serve
+#                              contract: >=1 cross-wave cache hit, bitwise
+#                              warm==cold==fifo outputs, one compiled
+#                              signature per bucket in steady state (jit
+#                              trace-counter guard), and >=30% fewer
+#                              physical server model calls than the
+#                              fifo/no-cache PR-3-style driver
 #   scripts/ci.sh slow       - only the long system/sampler/U-Net tests
 #   scripts/ci.sh <pytest args...>  - passed through unchanged
 set -euo pipefail

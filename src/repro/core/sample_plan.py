@@ -9,12 +9,22 @@ compute budget) and overlapping conditioning labels.  The planner turns a
 wave of requests into padded, masked step tables that one jitted executor
 (core/sampler.make_sample_engine) can run as a single program:
 
-* **Server phase, deduplicated.**  Requests are grouped by ``(y, t_ζ)``:
-  the paper (§3.2) notes the server prefix for a shared label can run ONCE
-  — the same holds per (label, cut) pair, so each unique group gets one
-  row of the ``(G, S_max)`` server table (timesteps T … t_ζ+1, front-
-  aligned, zero-padded to the longest prefix with an ``active`` mask).
-  ``request_group`` maps every request back to its prefix.
+* **Server phase, deduplicated.**  Requests are grouped by ``(y, t_ζ,
+  stride)``: the paper (§3.2) notes the server prefix for a shared label
+  can run ONCE — the same holds per (label, cut) pair, so each unique
+  group gets one row of the ``(G, S_max)`` server table (timesteps from
+  ``server_table`` — full DDPM for stride 1, the clamped strided DDIM
+  schedule otherwise — front-aligned, zero-padded to the longest prefix
+  with an ``active`` mask).  ``request_group`` maps every request back to
+  its prefix.
+* **Cross-wave reuse (serve/prefix_cache.py).**  When a ``lookup_fn`` is
+  given, each unique group is probed against the cache BEFORE it is given
+  a scan row: a hit group's stored handoff x̂_{t_ζ} enters the plan as a
+  row of the ``InjectTables`` (x, y) pytree instead — the executor
+  concatenates injected rows after the server scan's output, so a cache
+  hit skips the server phase *physically* (zero model calls), not just
+  logically.  ``request_group`` indexes the combined
+  ``[scan groups | injected groups]`` axis.
 * **Client phase, per request.**  The ``(R, C_max)`` client tables carry
   the Alg.-2 M-remap *baked in*: row r is ``CutPoint(T, t_ζ_r)
   .client_t_list(adjusted)`` with its shifted ``t_prev`` (the remapped
@@ -23,16 +33,29 @@ wave of requests into padded, masked step tables that one jitted executor
   row instead.  ``which model`` is encoded structurally: server-table
   steps run ε_θs, client-table steps run the request's own ε_θc — the
   two-phase split is exactly what makes the prefix dedup possible.
+* **Stable seeds.**  Every group/request row carries an explicit PRNG
+  seed (``group_seed``/``request_seed``, fold_in'd by the executor).  The
+  defaults are the wave-local indices (the PR-3 behavior, bitwise); the
+  serve runtime instead passes *content-stable* group seeds (a registry:
+  first sight of a (y, t_ζ, stride) group fixes its seed forever) and
+  *arrival-stable* request seeds, which is what makes a cached handoff
+  bitwise-valid in any later wave and makes the whole pipeline invariant
+  to how the scheduler re-buckets the queue.
 
 Masked (padded) steps are no-ops in the executor, and every noise draw is
 row-keyed (splitting.row_keys, the PR-2 discipline), so growing S_max,
-C_max, R, or the request batch B never perturbs a real request's
-randomness — see tests/test_sample_engine.py padding-invariance tests.
+C_max, R, G, H, or the request batch B never perturbs a real request's
+randomness — ``pad_plan`` exploits exactly this to pad a plan's axes to
+the scheduler's fixed shape tiers with inert all-masked rows (see
+tests/test_sample_engine.py and tests/test_serve_runtime.py
+padding-invariance tests).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, NamedTuple, Optional, Sequence, Tuple
+import hashlib
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, \
+    Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -46,12 +69,24 @@ class PlanTables(NamedTuple):
     argument and shards leaf-by-leaf (sharding/specs.sample_plan_specs)."""
     group_y: jnp.ndarray          # (G, B, n_classes) conditioning per group
     group_t: jnp.ndarray          # (G, S_max) server timesteps, front-aligned
+    group_t_prev: jnp.ndarray     # (G, S_max) per-step targets (stride-aware)
     group_active: jnp.ndarray     # (G, S_max) 0/1 — 0 = padded no-op step
-    request_group: jnp.ndarray    # (R,) int32 — which server prefix to start from
-    request_client: jnp.ndarray   # (R,) int32 — row into the stacked client params
+    group_seed: jnp.ndarray       # (G,) int32 — server-noise fold_in seeds
+    request_group: jnp.ndarray    # (R,) int32 — row into [scan | injected]
+    request_client: jnp.ndarray   # (R,) int32 — row into stacked client params
+    request_seed: jnp.ndarray     # (R,) int32 — client-noise fold_in seeds
     client_t: jnp.ndarray         # (R, C_max) remapped client timesteps
     client_t_prev: jnp.ndarray    # (R, C_max) their shifted predecessors
     client_active: jnp.ndarray    # (R, C_max) 0/1 validity
+
+
+class InjectTables(NamedTuple):
+    """Cache-hit groups: precomputed server handoffs the executor
+    concatenates AFTER the server scan's output (combined group axis
+    ``[0, G) = scanned, [G, G+H) = injected``).  ``y`` rides along because
+    the client phase gathers its conditioning from the combined axis."""
+    x: jnp.ndarray                # (H, B, *image_shape) stored x̂_{t_ζ}
+    y: jnp.ndarray                # (H, B, n_classes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,41 +98,133 @@ class SampleRequest:
     y: np.ndarray                 # (B, n_classes); B shared across a plan
 
 
+def n_server_calls(T: int, t_cut: int, stride: int = 1) -> int:
+    """Server model calls for one prefix: ⌈(T − t_ζ)/stride⌉."""
+    return (T - t_cut + stride - 1) // stride
+
+
+def server_table_np(T: int, t_cut: int, stride: int = 1
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """(t, t_prev) numpy step table for one server prefix.  stride == 1 is
+    the full DDPM sweep (t_prev = t − 1, landing exactly at t_ζ); stride
+    > 1 is the strided DDIM schedule (beyond-paper §5): model calls at T,
+    T−stride, …, with the LAST entry's target clamped to exactly t_cut —
+    also when ``stride`` does not divide ``n_server_steps`` (the leftover
+    n mod stride timesteps fold into the final, shorter DDIM jump instead
+    of the handoff landing above t_ζ).  Single source of the table for the
+    planner's group rows and core/sampler.server_denoise_ddim; pinned by
+    tests/test_sampler.test_ddim_stride_table_clamps_to_cut."""
+    if stride < 1:
+        raise ValueError(f"stride must be >= 1, got {stride}")
+    full = np.arange(T, t_cut, -1, dtype=np.float32)
+    t = full[::stride]
+    # ICM (t_ζ=T): zero server steps -> BOTH arrays empty (no phantom
+    # trailing t_prev entry; same contract as CutPoint.client_step_table)
+    t_prev = np.concatenate(
+        [t[1:], np.full((min(t.shape[0], 1),), float(t_cut), np.float32)])
+    return t, t_prev
+
+
+def strided_server_table(cut: CutPoint, stride: int
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """jnp view of ``server_table_np`` (kept as the per-request samplers'
+    entry point)."""
+    t, t_prev = server_table_np(cut.T, cut.t_cut, stride)
+    return jnp.asarray(t), jnp.asarray(t_prev)
+
+
+# Cache-key type: (t_cut, stride, y.shape, y.dtype, y.tobytes()) — the
+# content identity of one server prefix.  serve/prefix_cache extends it
+# with the runtime's key-schedule fingerprint (base key bytes + stable
+# group seed), completing the ISSUE's (y, t_ζ, key schedule, stride) key.
+GroupKey = Tuple
+
+
+def group_key(t_cut: int, y: np.ndarray, stride: int = 1) -> GroupKey:
+    y = np.asarray(y, np.float32)
+    return (int(t_cut), int(stride), y.shape, y.dtype.str, y.tobytes())
+
+
+def stable_group_seed(gk: GroupKey) -> int:
+    """Content-derived server-noise seed for one prefix group: a stable
+    31-bit digest of the (y, t_ζ, stride) identity.  Depending on content
+    only — never on sighting order, wave composition, or scheduler policy
+    — is what makes a group's server trajectory reproducible across
+    waves/runtimes (the cache's bitwise guarantee) and makes scheduling a
+    pure performance knob (policy-invariance tests).  A digest collision
+    merely correlates two different groups' noise draws (their cache
+    entries stay distinct — content is in the key); it cannot alias
+    results."""
+    head = repr(gk[:-1]).encode()
+    tail = gk[-1] if isinstance(gk[-1], bytes) else repr(gk[-1]).encode()
+    h = hashlib.blake2b(head + b"|" + tail, digest_size=4).digest()
+    return int.from_bytes(h, "little") & 0x7FFFFFFF
+
+
 @dataclasses.dataclass(frozen=True)
 class SamplePlan:
     T: int
     adjusted: bool
     tables: PlanTables
-    group_t_cut: Tuple[int, ...]      # (G,)
+    group_t_cut: Tuple[int, ...]      # (G,) scanned (miss) groups
     request_t_cut: Tuple[int, ...]    # (R,)
+    server_stride: int = 1
+    group_keys: Tuple[GroupKey, ...] = ()   # (G,) for cache fills
+    group_seed: Tuple[int, ...] = ()        # (G,) the seeds actually used
+    inject: Optional[InjectTables] = None   # cache-hit groups (H rows)
+    hit_t_cut: Tuple[int, ...] = ()         # (H,)
 
     @property
     def n_groups(self) -> int:
+        """Scanned (server-phase) groups — excludes injected cache hits
+        and any all-masked padding rows appended by ``pad_plan``."""
         return len(self.group_t_cut)
+
+    @property
+    def n_hits(self) -> int:
+        return len(self.hit_t_cut)
 
     @property
     def n_requests(self) -> int:
         return len(self.request_t_cut)
 
     @property
+    def group_steps(self) -> Tuple[int, ...]:
+        return tuple(n_server_calls(self.T, tc, self.server_stride)
+                     for tc in self.group_t_cut)
+
+    @property
     def server_steps_run(self) -> int:
-        """Server model calls the engine performs (one prefix per group)."""
-        return sum(self.T - tc for tc in self.group_t_cut)
+        """Server model calls the engine performs (one prefix per scanned
+        group; cache hits and padding rows contribute zero)."""
+        return sum(self.group_steps)
 
     @property
     def server_steps_saved(self) -> int:
-        """Server model calls the (y, t_ζ) dedup avoids vs per-request."""
-        return sum(self.T - tc for tc in self.request_t_cut) - \
-            self.server_steps_run
+        """Server model calls the (y, t_ζ) dedup avoids vs per-request —
+        counted against ALL unique groups (hit or miss): the dedup saving
+        is logically independent of the cache."""
+        uniq = self.server_steps_run + self.server_steps_saved_by_cache
+        return sum(n_server_calls(self.T, tc, self.server_stride)
+                   for tc in self.request_t_cut) - uniq
 
-
-def _group_key(t_cut: int, y: np.ndarray):
-    return (int(t_cut), y.shape, y.dtype.str, y.tobytes())
+    @property
+    def server_steps_saved_by_cache(self) -> int:
+        """Server model calls skipped because the prefix was injected from
+        the cross-wave cache."""
+        return sum(n_server_calls(self.T, tc, self.server_stride)
+                   for tc in self.hit_t_cut)
 
 
 def plan_requests(requests: Sequence[SampleRequest], T: int,
                   adjusted: bool = True,
-                  n_clients: Optional[int] = None) -> SamplePlan:
+                  n_clients: Optional[int] = None,
+                  server_stride: int = 1,
+                  group_seed_fn: Optional[Callable[[GroupKey], int]] = None,
+                  request_seeds: Optional[Sequence[int]] = None,
+                  lookup_fn: Optional[Callable[[GroupKey],
+                                               Optional[jnp.ndarray]]] = None,
+                  image_shape: Optional[Tuple[int, ...]] = None) -> SamplePlan:
     """Build the padded step tables for one wave of requests.
 
     All requests must share the global T and the per-request batch size B
@@ -106,6 +233,19 @@ def plan_requests(requests: Sequence[SampleRequest], T: int,
     order, so appending requests to a wave never renumbers existing groups
     (the padding-invariance tests rely on this).
 
+    ``server_stride`` > 1 swaps every group's server row for the clamped
+    strided DDIM table — the executor must then be built with
+    ``server_ddim=True`` (stride and update rule travel together; the
+    serve runtime pairs them from one config field).
+
+    ``group_seed_fn`` / ``request_seeds`` override the wave-local default
+    seeds (``arange``) with stable identities — see module docstring.
+
+    ``lookup_fn`` (requires ``image_shape``) probes each unique group for
+    a precomputed handoff: probes happen once per unique group, in
+    first-seen order; hits become ``InjectTables`` rows instead of scan
+    rows.  A returned handoff must be (B, *image_shape).
+
     Pass ``n_clients`` (the stacked client-params leading axis) whenever
     it is known: the executor's ``l[request_client]`` gather CLAMPS
     out-of-range indices under jit — a bad client id would silently sample
@@ -113,16 +253,25 @@ def plan_requests(requests: Sequence[SampleRequest], T: int,
     at plan time."""
     if not requests:
         raise ValueError("plan_requests: empty request wave")
+    if lookup_fn is not None and image_shape is None:
+        raise ValueError("plan_requests: lookup_fn requires image_shape "
+                         "(shapes the empty inject tables)")
+    if request_seeds is not None and len(request_seeds) != len(requests):
+        raise ValueError(
+            f"plan_requests: {len(request_seeds)} request_seeds for "
+            f"{len(requests)} requests")
     for r in requests:
         if r.client < 0 or (n_clients is not None and r.client >= n_clients):
             raise ValueError(
                 f"request client {r.client} outside [0, {n_clients}): the "
                 "engine's stacked-params gather would clamp, not error")
     B = requests[0].y.shape[0]
-    groups = {}
-    group_cut: List[int] = []
-    group_y: List[np.ndarray] = []
-    req_group, req_client, req_cut = [], [], []
+    nc = requests[0].y.shape[1]
+    groups: Dict[GroupKey, int] = {}          # key -> unique-group ordinal
+    uniq_cut: List[int] = []
+    uniq_y: List[np.ndarray] = []
+    uniq_hit: List[Optional[jnp.ndarray]] = []
+    req_uniq, req_client, req_cut = [], [], []
     for r in requests:
         y = np.asarray(r.y, np.float32)
         if y.shape[0] != B:
@@ -131,26 +280,50 @@ def plan_requests(requests: Sequence[SampleRequest], T: int,
                 f"{B}; pad requests to a common B first")
         if not 0 <= r.t_cut <= T:
             raise ValueError(f"t_cut {r.t_cut} outside [0, {T}]")
-        gk = _group_key(r.t_cut, y)
-        g = groups.setdefault(gk, len(group_cut))
-        if g == len(group_cut):
-            group_cut.append(int(r.t_cut))
-            group_y.append(y)
-        req_group.append(g)
+        gk = group_key(r.t_cut, y, server_stride)
+        u = groups.setdefault(gk, len(uniq_cut))
+        if u == len(uniq_cut):
+            uniq_cut.append(int(r.t_cut))
+            uniq_y.append(y)
+            # zero-step (ICM) prefixes are never cacheable (the cache
+            # rejects them) — skip the probe so steady-state telemetry
+            # doesn't count an eternal miss per wave
+            hit = lookup_fn(gk) if lookup_fn is not None and \
+                n_server_calls(T, r.t_cut, server_stride) > 0 else None
+            if hit is not None and tuple(hit.shape) != (B,) + tuple(
+                    image_shape):
+                raise ValueError(
+                    f"lookup_fn handoff shape {tuple(hit.shape)} != "
+                    f"{(B,) + tuple(image_shape)}")
+            uniq_hit.append(hit)
+        req_uniq.append(u)
         req_client.append(int(r.client))
         req_cut.append(int(r.t_cut))
 
-    G, R = len(group_cut), len(requests)
-    s_max = max(T - tc for tc in group_cut)
+    # split unique groups into scanned (miss) and injected (hit) rows,
+    # both in first-seen order; the combined axis is [scanned | injected]
+    miss = [u for u in range(len(uniq_cut)) if uniq_hit[u] is None]
+    hit = [u for u in range(len(uniq_cut)) if uniq_hit[u] is not None]
+    G, H, R = len(miss), len(hit), len(requests)
+    final_idx = {u: i for i, u in enumerate(miss)}
+    final_idx.update({u: G + j for j, u in enumerate(hit)})
+    group_cut = [uniq_cut[u] for u in miss]
+    uniq_keys = list(groups)                  # insertion order = ordinal
+
+    steps = [n_server_calls(T, tc, server_stride) for tc in group_cut]
+    s_max = max(steps, default=0)
     c_max = max(req_cut)
     # padded entries use t=1 / t_prev=0 — valid schedule coordinates, so a
     # masked step computes finite garbage that the executor's where() drops
     gt = np.ones((G, s_max), np.float32)
+    gtp = np.zeros((G, s_max), np.float32)
     ga = np.zeros((G, s_max), np.float32)
     for g, tc in enumerate(group_cut):
-        n = T - tc
+        tl, tp = server_table_np(T, tc, server_stride)
+        n = tl.shape[0]
         if n:
-            gt[g, :n] = np.arange(T, tc, -1, dtype=np.float32)
+            gt[g, :n] = tl
+            gtp[g, :n] = tp
             ga[g, :n] = 1.0
     ct = np.ones((R, c_max), np.float32)
     ctp = np.zeros((R, c_max), np.float32)
@@ -162,34 +335,117 @@ def plan_requests(requests: Sequence[SampleRequest], T: int,
             ct[i, :n] = np.asarray(tl)
             ctp[i, :n] = np.asarray(tp)
             ca[i, :n] = 1.0
+    gy = np.stack([uniq_y[u] for u in miss]) if G else \
+        np.zeros((0, B, nc), np.float32)
+    gseed = [group_seed_fn(uniq_keys[u]) for u in miss] \
+        if group_seed_fn is not None else list(range(G))
+    rseed = list(request_seeds) if request_seeds is not None else \
+        list(range(R))
     tables = PlanTables(
-        group_y=jnp.asarray(np.stack(group_y)),
-        group_t=jnp.asarray(gt), group_active=jnp.asarray(ga),
-        request_group=jnp.asarray(req_group, jnp.int32),
+        group_y=jnp.asarray(gy),
+        group_t=jnp.asarray(gt), group_t_prev=jnp.asarray(gtp),
+        group_active=jnp.asarray(ga),
+        group_seed=jnp.asarray(gseed, jnp.int32).reshape((G,)),
+        request_group=jnp.asarray([final_idx[u] for u in req_uniq],
+                                  jnp.int32),
         request_client=jnp.asarray(req_client, jnp.int32),
+        request_seed=jnp.asarray(rseed, jnp.int32),
         client_t=jnp.asarray(ct), client_t_prev=jnp.asarray(ctp),
         client_active=jnp.asarray(ca))
+    inject = None
+    if lookup_fn is not None:
+        if H:
+            ix = jnp.stack([uniq_hit[u] for u in hit])
+            iy = jnp.asarray(np.stack([uniq_y[u] for u in hit]))
+        else:
+            ix = jnp.zeros((0, B) + tuple(image_shape), jnp.float32)
+            iy = jnp.zeros((0, B, nc), jnp.float32)
+        inject = InjectTables(x=ix, y=iy)
     return SamplePlan(T=T, adjusted=adjusted, tables=tables,
                       group_t_cut=tuple(group_cut),
-                      request_t_cut=tuple(req_cut))
+                      request_t_cut=tuple(req_cut),
+                      server_stride=server_stride,
+                      group_keys=tuple(uniq_keys[u] for u in miss),
+                      group_seed=tuple(int(s) for s in gseed),
+                      inject=inject,
+                      hit_t_cut=tuple(uniq_cut[u] for u in hit))
 
 
-def strided_server_table(cut: CutPoint, stride: int
-                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(t, t_prev) for the strided DDIM server schedule (beyond-paper §5):
-    model calls at T, T−stride, …, with the LAST entry's target clamped to
-    exactly t_cut — also when ``stride`` does not divide ``n_server_steps``
-    (the leftover n mod stride timesteps fold into the final, shorter DDIM
-    jump instead of the handoff landing above t_ζ).  Single source of the
-    table for core/sampler.server_denoise_ddim; pinned by
-    tests/test_sampler.test_ddim_stride_table_clamps_to_cut."""
-    if stride < 1:
-        raise ValueError(f"stride must be >= 1, got {stride}")
-    full = np.arange(cut.T, cut.t_cut, -1, dtype=np.float32)
-    t = full[::stride]
-    # ICM (t_ζ=T): zero server steps -> BOTH arrays empty (no phantom
-    # trailing t_prev entry; same contract as CutPoint.client_step_table)
-    t_prev = np.concatenate(
-        [t[1:], np.full((min(t.shape[0], 1),), float(cut.t_cut),
-                        np.float32)])
-    return jnp.asarray(t), jnp.asarray(t_prev)
+def pad_plan(plan: SamplePlan, n_groups: Optional[int] = None,
+             n_requests: Optional[int] = None,
+             n_inject: Optional[int] = None) -> SamplePlan:
+    """Pad a plan's group / request / inject axes up to the scheduler's
+    shape tiers with INERT rows — all-masked steps, zero conditioning,
+    seed 0 — so every wave of a bucket presents the executor with one
+    fixed signature (one compile).  Row-keyed noise + masked steps make
+    the padding semantically invisible (tests/test_serve_runtime.py
+    padding-invariance property tests).  Padding is appended, so real-row
+    indices — including ``request_group``'s combined-axis indices, because
+    injected rows are RE-INDEXED to sit after the padded scan axis — are
+    preserved; metadata tuples (``group_t_cut`` …) keep describing only
+    the real rows (accounting uses them; physical shapes come from the
+    tables)."""
+    t = plan.tables
+    G = t.group_t.shape[0]
+    R = t.client_t.shape[0]
+    gpad = 0 if n_groups is None else n_groups - G
+    rpad = 0 if n_requests is None else n_requests - R
+    if gpad < 0 or rpad < 0:
+        raise ValueError(f"pad_plan: target sizes ({n_groups}, {n_requests})"
+                         f" smaller than plan ({G}, {R})")
+    rg = np.asarray(t.request_group)
+    if gpad:
+        # injected rows sit after the scan axis: shift their indices up
+        rg = np.where(rg >= G, rg + gpad, rg)
+    pad2 = lambda a, n, v=0.0: jnp.pad(a, ((0, n), (0, 0)),
+                                       constant_values=v)
+    tables = t._replace(
+        group_y=jnp.pad(t.group_y, ((0, gpad),) + ((0, 0),) *
+                        (t.group_y.ndim - 1)),
+        group_t=pad2(t.group_t, gpad, 1.0),
+        group_t_prev=pad2(t.group_t_prev, gpad),
+        group_active=pad2(t.group_active, gpad),
+        group_seed=jnp.pad(t.group_seed, (0, gpad)),
+        request_group=jnp.pad(jnp.asarray(rg, jnp.int32), (0, rpad)),
+        request_client=jnp.pad(t.request_client, (0, rpad)),
+        request_seed=jnp.pad(t.request_seed, (0, rpad)),
+        client_t=pad2(t.client_t, rpad, 1.0),
+        client_t_prev=pad2(t.client_t_prev, rpad),
+        client_active=pad2(t.client_active, rpad))
+    inject = plan.inject
+    if n_inject is not None:
+        if inject is None:
+            raise ValueError("pad_plan: n_inject on a plan without inject "
+                             "tables (plan with lookup_fn first)")
+        ipad = n_inject - inject.x.shape[0]
+        if ipad < 0:
+            raise ValueError(f"pad_plan: n_inject {n_inject} smaller than "
+                             f"{inject.x.shape[0]}")
+        inject = InjectTables(
+            x=jnp.pad(inject.x, ((0, ipad),) + ((0, 0),) *
+                      (inject.x.ndim - 1)),
+            y=jnp.pad(inject.y, ((0, ipad), (0, 0), (0, 0))))
+    return dataclasses.replace(plan, tables=tables, inject=inject)
+
+
+def call_accounting(plan: SamplePlan) -> Dict[str, int]:
+    """Physical vs logical model-call accounting for one (possibly padded)
+    plan.  PHYSICAL counts what the executor's scans actually launch —
+    every (row, step) cell of the final tables, masked or not, because a
+    masked step still executes (and discards) its model call.  LOGICAL
+    counts the active cells (useful work).  ``padded_model_calls`` is the
+    gap — the padding overhead the shape-stable scheduler is supposed to
+    keep small, reported alongside the *logical* dedup/cache savings so
+    the serve report can't hide physical waste behind logical wins."""
+    t = plan.tables
+    phys_s = int(t.group_t.shape[0] * t.group_t.shape[1])
+    phys_c = int(t.client_t.shape[0] * t.client_t.shape[1])
+    log_s = int(round(float(jnp.sum(t.group_active))))
+    log_c = int(round(float(jnp.sum(t.client_active))))
+    return {
+        "server_calls_physical": phys_s,
+        "server_calls_logical": log_s,
+        "client_calls_physical": phys_c,
+        "client_calls_logical": log_c,
+        "padded_model_calls": (phys_s - log_s) + (phys_c - log_c),
+    }

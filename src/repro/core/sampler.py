@@ -24,7 +24,24 @@ loop:
   tables ``(R, C_max)`` with the Alg.-2 M-remap baked in, plus a dedup
   pass grouping requests by ``(y, t_ζ)`` so each shared server prefix
   runs ONCE (generalizing ``shared_handoff_sample``).  The executor here
-  never recomputes schedule logic — it scans the tables.
+  never recomputes schedule logic — it scans the tables, including the
+  per-step ``t_prev`` column, which is what lets one executor run both
+  the full DDPM sweep and the clamped strided schedule (the table is the
+  single source of step geometry).
+* **Strided / DDIM server phase.**  ``server_ddim=True`` builds the
+  executor with the deterministic DDIM update (schedules.ddim_step,
+  vmapped over the group axis) in the server scan instead of the noised
+  DDPM step — pair it with ``plan_requests(server_stride > 1)``, whose
+  group rows then hold the clamped strided table (⌈(T−t_ζ)/stride⌉ model
+  calls; the serve runtime pairs stride and mode from one config field).
+  The client phase is always full DDPM — only the *server* prefix is
+  strided, exactly as in ``server_denoise_ddim``.
+* **Injected (cached) handoffs.**  The optional ``inject`` argument
+  (sample_plan.InjectTables) carries precomputed server handoffs: the
+  executor concatenates them after the server scan's output and the
+  request gathers index the combined ``[scanned | injected]`` axis, so a
+  cache-hit group (serve/prefix_cache.py) consumes ZERO physical server
+  model calls — the server phase is skipped, not masked.
 * **Two masked scans, one program.**  Phase 1 scans the step axis over
   the stacked group axis (server model, shared params, vmapped over G);
   phase 2 gathers each request's handoff (``handoff[request_group]``) and
@@ -39,11 +56,15 @@ loop:
   G·S_max + R·C_max applies instead of Σ(T−t_ζ_g) + Σt_ζ_r — bucketing
   waves by prefix length, like ``bucket_round_batches`` does for
   training, is the ROADMAP follow-up.
-* **Row-keyed noise.**  Every draw is ``rowwise_normal`` (splitting.
-  row_keys) keyed by (phase key, group/request index, STEP index, row):
-  fold_in-by-index rather than chained splits, so masked steps consume no
-  randomness and padding the request batch never perturbs a real row —
-  the PR-2 training discipline applied to inference.  This makes the
+* **Row-keyed noise, stable seeds.**  Every draw is ``rowwise_normal``
+  (splitting.row_keys) keyed by (phase key, group/request SEED, STEP
+  index, row): fold_in-by-seed rather than chained splits, so masked
+  steps consume no randomness and padding the request batch never
+  perturbs a real row — the PR-2 training discipline applied to
+  inference.  The seeds come from the plan tables (default: wave-local
+  indices); the serve runtime passes content-/arrival-stable seeds so a
+  group's server trajectory is reproducible across waves — the property
+  the cross-wave prefix cache's bitwise warm-vs-cold guarantee rests on.  This makes the
   engine key-INcompatible with the legacy chained-split per-request
   samplers above; the eager oracle with the engine's discipline is
   ``sample_plan_reference`` (the inference counterpart of
@@ -168,58 +189,93 @@ def server_denoise_ddim(server_params, key, y, shape,
 # ---------------------------------------------------------------------------
 
 
+def check_engine_plan(server_ddim: bool, plan: SamplePlan) -> None:
+    """Stride and update rule travel together: a strided plan's group
+    tables hold multi-step t→t_prev jumps that only the deterministic
+    DDIM update interprets correctly, and a stride-1 plan must take the
+    noised DDPM path.  The engine cannot see ``plan.server_stride`` (it
+    receives only the table arrays), so callers pairing plans with
+    engines by hand should run this check — a mismatch produces finite,
+    statistically WRONG samples, not an error.  The serve runtime pairs
+    both from one config field and asserts here per wave."""
+    if (plan.server_stride > 1) != server_ddim:
+        raise ValueError(
+            f"plan server_stride={plan.server_stride} but engine was "
+            f"built with server_ddim={server_ddim}: a strided plan needs "
+            "make_sample_engine(server_ddim=True) and vice versa")
+
+
 def make_sample_engine(sched: DiffusionSchedule, apply_fn,
                        image_shape: Tuple[int, ...],
                        use_pallas: Optional[bool] = None,
-                       interpret: bool = False, jit: bool = True):
+                       interpret: bool = False, jit: bool = True,
+                       server_ddim: bool = False):
     """Build the batched executor:
 
-        engine(server_params, stacked_client_params, key, tables)
+        engine(server_params, stacked_client_params, key, tables,
+               inject=None)
             -> (samples (R, B, *image_shape), handoffs (G, B, *image_shape))
 
     ``tables`` is a sample_plan.PlanTables (one wave of requests);
     ``stacked_client_params`` carries a leading (k,) client axis
     (core/collab.stack_clients layout) which ``tables.request_client``
-    indexes.  ``image_shape`` is the per-sample trailing shape (H, W, C);
-    the request batch B comes from the tables.  jit recompiles per
-    distinct (G, R, S_max, C_max, B) signature — the serve driver buckets
-    waves to stabilize shapes."""
+    indexes.  ``inject`` is an optional sample_plan.InjectTables of
+    cache-hit handoffs concatenated after the server scan (see module
+    docstring); the returned ``handoffs`` are the SCANNED groups only —
+    rows [0, G), aligned with ``plan.group_keys`` for cache fills.
+    ``server_ddim=True`` runs the deterministic DDIM update in the server
+    scan (pair with ``plan_requests(server_stride > 1)`` tables; the
+    pairing is the caller's contract — validate it with
+    ``check_engine_plan``, as the serve runtime does).
+    ``image_shape`` is the per-sample trailing shape (H, W, C); the
+    request batch B comes from the tables.  jit recompiles per distinct
+    (G, H, R, S_max, C_max, B) signature — the serve scheduler buckets
+    waves and pads the axes to fixed tiers to stabilize shapes."""
     up = _resolve_kernel(use_pallas)
 
-    def engine(server_params, client_params, key, tables: PlanTables):
-        (gy, gt, ga, rgroup, rclient, ct, ctp, ca) = tables
+    def engine(server_params, client_params, key, tables: PlanTables,
+               inject=None):
+        (gy, gt, gtp, ga, gseed, rgroup, rclient, rseed, ct, ctp,
+         ca) = tables
         G, B = gy.shape[0], gy.shape[1]
         R = rgroup.shape[0]
         shape = (B,) + tuple(image_shape)
         skey, ckey = jax.random.split(key)
-        gkeys = jax.vmap(lambda g: jax.random.fold_in(skey, g))(
-            jnp.arange(G))
+        gkeys = jax.vmap(lambda g: jax.random.fold_in(skey, g))(gseed)
         x0 = jax.vmap(
             lambda gk: _rowwise_normal(jax.random.fold_in(gk, 0), shape))(
             gkeys)                                           # (G, B, ...)
 
         def server_step(x, inp):
-            t, active, sidx = inp                    # (G,), (G,), scalar
+            t, t_prev, active, sidx = inp            # (G,)×3, scalar
             eps = jax.vmap(
                 lambda xg, tg, yg: apply_fn(server_params, xg,
                                             jnp.full((B,), tg), yg))(
                 x, t, gy)
-            noise = jax.vmap(lambda gk: _rowwise_normal(
-                jax.random.fold_in(gk, 1 + sidx), shape))(gkeys)
-            xn = ddpm_step_batched(x, eps, noise, sched, t, use_pallas=up,
-                                   interpret=interpret)
+            if server_ddim:
+                xn = jax.vmap(sched.ddim_step)(x, eps, t, t_prev)
+            else:
+                noise = jax.vmap(lambda gk: _rowwise_normal(
+                    jax.random.fold_in(gk, 1 + sidx), shape))(gkeys)
+                xn = ddpm_step_batched(x, eps, noise, sched, t,
+                                       t_prev=t_prev, use_pallas=up,
+                                       interpret=interpret)
             keep = active.reshape((-1,) + (1,) * (x.ndim - 1)) > 0
             return jnp.where(keep, xn, x), None
 
         handoff, _ = jax.lax.scan(
             server_step, x0,
-            (gt.T, ga.T, jnp.arange(gt.shape[1])))
+            (gt.T, gtp.T, ga.T, jnp.arange(gt.shape[1])))
 
         params_r = jax.tree.map(lambda l: l[rclient], client_params)
-        y_r = gy[rgroup]                                     # (R, B, nc)
-        x = handoff[rgroup]                                  # (R, B, ...)
-        rkeys = jax.vmap(lambda r: jax.random.fold_in(ckey, r))(
-            jnp.arange(R))
+        if inject is not None:
+            handoff_all = jnp.concatenate([handoff, inject.x], axis=0)
+            y_all = jnp.concatenate([gy, inject.y], axis=0)
+        else:
+            handoff_all, y_all = handoff, gy
+        y_r = y_all[rgroup]                                  # (R, B, nc)
+        x = handoff_all[rgroup]                              # (R, B, ...)
+        rkeys = jax.vmap(lambda r: jax.random.fold_in(ckey, r))(rseed)
 
         def client_step(x, inp):
             t, t_prev, active, cidx = inp
@@ -246,11 +302,14 @@ def sample_plan_reference(server_params, client_params_list, key,
                           apply_fn, image_shape: Tuple[int, ...]):
     """Differential-testing oracle for the batched engine — the inference
     counterpart of core/collab.train_round_reference: identical semantics
-    and PRNG discipline (per-group/per-request fold_in, per-STEP fold_in,
-    row-keyed noise, one shared server prefix per (y, t_ζ) group), but
-    plain Python loops over per-request pytrees — no vmap, no scan, no
-    ``where`` (a masked step is simply not executed).  Returns the same
-    (samples, handoffs) pair, stacked."""
+    and PRNG discipline (per-group/per-request fold_in BY SEED, per-STEP
+    fold_in, row-keyed noise, one shared server prefix per (y, t_ζ)
+    group), but plain Python loops over per-request pytrees — no vmap, no
+    scan, no ``where`` (a masked step is simply not executed).  Honors
+    the plan's ``server_stride`` (strided groups take the eager
+    deterministic-DDIM path — the strided executor's oracle) and its
+    ``inject`` rows (a cache-hit group's handoff is used as-is, never
+    recomputed).  Returns the same (samples, handoffs) pair, stacked."""
     t = plan.tables
     gy = t.group_y
     G, B = gy.shape[0], gy.shape[1]
@@ -258,27 +317,37 @@ def sample_plan_reference(server_params, client_params_list, key,
     skey, ckey = jax.random.split(key)
     handoffs = []
     for g in range(G):
-        gk = jax.random.fold_in(skey, g)
+        gk = jax.random.fold_in(skey, int(t.group_seed[g]))
         x = _rowwise_normal(jax.random.fold_in(gk, 0), shape)
-        for s in range(plan.T - plan.group_t_cut[g]):
-            tt = t.group_t[g, s]
+        for s in range(plan.group_steps[g]):
+            tt, tp = t.group_t[g, s], t.group_t_prev[g, s]
             eps = apply_fn(server_params, x, jnp.full((B,), tt), gy[g])
-            noise = _rowwise_normal(jax.random.fold_in(gk, 1 + s), shape)
-            x = fused_ddpm_step(x, eps, noise, sched, tt)
+            if plan.server_stride > 1:
+                x = sched.ddim_step(x, eps, tt, tp)
+            else:
+                noise = _rowwise_normal(jax.random.fold_in(gk, 1 + s),
+                                        shape)
+                x = fused_ddpm_step(x, eps, noise, sched, tt, t_prev=tp)
         handoffs.append(x)
+    combined = handoffs + ([plan.inject.x[h] for h in range(plan.n_hits)]
+                           if plan.inject is not None else [])
+    y_all = [gy[g] for g in range(G)] + \
+        ([plan.inject.y[h] for h in range(plan.n_hits)]
+         if plan.inject is not None else [])
     outs = []
     for r in range(plan.n_requests):
-        rk = jax.random.fold_in(ckey, r)
+        rk = jax.random.fold_in(ckey, int(t.request_seed[r]))
         g = int(t.request_group[r])
-        x = handoffs[g]
+        x = combined[g]
         cp = client_params_list[int(t.request_client[r])]
         for c in range(plan.request_t_cut[r]):
             tt, tp = t.client_t[r, c], t.client_t_prev[r, c]
-            eps = apply_fn(cp, x, jnp.full((B,), tt), gy[g])
+            eps = apply_fn(cp, x, jnp.full((B,), tt), y_all[g])
             noise = _rowwise_normal(jax.random.fold_in(rk, c), shape)
             x = fused_ddpm_step(x, eps, noise, sched, tt, t_prev=tp)
         outs.append(x)
-    return jnp.stack(outs), jnp.stack(handoffs)
+    return jnp.stack(outs), (jnp.stack(handoffs) if handoffs else
+                             jnp.zeros((0,) + shape, jnp.float32))
 
 
 def make_per_request_sampler(sched: DiffusionSchedule, apply_fn,

@@ -1,33 +1,43 @@
-"""Request-batching serve driver for the collaborative sampling engine.
+"""Thin CLI over the collaborative serve runtime (serve/runtime.py).
 
     PYTHONPATH=src python -m repro.launch.collab_serve --smoke
     PYTHONPATH=src python -m repro.launch.collab_serve \
         --clients 5 --requests 24 --T 60 --t-cuts 5,10,20,10,40 --compare
 
-The ROADMAP north star is serving CollaFuse inference under heavy traffic;
-this driver is the queue-facing layer on top of the planner/executor
-engine (core/sample_plan.py + core/sampler.make_sample_engine):
+The ROADMAP north star is serving CollaFuse inference under heavy
+traffic; all the machinery now lives in ``repro.serve`` (cross-wave
+prefix cache + shape-stable scheduler + runtime loop over the
+planner/executor engine) — this driver only builds models, synthesizes a
+queue, and prints the serve report:
 
-  queue → waves of ≤ --max-wave requests → plan_requests (dedup by
-  (y, t_ζ)) → ONE jitted engine call per wave → per-request latency /
-  throughput report.
+  queue → ServeRuntime.process → per-request latency / throughput /
+  cache hit rate / physical-vs-logical model calls / recompile report.
 
 Each synthetic request is (client, label, t_ζ) where t_ζ is the CLIENT's
 own cut point (--t-cuts): the per-client heterogeneity regime — each edge
-device finishes the number of denoising steps its compute budget allows —
-that the per-request samplers could only serve one program at a time.
-``--compare`` additionally runs the sequential per-request baseline (one
-jitted Alg.-2 program per request, compiled per distinct cut) on the same
-queue.  The dedup column reports the server model calls the (y, t_ζ)
-grouping avoided.  ``--toy`` (default) uses the protocol-scale linear
-denoiser so the smoke entry in scripts/ci.sh stays seconds-cheap on CPU;
-``--unet`` swaps in the reduced paper U-Net.
+device finishes the number of denoising steps its compute budget allows.
+``--zipf`` skews the label distribution (repeated-label traffic is what
+the cross-wave cache monetizes); ``--passes`` replays the queue, so
+steady-state behavior (warm cache, zero recompiles) is visible from the
+per-pass reports.  ``--compare`` additionally runs the same traffic
+through a PR-3-equivalent runtime (fifo scheduler, cache off) and prints
+the speedup and the physical server-model-call reduction.  ``--toy``
+(default) uses the protocol-scale linear denoiser so the CI smoke stays
+seconds-cheap on CPU; ``--unet`` swaps in the reduced paper U-Net.
+
+``--smoke`` is the CI tier-1 entry (scripts/ci.sh): a mixed-cut queue
+with repeated (y, t_ζ) traffic, served for three passes (cold fill /
+first warm / steady), ASSERTING the
+serve subsystem's contract — ≥1 cache hit, bitwise warm-vs-cold equality
+against a cache-less run, steady-state recompile count per bucket of
+exactly 1 (via the runtime's jit trace-counter guard: zero engine
+re-traces in the steady pass), and ≥30% fewer physical server model
+calls than the fifo/no-cache baseline at equal (bitwise) output.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 from typing import List
 
 import jax
@@ -35,10 +45,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.ddpm_unet import SMALL
-from repro.core.sample_plan import SampleRequest, plan_requests
-from repro.core.sampler import make_per_request_sampler, make_sample_engine
+from repro.core.sample_plan import SampleRequest
 from repro.core.schedules import DiffusionSchedule
 from repro.core.unet import init_unet, unet_apply
+from repro.serve import ServeConfig, ServeRuntime
 
 
 def build_models(args, key):
@@ -58,107 +68,107 @@ def build_models(args, key):
     return sp, cp, lambda p, x, t, y: x * p["a"] + p["b"]
 
 
-def synth_queue(args, rng: np.random.Generator,
-                cuts: List[int]) -> List[SampleRequest]:
+def zipf_probs(n_classes: int, a: float) -> np.ndarray:
+    """p(rank) ∝ 1/(rank+1)^a — a=0 is uniform; a≈1 is the classic
+    web-traffic skew that makes repeated-label serving the common case."""
+    p = 1.0 / np.arange(1, n_classes + 1, dtype=np.float64) ** a
+    return p / p.sum()
+
+
+def synth_queue(rng: np.random.Generator, *, clients: int, cuts: List[int],
+                requests: int, batch: int, n_classes: int,
+                zipf: float = 0.0) -> List[SampleRequest]:
+    """Synthetic traffic: each request is a uniform client at its own cut
+    with a (possibly Zipf-skewed) label — shared by this CLI and
+    benchmarks/collab_serve_runtime.py so both measure the same workload."""
     reqs = []
-    eye = np.eye(args.n_classes, dtype=np.float32)
-    for _ in range(args.requests):
-        c = int(rng.integers(args.clients))
-        label = int(rng.integers(args.n_classes))
-        y = np.broadcast_to(eye[label], (args.batch, args.n_classes)).copy()
+    eye = np.eye(n_classes, dtype=np.float32)
+    probs = zipf_probs(n_classes, zipf)
+    for _ in range(requests):
+        c = int(rng.integers(clients))
+        label = int(rng.choice(n_classes, p=probs))
+        y = np.broadcast_to(eye[label], (batch, n_classes)).copy()
         reqs.append(SampleRequest(client=c, t_cut=cuts[c], y=y))
     return reqs
 
 
-def serve(args, engine, sp, cp, queue, key):
-    """Drain the queue in waves; returns (outputs, report dict). Plans are
-    built up front and every distinct table-shape signature is warmed once
-    before the clock starts, so the report measures steady-state serving
-    rather than XLA compiles."""
-    waves = []
-    for start in range(0, len(queue), args.max_wave):
-        wave = queue[start:start + args.max_wave]
-        n_real = len(wave)
-        if args.pad_waves and n_real < args.max_wave:
-            # repeat the tail request so the final partial wave keeps the
-            # request-axis size R of the full waves (the dup rows dedup
-            # into the tail's server group and are sliced off below);
-            # the group count G still varies with each wave's label/cut
-            # mix, so distinct G signatures can still compile — the warm
-            # pass below absorbs those (padding G is a ROADMAP open item)
-            wave = wave + [wave[-1]] * (args.max_wave - n_real)
-        plan = plan_requests(wave, args.T, n_clients=args.clients)
-        # dedup/latency stats count only the real requests; the padded
-        # plan is recomputed just for the final partial wave
-        stats = plan if n_real == len(wave) else \
-            plan_requests(queue[start:start + args.max_wave], args.T,
-                          n_clients=args.clients)
-        waves.append((plan, stats, n_real))
-    warmed = set()
-    for plan, _, _ in waves:
-        sig = tuple(a.shape for a in plan.tables)
-        if sig not in warmed:
-            jax.block_until_ready(engine(
-                sp, cp, jax.random.fold_in(key, 10**6), plan.tables)[0])
-            warmed.add(sig)
-
-    t_start = time.perf_counter()
-    latencies, wave_sizes = [], []
-    groups_total, saved = 0, 0
-    outs = []
-    for w, (plan, stats, n_real) in enumerate(waves):
-        out, _ = engine(sp, cp, jax.random.fold_in(key, w), plan.tables)
-        jax.block_until_ready(out)
-        done = time.perf_counter() - t_start
-        latencies.extend([done] * n_real)      # whole wave completes together
-        wave_sizes.append(n_real)
-        groups_total += stats.n_groups
-        saved += stats.server_steps_saved
-        outs.append(out[:n_real])
-    wall = time.perf_counter() - t_start
-    lat = np.asarray(latencies)
-    return outs, {
-        "requests": len(queue), "waves": len(wave_sizes),
-        "wall_s": wall, "req_per_s": len(queue) / wall,
-        "samples_per_s": len(queue) * args.batch / wall,
-        "latency_p50_s": float(np.percentile(lat, 50)),
-        "latency_p95_s": float(np.percentile(lat, 95)),
-        "server_prefix_groups": groups_total,
-        "server_calls_saved_by_dedup": saved,
-    }
+def make_runtime(args, sp, cp, apply_fn, sched, key, *, policy=None,
+                 cache=None) -> ServeRuntime:
+    cfg = ServeConfig(
+        T=args.T, image_shape=(args.image_size, args.image_size, 3),
+        max_wave=args.max_wave,
+        policy=args.policy if policy is None else policy,
+        server_stride=args.stride,
+        cache=(not args.no_cache) if cache is None else cache,
+        cache_max_bytes=args.cache_bytes)
+    return ServeRuntime(cfg, sp, cp, apply_fn, sched, key)
 
 
-def serve_sequential(args, sp, cp, apply_fn, sched, queue, key):
-    """Baseline: one jitted per-request Alg.-2 program per queue entry
-    (compiled once per distinct t_ζ; same harness as
-    benchmarks/collab_sample via sampler.make_per_request_sampler)."""
-    shape = (args.batch, args.image_size, args.image_size, 3)
-    fn_for = make_per_request_sampler(sched, apply_fn, shape)
+def print_report(tag: str, report: dict):
+    for k_, v in report.items():
+        print(f"{tag}/{k_}: {v:.4g}" if isinstance(v, float)
+              else f"{tag}/{k_}: {v}")
 
-    # warm every distinct per-cut program so the baseline, like the engine
-    # path, reports steady-state dispatch cost rather than compiles
-    y0 = jnp.asarray(queue[0].y)
-    cp0 = jax.tree.map(lambda l: l[0], cp)
-    for tc in {r.t_cut for r in queue}:
-        jax.block_until_ready(fn_for(tc)(sp, cp0, key, y0))
 
-    t_start = time.perf_counter()
-    latencies = []
-    for i, r in enumerate(queue):
-        cpar = jax.tree.map(lambda l: l[r.client], cp)
-        out = fn_for(r.t_cut)(sp, cpar, jax.random.fold_in(key, i),
-                              jnp.asarray(r.y))
-        jax.block_until_ready(out)
-        latencies.append(time.perf_counter() - t_start)
-    wall = time.perf_counter() - t_start
-    lat = np.asarray(latencies)
-    return {
-        "requests": len(queue), "wall_s": wall,
-        "req_per_s": len(queue) / wall,
-        "samples_per_s": len(queue) * args.batch / wall,
-        "latency_p50_s": float(np.percentile(lat, 50)),
-        "latency_p95_s": float(np.percentile(lat, 95)),
-    }
+def run_passes(rt: ServeRuntime, queue, n_passes: int):
+    """Replay ``queue`` n_passes times; returns (per-pass outputs,
+    per-pass reports).  Arrival ids keep advancing, so every pass draws
+    FRESH samples — only the server prefixes repeat (and hit the cache)."""
+    outs, reports = [], []
+    for _ in range(n_passes):
+        o, r = rt.process(queue)
+        outs.append(o)
+        reports.append(r)
+    return outs, reports
+
+
+def smoke(args, queue, sp, cp, apply_fn, sched, key) -> dict:
+    """CI assertions — see module docstring.  Raises on violation."""
+    n_passes = 3          # cold fill / first warm (compiles) / steady
+    rt = make_runtime(args, sp, cp, apply_fn, sched, key,
+                      policy="depth", cache=True)
+    cold = make_runtime(args, sp, cp, apply_fn, sched, key,
+                        policy="depth", cache=False)
+    fifo = make_runtime(args, sp, cp, apply_fn, sched, key,
+                        policy="fifo", cache=False)
+    outs, reps = run_passes(rt, queue, n_passes)
+    cold_outs, _ = run_passes(cold, queue, n_passes)
+    fifo_outs, fifo_reps = run_passes(fifo, queue, n_passes)
+    steady = reps[-1]
+    print_report("serve/pass1", reps[0])
+    print_report("serve/steady", steady)
+    print_report("fifo_nocache/steady", fifo_reps[-1])
+
+    # ≥1 cache hit on repeated (y, t_ζ) traffic
+    assert steady["cache_hits"] >= 1, steady
+    assert steady["requests_from_cache"] >= 1, steady
+    # warm-vs-cold bitwise: cache hits change NOTHING but the work done
+    for p in range(n_passes):
+        for a, b in zip(outs[p], cold_outs[p]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # scheduler/cache choices are pure perf knobs: fifo output identical
+    for p in range(n_passes):
+        for a, b in zip(outs[p], fifo_outs[p]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # steady state: one compiled signature per bucket, zero re-traces
+    # (the trace counter is the compile guard — jit re-traces exactly
+    # when a wave presents a signature it has never compiled)
+    assert steady["engine_traces"] == 0, steady
+    assert steady["max_signatures_per_bucket"] == 1, steady
+    # physical server-call reduction vs the PR-3-style driver (both
+    # passes: cold fill + warm serve), at the equal output proven above
+    mine = sum(r["server_calls_physical"] for r in reps)
+    base = sum(r["server_calls_physical"] for r in fifo_reps)
+    reduction = 1.0 - mine / base
+    print(f"smoke/server_calls_physical: {mine} vs fifo {base} "
+          f"({100 * reduction:.1f}% reduction)")
+    assert reduction >= 0.30, (mine, base)
+    # the report carries both accounting views (logical vs physical)
+    assert "padded_model_calls" in steady
+    assert "server_calls_saved_by_dedup" in steady
+    print("smoke: OK (cache hits, bitwise warm==cold==fifo, 1 signature "
+          "per bucket in steady state, >=30% fewer physical server calls)")
+    return steady
 
 
 def main(argv=None):
@@ -172,30 +182,45 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4,
                     help="samples per request")
     ap.add_argument("--max-wave", type=int, default=8,
-                    help="max requests batched into one engine call")
-    ap.add_argument("--no-pad-waves", dest="pad_waves", action="store_false",
-                    help="don't pad the final partial wave to max_wave "
-                         "(saves a little compute; the partial wave then "
-                         "compiles its own request-axis size R)")
+                    help="request-axis tier: requests batched per engine "
+                         "call (waves are padded to exactly this)")
+    ap.add_argument("--policy", choices=("depth", "fifo"), default="depth",
+                    help="wave scheduler: depth buckets (shape-stable) or "
+                         "fifo arrival order (the PR-3 baseline)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the cross-wave server-prefix cache")
+    ap.add_argument("--cache-bytes", type=int, default=64 << 20)
+    ap.add_argument("--stride", type=int, default=1,
+                    help=">1 runs the strided DDIM server phase "
+                         "(ceil((T-t_cut)/stride) server calls per prefix)")
+    ap.add_argument("--zipf", type=float, default=1.1,
+                    help="label skew exponent (0 = uniform)")
+    ap.add_argument("--passes", type=int, default=2,
+                    help="replay the queue this many times (pass 2+ shows "
+                         "the steady state: warm cache, no recompiles)")
     ap.add_argument("--image-size", type=int, default=8)
     ap.add_argument("--n-classes", type=int, default=4)
     ap.add_argument("--unet", action="store_true",
                     help="reduced paper U-Net instead of the toy denoiser")
     ap.add_argument("--compare", action="store_true",
-                    help="also run the sequential per-request baseline")
+                    help="also run the PR-3-equivalent fifo/no-cache "
+                         "runtime on the same traffic")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny CI preset (toy model, small queue)")
+                    help="CI preset: assert the serve-subsystem contract "
+                         "(see module docstring)")
     args = ap.parse_args(argv)
-    if args.requests < 1 or args.max_wave < 1 or args.clients < 1:
-        raise SystemExit("--requests, --max-wave, and --clients must be >= 1")
+    if args.requests < 1 or args.max_wave < 1 or args.clients < 1 \
+            or args.passes < 1:
+        raise SystemExit("--requests, --max-wave, --clients, and --passes "
+                         "must be >= 1")
     if args.smoke:
-        # one full wave of 12 requests: wide enough that batching beats
-        # per-request dispatch even on the toy model (per-step row-keying
-        # overhead amortizes over the request axis; see
-        # benchmarks/collab_sample.py for the measured regime)
-        args.requests, args.T, args.max_wave = 12, 20, 12
-        args.compare, args.unet = True, False
+        # mixed-cut queue with repeated (y, t_ζ) traffic: 3 cut-depth
+        # buckets x 2 hot labels, 12 requests/pass, toy model — wide
+        # enough that every bucket sees repeats, small enough for CI
+        args.requests, args.T, args.max_wave = 12, 20, 4
+        args.clients, args.n_classes, args.zipf = 3, 2, 0.0
+        args.unet, args.no_cache, args.stride = False, False, 1
 
     if args.t_cuts:
         cuts = [int(c) for c in args.t_cuts.split(",")]
@@ -212,27 +237,36 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     sp, cp, apply_fn = build_models(args, key)
     sched = DiffusionSchedule.linear(args.T)
-    engine = make_sample_engine(
-        sched, apply_fn, (args.image_size, args.image_size, 3))
     rng = np.random.default_rng(args.seed)
-    queue = synth_queue(args, rng, cuts)
+    queue = synth_queue(rng, clients=args.clients, cuts=cuts,
+                        requests=args.requests, batch=args.batch,
+                        n_classes=args.n_classes, zipf=args.zipf)
 
-    print(f"serving {args.requests} requests x {args.batch} samples, "
-          f"k={args.clients} clients, cuts={cuts}, T={args.T}, "
-          f"max_wave={args.max_wave}")
-    _, report = serve(args, engine, sp, cp, queue, key)
-    for k_, v in report.items():
-        print(f"engine/{k_}: {v:.4g}" if isinstance(v, float)
-              else f"engine/{k_}: {v}")
+    print(f"serving {args.requests} requests x {args.batch} samples x "
+          f"{args.passes} passes, k={args.clients} clients, cuts={cuts}, "
+          f"T={args.T}, stride={args.stride}, max_wave={args.max_wave}, "
+          f"policy={args.policy}, cache={not args.no_cache}")
+    if args.smoke:
+        return smoke(args, queue, sp, cp, apply_fn, sched, key)
+
+    rt = make_runtime(args, sp, cp, apply_fn, sched, key)
+    _, reports = run_passes(rt, queue, args.passes)
+    for i, rep in enumerate(reports):
+        print_report(f"serve/pass{i + 1}", rep)
     if args.compare:
-        base = serve_sequential(args, sp, cp, apply_fn, sched, queue,
-                                jax.random.fold_in(key, 1))
-        for k_, v in base.items():
-            print(f"sequential/{k_}: {v:.4g}" if isinstance(v, float)
-                  else f"sequential/{k_}: {v}")
-        print(f"speedup: {base['wall_s'] / report['wall_s']:.2f}x "
-              f"(engine vs per-request dispatch)")
-    return report
+        base_rt = make_runtime(args, sp, cp, apply_fn, sched, key,
+                               policy="fifo", cache=False)
+        _, base_reports = run_passes(base_rt, queue, args.passes)
+        for i, rep in enumerate(base_reports):
+            print_report(f"fifo_nocache/pass{i + 1}", rep)
+        wall = sum(r["wall_s"] for r in reports)
+        bwall = sum(r["wall_s"] for r in base_reports)
+        phys = sum(r["server_calls_physical"] for r in reports)
+        bphys = sum(r["server_calls_physical"] for r in base_reports)
+        print(f"speedup: {bwall / wall:.2f}x wall, "
+              f"{100 * (1 - phys / max(bphys, 1)):.1f}% fewer physical "
+              f"server calls (serve runtime vs PR-3-style driver)")
+    return reports[-1]
 
 
 if __name__ == "__main__":

@@ -1,0 +1,138 @@
+"""Cross-wave server-prefix cache: the serve runtime's hot-path store.
+
+At "millions of users" scale the server prefix is both the expensive half
+of Algorithm 2 and the REDUNDANT half — conditioning labels and cut
+points repeat across requests far beyond one wave.  PR 3's planner dedups
+shared prefixes inside a single wave; this cache extends the same idea
+across waves: a completed server trajectory is stored AT ITS HANDOFF
+STATE x̂_{t_ζ} (the only tensor Alg. 2 ever ships), keyed by
+
+    (y, t_ζ, server-noise key schedule, stride)
+
+— the full content identity of the prefix.  The first three components
+come from sample_plan.group_key (t_cut, stride, y bytes); the key
+schedule is the runtime's (base-key bytes, stable group seed) pair, which
+pins the exact noise draws the trajectory consumed (fold_in-by-seed,
+core/sampler design notes).  Two runtimes with different base keys — or
+the same runtime before/after a seed-registry change — can therefore
+never alias each other's entries, and a hit is bitwise-exact by
+construction: the stored handoff IS the array a cold run would recompute.
+
+Eviction is LRU over an OrderedDict, bounded by bytes and (optionally)
+entry count; telemetry (hits/misses/insertions/evictions/bytes, plus the
+server model calls the hits skipped) feeds the runtime's serve report.
+Entries hold device arrays — at serve scale the cache lives in
+accelerator memory next to the engine (host offload is a ROADMAP item),
+and sharding/specs.handoff_spec places an entry's (B, ...) batch axis on
+the "data" mesh dimension like any other engine operand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Hashable, Optional, Tuple
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    insertions: int = 0
+    evictions: int = 0
+    rejected: int = 0            # inserts refused (zero-step prefixes)
+    bytes_in_use: int = 0
+    peak_bytes: int = 0
+    server_calls_saved: int = 0  # model calls the hits skipped
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def as_dict(self) -> dict:
+        return {**dataclasses.asdict(self), "hit_rate": self.hit_rate}
+
+
+@dataclasses.dataclass
+class _Entry:
+    handoff: object              # (B, *image_shape) device array
+    steps: int                   # server model calls this entry encodes
+    nbytes: int
+
+
+class PrefixCache:
+    """LRU, size-bounded store of server handoffs.
+
+    ``max_bytes`` bounds the resident handoff bytes (eviction may empty
+    the cache entirely — an entry larger than the whole budget is
+    admitted and immediately evicted, keeping the invariant simple);
+    ``max_entries`` optionally bounds the count.  ``lookup`` counts a
+    hit/miss and refreshes recency; ``insert`` refuses zero-step prefixes
+    (an ICM "handoff" is pure noise the engine regenerates for free — a
+    stored copy would only burn budget)."""
+
+    def __init__(self, max_bytes: int = 64 << 20,
+                 max_entries: Optional[int] = None):
+        if max_bytes < 0:
+            raise ValueError(f"max_bytes must be >= 0, got {max_bytes}")
+        if max_entries is not None and max_entries < 0:
+            raise ValueError(f"max_entries must be >= 0, got {max_entries}")
+        self.max_bytes = max_bytes
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[Hashable, _Entry]" = OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def keys(self) -> Tuple[Hashable, ...]:
+        """LRU → MRU order (telemetry/tests)."""
+        return tuple(self._entries)
+
+    def lookup(self, key: Hashable):
+        """Return the stored handoff (refreshing recency) or None."""
+        e = self._entries.get(key)
+        if e is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        self.stats.server_calls_saved += e.steps
+        return e.handoff
+
+    def insert(self, key: Hashable, handoff, steps: int) -> bool:
+        """Store a completed prefix's handoff; returns True if admitted.
+        Re-inserting an existing key refreshes value and recency."""
+        if steps <= 0:
+            self.stats.rejected += 1
+            return False
+        nbytes = int(handoff.size * handoff.dtype.itemsize)
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.stats.bytes_in_use -= old.nbytes
+        self._entries[key] = _Entry(handoff, int(steps), nbytes)
+        self.stats.bytes_in_use += nbytes
+        self.stats.insertions += 1
+        self.stats.peak_bytes = max(self.stats.peak_bytes,
+                                    self.stats.bytes_in_use)
+        self._evict()
+        return key in self._entries
+
+    def _evict(self):
+        over = lambda: (self.stats.bytes_in_use > self.max_bytes or
+                        (self.max_entries is not None and
+                         len(self._entries) > self.max_entries))
+        while self._entries and over():
+            _, e = self._entries.popitem(last=False)   # LRU end
+            self.stats.bytes_in_use -= e.nbytes
+            self.stats.evictions += 1
+
+    def clear(self):
+        self._entries.clear()
+        self.stats.bytes_in_use = 0

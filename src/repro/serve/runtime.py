@@ -1,0 +1,277 @@
+"""CollaFuse serve runtime — persistent collaborative sampling under
+repeated traffic.  Design notes (the serving counterpart of
+core/collab.py's vectorized-round notes):
+
+* **Queue → scheduler → cache probe → engine → cache fill → report.**
+  One ``ServeRuntime.process(queue)`` call drains a queue of
+  SampleRequests: the shape-stable scheduler (serve/scheduler.py)
+  buckets requests by cut depth and chunks them into waves; each wave is
+  planned (core/sample_plan.plan_requests) with a cache probe per unique
+  (y, t_ζ, stride) group — hits inject their stored handoff x̂_{t_ζ} and
+  skip the server phase PHYSICALLY (zero model calls, the scanned-group
+  axis holds misses only); the padded plan runs as one jitted engine
+  call (core/sampler.make_sample_engine); fresh handoffs are inserted
+  into the cross-wave LRU cache (serve/prefix_cache.py); the report
+  aggregates per-request latency, throughput, hit rate, physical-vs-
+  logical model calls and recompiles.
+* **Stable keying is the load-bearing invariant.**  The runtime holds ONE
+  base PRNG key for its lifetime; randomness is addressed, never chained:
+  a group's server noise depends only on (base key, a content-derived
+  seed — sample_plan.stable_group_seed, a digest of the (y, t_ζ, stride)
+  identity) and a request's client noise only on (base key, its arrival
+  id).  Consequences, each pinned by tests/test_serve_runtime.py: a
+  cached handoff is bitwise-valid in any later wave (warm-vs-cold
+  equality); re-submitting a request draws FRESH samples (new arrival
+  id) while still hitting the cached prefix; and the scheduler's
+  bucketing/padding choices cannot perturb outputs (policy invariance,
+  padding invariance) — so batching, caching, and bucketing are pure
+  performance knobs, never semantics.
+* **Shape stability ⇒ bounded compiles.**  Waves of a bucket share step
+  geometry; pad_plan pads the request axis to max_wave and the scan/
+  inject group axes to power-of-two tiers with inert all-masked rows.
+  Steady repeated traffic converges to ONE signature per bucket — with
+  every prefix cached the server scan's step axis is LENGTH ZERO, the
+  shape-level proof that the server phase disappears.  A Python-side
+  trace counter on the jitted engine (incremented only when jit
+  re-traces) is the recompile guard the CI smoke asserts on.
+* **Accounting: physical vs logical.**  ``server_calls_saved_by_dedup``
+  and ``..._by_cache`` count LOGICAL savings; ``padded_model_calls``
+  counts the PHYSICAL padding overhead the engine still executes
+  (masked steps run their model call and discard it).  Reporting both is
+  what shows the scheduler actually reclaiming the waste instead of
+  hiding it (benchmarks/collab_serve_runtime.py old/new columns).
+* **Sharding.**  The runtime itself is mesh-agnostic (single-process
+  CPU serves identically); for mesh runs, sharding/specs carries the
+  placement rules for every serve operand — plan tables
+  (sample_plan_specs/shard_sample_plan), injected handoffs
+  (inject_specs/shard_inject: lead group axis over "clients", request
+  batch over "data"), and cached entries (handoff_spec: a single
+  (B, ...) x̂_{t_ζ} with batch over "data") — exercised with the engine
+  on the ("clients","data") mesh in tests/test_sharding.py.
+
+Remaining open (ROADMAP): overlapping server/client phases across
+buckets, a pmap/multi-host request axis, host-offloaded cache tiers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sample_plan import (GroupKey, SamplePlan, SampleRequest,
+                                    call_accounting, pad_plan,
+                                    plan_requests, stable_group_seed)
+from repro.core.sampler import check_engine_plan, make_sample_engine
+from repro.core.schedules import DiffusionSchedule
+from repro.serve.prefix_cache import PrefixCache
+from repro.serve.scheduler import WaveScheduler
+
+
+def _key_fingerprint(key) -> bytes:
+    """Stable bytes of a PRNG key (raw uint32 or typed), for cache keys."""
+    try:
+        data = jax.random.key_data(key)
+    except TypeError:          # raw uint32 key on older jax
+        data = key
+    return np.asarray(data).tobytes()
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    T: int
+    image_shape: Tuple[int, ...]          # per-sample trailing (H, W, C)
+    max_wave: int = 8
+    policy: str = "depth"                 # "depth" | "fifo" (PR-3 baseline)
+    server_stride: int = 1                # >1 ⇒ strided DDIM server phase
+    adjusted: bool = True
+    cache: bool = True
+    cache_max_bytes: int = 64 << 20
+    cache_max_entries: Optional[int] = None
+    use_pallas: Optional[bool] = None
+    interpret: bool = False
+
+
+class ServeRuntime:
+    """The persistent serving loop.  Construct once, ``process`` queues
+    forever; the cache, seed registries, and compiled signatures persist
+    across calls (that persistence IS the subsystem)."""
+
+    def __init__(self, config: ServeConfig, server_params, client_params,
+                 apply_fn, sched: DiffusionSchedule, key):
+        if sched.T != config.T:
+            raise ValueError(f"schedule T {sched.T} != config T {config.T}")
+        self.config = config
+        self.server_params = server_params
+        self.client_params = client_params
+        self.n_clients = jax.tree.leaves(client_params)[0].shape[0]
+        self.sched = sched
+        self.scheduler = WaveScheduler(config.max_wave, config.policy,
+                                       stride=config.server_stride)
+        self.cache = PrefixCache(config.cache_max_bytes,
+                                 config.cache_max_entries) \
+            if config.cache else None
+        self._key = key
+        self._key_fp = _key_fingerprint(key)
+        self._next_rid = 0
+        self.traces = 0            # engine re-traces == XLA compiles
+
+        raw = make_sample_engine(
+            sched, apply_fn, config.image_shape,
+            use_pallas=config.use_pallas, interpret=config.interpret,
+            jit=False, server_ddim=config.server_stride > 1)
+
+        def counted(sp, cp, k, tables, inject):
+            # body runs only when jit (re-)traces — a new table signature
+            # — making this Python counter the compile guard the smoke
+            # asserts on (cache hits on compiled signatures skip it)
+            self.traces += 1
+            return raw(sp, cp, k, tables, inject)
+
+        self._engine = jax.jit(counted)
+
+    # -- stable identities -------------------------------------------------
+    # Server-noise seeds are sample_plan.stable_group_seed — a digest of
+    # the (y, t_ζ, stride) content, so the same prefix gets the same
+    # trajectory in every wave, runtime, and scheduler policy.  The cache
+    # key appends the seed and base-key fingerprint: the (y, t_ζ, key
+    # schedule, stride) identity of the stored x̂_{t_ζ}.
+    def _cache_key(self, gk: GroupKey):
+        return (gk, stable_group_seed(gk), self._key_fp)
+
+    def _lookup(self, gk: GroupKey):
+        return self.cache.lookup(self._cache_key(gk))
+
+    def _empty_report(self) -> Dict:
+        """Zeroed report with the FULL key set — idle ticks must not
+        change the report shape consumers sum over."""
+        report = {
+            "requests": 0, "waves": 0, "buckets": 0, "wall_s": 0.0,
+            "req_per_s": 0.0, "samples_per_s": 0.0,
+            "latency_p50_s": 0.0, "latency_p95_s": 0.0,
+            "server_calls_physical": 0, "server_calls_logical": 0,
+            "client_calls_physical": 0, "client_calls_logical": 0,
+            "padded_model_calls": 0,
+            "server_calls_saved_by_dedup": 0,
+            "server_calls_saved_by_cache": 0,
+            "requests_from_cache": 0, "engine_traces": 0,
+            "signatures_per_bucket": {}, "max_signatures_per_bucket": 0,
+        }
+        if self.cache is not None:
+            report.update({
+                "cache_hits": 0, "cache_misses": 0, "cache_hit_rate": 0.0,
+                "cache_evictions": 0, "cache_entries": len(self.cache),
+                "cache_bytes": self.cache.stats.bytes_in_use,
+            })
+        return report
+
+    # -- the loop ----------------------------------------------------------
+    def process(self, queue: Sequence[SampleRequest]
+                ) -> Tuple[List[jnp.ndarray], Dict]:
+        """Drain ``queue``; returns (outputs in arrival order — one
+        (B, *image_shape) array per request — and the serve report for
+        THIS call: latency/throughput, logical savings, physical padding
+        overhead, cache deltas, recompiles and signatures per bucket)."""
+        if not queue:
+            return [], self._empty_report()
+        cfg = self.config
+        rid0 = self._next_rid
+        self._next_rid += len(queue)
+        waves = self.scheduler.waves(queue)
+        outputs: List[Optional[jnp.ndarray]] = [None] * len(queue)
+        acc = {"server_calls_physical": 0, "server_calls_logical": 0,
+               "client_calls_physical": 0, "client_calls_logical": 0,
+               "padded_model_calls": 0}
+        dedup_saved = cache_saved = from_cache = 0
+        traces0 = self.traces
+        c0 = dataclasses.replace(self.cache.stats) \
+            if self.cache is not None else None
+        sigs: Dict[str, set] = {}
+        latencies: List[float] = []
+        t_start = time.perf_counter()
+        for wave in waves:
+            use_cache = self.cache is not None
+            plan = plan_requests(
+                list(wave.requests), cfg.T, adjusted=cfg.adjusted,
+                n_clients=self.n_clients,
+                server_stride=cfg.server_stride,
+                group_seed_fn=stable_group_seed,
+                # arrival ids grow forever; mask to int31 for the tables
+                # (a seed epoch repeats only after ~2.1e9 requests)
+                request_seeds=[(rid0 + qi) & 0x7FFFFFFF
+                               for qi in wave.queue_idx],
+                lookup_fn=self._lookup if use_cache else None,
+                image_shape=cfg.image_shape if use_cache else None)
+            check_engine_plan(cfg.server_stride > 1, plan)
+            padded = pad_plan(
+                plan,
+                n_groups=self.scheduler.group_tier(plan.n_groups),
+                n_requests=self.scheduler.max_wave,
+                n_inject=self.scheduler.inject_tier(plan.n_hits)
+                if plan.inject is not None else None)
+            out, handoff = self._engine(
+                self.server_params, self.client_params, self._key,
+                padded.tables, padded.inject)
+            jax.block_until_ready(out)
+            done = time.perf_counter() - t_start
+            latencies.extend([done] * len(wave.requests))
+            for j, qi in enumerate(wave.queue_idx):
+                outputs[qi] = out[j]
+            if use_cache:
+                for g in range(plan.n_groups):
+                    # zero-step (ICM) prefixes are uncacheable by design;
+                    # don't churn the rejected counter every wave
+                    if plan.group_steps[g] > 0:
+                        self.cache.insert(
+                            self._cache_key(plan.group_keys[g]),
+                            handoff[g], plan.group_steps[g])
+            for k_, v in call_accounting(padded).items():
+                acc[k_] += v
+            dedup_saved += plan.server_steps_saved
+            cache_saved += plan.server_steps_saved_by_cache
+            rg = np.asarray(plan.tables.request_group)
+            from_cache += int((rg >= plan.n_groups).sum())
+            sigs.setdefault(wave.bucket.label(), set()).add(
+                plan_signature(padded))
+        wall = time.perf_counter() - t_start
+        lat = np.asarray(latencies)
+        n_samples = sum(int(r.y.shape[0]) for r in queue)
+        # one schema: _empty_report defines every key, this fills them in
+        report = self._empty_report()
+        report.update({
+            "requests": len(queue), "waves": len(waves),
+            "buckets": len(sigs), "wall_s": wall,
+            "req_per_s": len(queue) / wall,
+            "samples_per_s": n_samples / wall,
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p95_s": float(np.percentile(lat, 95)),
+            **acc,
+            "server_calls_saved_by_dedup": dedup_saved,
+            "server_calls_saved_by_cache": cache_saved,
+            "requests_from_cache": from_cache,
+            "engine_traces": self.traces - traces0,
+            "signatures_per_bucket": {b: len(s) for b, s in sigs.items()},
+            "max_signatures_per_bucket": max(len(s) for s in sigs.values()),
+        })
+        if self.cache is not None:
+            s = self.cache.stats
+            d_hits, d_miss = s.hits - c0.hits, s.misses - c0.misses
+            report.update({
+                "cache_hits": d_hits, "cache_misses": d_miss,
+                "cache_hit_rate": d_hits / (d_hits + d_miss)
+                if d_hits + d_miss else 0.0,
+                "cache_evictions": s.evictions - c0.evictions,
+                "cache_entries": len(self.cache),
+                "cache_bytes": s.bytes_in_use,
+            })
+        return outputs, report
+
+
+def plan_signature(plan: SamplePlan) -> tuple:
+    """Shape signature of a (padded) plan — what jit keys compiles on."""
+    return tuple(a.shape for a in plan.tables) + \
+        (tuple(a.shape for a in plan.inject)
+         if plan.inject is not None else ())

@@ -1,0 +1,122 @@
+"""Shape-stable wave scheduler: compile once per bucket, pad with masks.
+
+jit recompiles the sampling engine for every distinct table signature
+(G, H, R, S_max, C_max, B) — PR 3 stabilized R by padding the last wave
+but left G drifting with each wave's label/cut mix and burned padded-step
+model calls on mixed-depth waves (both ROADMAP open items).  This module
+closes the shape side of both:
+
+* **Depth buckets** (``policy="depth"``, the ``bucket_round_batches``
+  trick at inference): requests are bucketed by ``(t_ζ, B)``, so every
+  wave of a bucket shares ONE server-step count and ONE client-sweep
+  length — S_max and C_max carry zero intra-wave depth padding and the
+  physical model-call count drops from G·S_max + R·C_max toward
+  Σ(T−t_ζ).  ``policy="fifo"`` keeps PR 3's arrival-order waves (the
+  baseline the serve benchmark measures against).
+* **Fixed tiers**: the request axis is always padded to ``max_wave`` and
+  the scanned-group / injected-group axes to the next power of two
+  (``tier``), using sample_plan.pad_plan's inert all-masked rows.  A
+  bucket therefore presents a SMALL, converging set of signatures: cold
+  traffic compiles (G=tier(misses), H=1), steady repeated traffic
+  settles on (G=1 with S=0 — the server scan vanishes entirely when every
+  prefix hits the cache, H=tier(groups)) and stops recompiling — the CI
+  smoke asserts exactly one signature per bucket in steady state.
+
+The scheduler only DECIDES — buckets, wave membership, tier targets; all
+array work stays in the planner.  Waves carry their requests' queue
+positions so the runtime can report per-request latency and re-emit
+outputs in arrival order regardless of bucketing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import List, Sequence, Tuple
+
+from repro.core.sample_plan import SampleRequest
+
+
+def tier(n: int, cap: int) -> int:
+    """Next power of two ≥ max(n, 1), capped at ``cap`` — the fixed shape
+    menu that keeps per-bucket signatures finite and convergent."""
+    t = 1
+    while t < n:
+        t *= 2
+    return min(t, max(cap, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveBucket:
+    """One compiled-shape family: every wave of a bucket shares the step
+    geometry (t_ζ, stride ⇒ S, C) and the request batch B.  ``fifo``
+    buckets degenerate to a single mixed bucket (PR 3 semantics)."""
+    t_cut: int                   # -1 for the mixed fifo bucket
+    batch: int
+    stride: int = 1
+
+    def label(self) -> str:
+        cut = "mixed" if self.t_cut < 0 else str(self.t_cut)
+        return f"cut{cut}_b{self.batch}_s{self.stride}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Wave:
+    bucket: WaveBucket
+    requests: Tuple[SampleRequest, ...]   # real requests only (≤ max_wave)
+    queue_idx: Tuple[int, ...]            # their positions in the queue
+
+
+class WaveScheduler:
+    """Bucket a request queue into shape-stable waves.
+
+    ``policy="depth"`` buckets by (t_ζ, B) in first-seen bucket order,
+    arrival order within a bucket; ``policy="fifo"`` chunks the queue in
+    arrival order (mixed cuts per wave — the PR-3 driver's behavior, kept
+    as the benchmark baseline).  Both emit waves of ≤ ``max_wave`` real
+    requests; the runtime pads the request axis to exactly ``max_wave``
+    with inert rows (sample_plan.pad_plan), so R never varies."""
+
+    def __init__(self, max_wave: int, policy: str = "depth",
+                 stride: int = 1):
+        if max_wave < 1:
+            raise ValueError(f"max_wave must be >= 1, got {max_wave}")
+        if policy not in ("depth", "fifo"):
+            raise ValueError(f"unknown scheduler policy {policy!r}")
+        self.max_wave = max_wave
+        self.policy = policy
+        self.stride = stride
+
+    def waves(self, queue: Sequence[SampleRequest]) -> List[Wave]:
+        buckets: "OrderedDict[WaveBucket, List[int]]" = OrderedDict()
+        for i, r in enumerate(queue):
+            b = WaveBucket(t_cut=r.t_cut if self.policy == "depth" else -1,
+                           batch=r.y.shape[0], stride=self.stride)
+            buckets.setdefault(b, []).append(i)
+        out: List[Wave] = []
+        for b, idxs in buckets.items():
+            for s in range(0, len(idxs), self.max_wave):
+                chunk = idxs[s:s + self.max_wave]
+                out.append(Wave(bucket=b,
+                                requests=tuple(queue[i] for i in chunk),
+                                queue_idx=tuple(chunk)))
+        return out
+
+    def group_tier(self, n_scan_groups: int) -> int:
+        """Power-of-two: a padded SCAN row burns a model call per step, so
+        the scan axis hugs the real group count (cache hits shrink it —
+        all the way to (1, S=0) when every prefix hits).  The fifo policy
+        deliberately does NOT tier G: the PR-3 driver it reproduces let
+        the group count drift per wave (the recompile cost the depth
+        policy fixes), and tiering it would charge the BASELINE phantom
+        padded server calls the old driver never ran — the benchmark's
+        old/new comparison must not flatter the new path."""
+        if self.policy == "fifo":
+            return max(n_scan_groups, 1)
+        return tier(n_scan_groups, self.max_wave)
+
+    def inject_tier(self, n_hits: int) -> int:
+        """FIXED at max_wave: injected rows cost only concat/gather bytes,
+        never model calls, so buying one invariant warm signature per
+        bucket (the steady-state single-compile guarantee) is free."""
+        del n_hits
+        return self.max_wave

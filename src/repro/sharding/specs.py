@@ -252,21 +252,50 @@ def sample_plan_specs(tables):
     return type(tables)(
         group_y=sample_stack_spec(tables.group_y.ndim),
         group_t=P(CLIENT_AXIS, None),
+        group_t_prev=P(CLIENT_AXIS, None),
         group_active=P(CLIENT_AXIS, None),
+        group_seed=P(CLIENT_AXIS),
         request_group=P(CLIENT_AXIS),
         request_client=P(CLIENT_AXIS),
+        request_seed=P(CLIENT_AXIS),
         client_t=P(CLIENT_AXIS, None),
         client_t_prev=P(CLIENT_AXIS, None),
         client_active=P(CLIENT_AXIS, None))
 
 
+def inject_specs(inject):
+    """Specs for a sample_plan.InjectTables (cache-hit handoffs entering
+    the engine): injected rows are group-axis work — lead axis over
+    "clients", request batch over "data", exactly like the scanned
+    stacks, so a hit row lands where its scan row would have."""
+    return type(inject)(x=sample_stack_spec(inject.x.ndim),
+                        y=sample_stack_spec(inject.y.ndim))
+
+
+def handoff_spec(ndim: int, batch_axis: str = "data") -> P:
+    """One cached server handoff x̂_{t_ζ} — a single (B, ...) entry of
+    serve/prefix_cache.PrefixCache: no lead group axis (entries are
+    per-group), batch over "data", pixels replicated."""
+    return P(batch_axis, *([None] * (ndim - 1)))
+
+
+def _place_tuple(mesh, tree, specs):
+    return type(tree)(*[
+        jax.device_put(a, NamedSharding(
+            mesh, sanitize_spec(s, a.shape, mesh)))
+        for a, s in zip(tree, specs)])
+
+
 def shard_sample_plan(mesh, tables):
     """Place plan tables on ``mesh`` with the sampling specs — the
     inference counterpart of ``shard_round_batches``."""
-    return type(tables)(*[
-        jax.device_put(a, NamedSharding(
-            mesh, sanitize_spec(s, a.shape, mesh)))
-        for a, s in zip(tables, sample_plan_specs(tables))])
+    return _place_tuple(mesh, tables, sample_plan_specs(tables))
+
+
+def shard_inject(mesh, inject):
+    """Place a plan's injected cache-hit rows on ``mesh`` — the serve
+    counterpart of ``shard_sample_plan`` for the InjectTables operand."""
+    return _place_tuple(mesh, inject, inject_specs(inject))
 
 
 # ---------------------------------------------------------------------------

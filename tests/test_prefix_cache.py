@@ -1,0 +1,106 @@
+"""Unit tests for the cross-wave server-prefix cache
+(serve/prefix_cache.py): hit/miss/recency semantics, LRU eviction under
+byte and entry bounds, telemetry, and key isolation."""
+import numpy as np
+import pytest
+
+from repro.serve.prefix_cache import PrefixCache
+
+
+def _h(fill: float, n: int = 8) -> np.ndarray:
+    """A fake (B, ...) handoff; n float32s = 4n bytes."""
+    return np.full((n,), fill, np.float32)
+
+
+def test_roundtrip_and_stats():
+    c = PrefixCache(max_bytes=1 << 20)
+    assert c.lookup("a") is None
+    assert c.stats.misses == 1 and c.stats.hits == 0
+    assert c.insert("a", _h(1.0), steps=10)
+    got = c.lookup("a")
+    np.testing.assert_array_equal(got, _h(1.0))
+    assert c.stats.hits == 1 and c.stats.misses == 1
+    assert c.stats.hit_rate == 0.5
+    assert c.stats.server_calls_saved == 10      # hits bank their steps
+    c.lookup("a")
+    assert c.stats.server_calls_saved == 20
+    assert c.stats.bytes_in_use == _h(1.0).nbytes
+    assert len(c) == 1 and "a" in c
+
+
+def test_zero_step_prefixes_rejected():
+    # an ICM "prefix" is pure noise the engine regenerates for free
+    c = PrefixCache()
+    assert not c.insert("icm", _h(0.0), steps=0)
+    assert len(c) == 0 and c.stats.rejected == 1
+    assert c.lookup("icm") is None
+
+
+def test_lru_eviction_by_entry_count():
+    c = PrefixCache(max_bytes=1 << 20, max_entries=2)
+    c.insert("a", _h(1.0), 1)
+    c.insert("b", _h(2.0), 1)
+    c.lookup("a")                    # refresh a -> b is now LRU
+    c.insert("c", _h(3.0), 1)
+    assert c.keys() == ("a", "c")    # b evicted, not a
+    assert c.stats.evictions == 1
+    assert c.lookup("b") is None
+
+
+def test_eviction_by_bytes():
+    entry = _h(0.0).nbytes
+    c = PrefixCache(max_bytes=2 * entry)
+    c.insert("a", _h(1.0), 1)
+    c.insert("b", _h(2.0), 1)
+    assert c.stats.bytes_in_use == 2 * entry
+    c.insert("c", _h(3.0), 1)        # over budget -> LRU "a" goes
+    assert c.keys() == ("b", "c")
+    assert c.stats.bytes_in_use == 2 * entry
+    assert c.stats.peak_bytes == 3 * entry
+
+
+def test_oversized_entry_admitted_then_evicted():
+    c = PrefixCache(max_bytes=4)     # smaller than any entry
+    assert not c.insert("big", _h(1.0), 1)
+    assert len(c) == 0 and c.stats.bytes_in_use == 0
+    assert c.stats.evictions == 1
+
+
+def test_reinsert_refreshes_value_and_bytes():
+    c = PrefixCache(max_bytes=1 << 20)
+    c.insert("a", _h(1.0), 1)
+    c.insert("a", _h(2.0, n=16), 3)
+    assert len(c) == 1
+    assert c.stats.bytes_in_use == _h(2.0, n=16).nbytes
+    np.testing.assert_array_equal(c.lookup("a"), _h(2.0, n=16))
+
+
+def test_distinct_keys_do_not_alias():
+    """The cache key carries (y, t_ζ, key schedule, stride) — any
+    component differing must address a different entry."""
+    c = PrefixCache()
+    y = np.ones((2, 3), np.float32).tobytes()
+    y2 = np.full((2, 3), 2.0, np.float32).tobytes()
+    base = (5, 1, y, b"keyfp", 7)
+    variants = [(5, 1, y2, b"keyfp", 7),      # different label
+                (6, 1, y, b"keyfp", 7),       # different cut
+                (5, 2, y, b"keyfp", 7),       # different stride
+                (5, 1, y, b"other", 7),       # different base key
+                (5, 1, y, b"keyfp", 8)]       # different seed
+    c.insert(base, _h(0.0), 1)
+    for i, v in enumerate(variants):
+        assert c.lookup(v) is None, v
+        c.insert(v, _h(float(i + 1)), 1)
+    np.testing.assert_array_equal(c.lookup(base), _h(0.0))
+    assert len(c) == 6
+
+
+def test_clear_and_validation():
+    c = PrefixCache(max_bytes=1 << 20)
+    c.insert("a", _h(1.0), 1)
+    c.clear()
+    assert len(c) == 0 and c.stats.bytes_in_use == 0
+    with pytest.raises(ValueError):
+        PrefixCache(max_bytes=-1)
+    with pytest.raises(ValueError):
+        PrefixCache(max_entries=-1)

@@ -214,6 +214,7 @@ def _pad_tables(t: PlanTables, extra_server: int, extra_client: int
     pad_z = lambda a, n: jnp.pad(a, ((0, 0), (0, n)))
     return t._replace(
         group_t=pad_t(t.group_t, extra_server),
+        group_t_prev=pad_z(t.group_t_prev, extra_server),
         group_active=pad_z(t.group_active, extra_server),
         client_t=pad_t(t.client_t, extra_client),
         client_t_prev=pad_z(t.client_t_prev, extra_client),
@@ -275,6 +276,59 @@ def test_request_batch_padding_invariance(extra_rows):
     out, _ = ENGINE(sp, stacked, key, plan_requests(padded, T).tables)
     np.testing.assert_array_equal(np.asarray(out[:, :B]),
                                   np.asarray(base_out))
+
+
+# ---------------------------------------------------------------------------
+# Strided (DDIM) server phase inside the engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [3, 8])  # 8 does not divide T - t_cut
+def test_engine_strided_server_matches_reference(stride):
+    """The engine's strided-DDIM server phase (server_ddim=True +
+    plan_requests(server_stride)) matches the eager strided oracle —
+    sample_plan_reference runs the per-step deterministic ddim_step over
+    the same clamped table — across mixed cuts, including a stride that
+    does NOT divide the server step count (the clamped final jump)."""
+    key = jax.random.PRNGKey(11)
+    sp, cps, stacked = _models()
+    plan = plan_requests(_mixed_requests(), T, server_stride=stride)
+    assert plan.server_stride == stride
+    engine = make_sample_engine(SCHED, scale_apply, IMG, server_ddim=True)
+    out, hand = engine(sp, stacked, key, plan.tables)
+    ref_out, ref_hand = sample_plan_reference(sp, cps, key, plan, SCHED,
+                                              scale_apply, IMG)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(hand), np.asarray(ref_hand),
+                               atol=1e-5, rtol=1e-5)
+    # the strided group tables really are shorter: ceil((T - t_c)/stride)
+    for g, tc in enumerate(plan.group_t_cut):
+        n = (T - tc + stride - 1) // stride
+        assert plan.group_steps[g] == n
+        assert float(plan.tables.group_active[g].sum()) == n
+        if n:
+            assert float(plan.tables.group_t_prev[g, n - 1]) == tc
+
+
+def test_engine_stride_one_plan_matches_legacy_tables(key):
+    """A stride-1 plan's new (t_prev-carrying, seeded) tables produce
+    bitwise the SAME samples the PR-3 engine produced: t_prev columns
+    hold exactly t−1 (what the old executor computed implicitly) and the
+    default seeds are the wave-local indices (the old fold_in arguments)."""
+    sp, _, stacked = _models()
+    plan = plan_requests(_mixed_requests(), T)
+    t = plan.tables
+    np.testing.assert_array_equal(np.asarray(t.group_seed),
+                                  np.arange(plan.n_groups))
+    np.testing.assert_array_equal(np.asarray(t.request_seed),
+                                  np.arange(plan.n_requests))
+    g0 = int(t.request_group[0])
+    n = T - plan.group_t_cut[g0]
+    np.testing.assert_array_equal(np.asarray(t.group_t_prev[g0, :n]),
+                                  np.asarray(t.group_t[g0, :n]) - 1.0)
+    out, _ = ENGINE(sp, stacked, key, t)
+    assert out.shape == (4, B) + IMG
 
 
 # ---------------------------------------------------------------------------

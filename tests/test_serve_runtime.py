@@ -1,0 +1,241 @@
+"""Serve-runtime tests: cache correctness (warm-vs-cold bitwise
+equivalence, eviction under pressure, fresh samples on re-submission),
+scheduler semantics (policy invariance, shape-stable steady state with
+one signature per bucket and zero re-traces), the strided server phase
+end to end, and the padding-invariance property of the scheduler's fixed
+tiers (``ragged`` marker — the PR-2 discipline applied to the serve
+subsystem's padded G/R/H axes)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import hypothesis, st
+from repro.core.sample_plan import (SampleRequest, group_key, pad_plan,
+                                    plan_requests, stable_group_seed)
+from repro.core.sampler import check_engine_plan, make_sample_engine
+from repro.core.schedules import DiffusionSchedule
+from repro.serve import ServeConfig, ServeRuntime
+
+T = 16
+SCHED = DiffusionSchedule.linear(T)
+IMG = (4, 4, 3)
+B, NC, K = 2, 3, 3
+
+SP = {"a": jnp.float32(0.2), "b": jnp.float32(0.0)}
+CP = {"a": jnp.linspace(0.1, 0.5, K), "b": jnp.zeros((K,))}
+
+
+def apply_fn(p, x, t, y):
+    return x * p["a"] + p["b"]
+
+
+def _req(client: int, t_cut: int, label: int) -> SampleRequest:
+    y = np.broadcast_to(np.eye(NC, dtype=np.float32)[label],
+                        (B, NC)).copy()
+    return SampleRequest(client=client, t_cut=t_cut, y=y)
+
+
+def _queue():
+    """Two cut-depth buckets x two labels with repeats both inside and
+    across waves — the traffic shape the cache monetizes."""
+    return [_req(0, 4, 0), _req(1, 8, 0), _req(2, 4, 0), _req(0, 4, 1),
+            _req(1, 8, 0), _req(2, 8, 1), _req(0, 4, 0), _req(1, 4, 1)]
+
+
+def _rt(seed: int = 0, **over) -> ServeRuntime:
+    cfg = ServeConfig(T=T, image_shape=IMG, max_wave=4, **over)
+    return ServeRuntime(cfg, SP, CP, apply_fn, SCHED,
+                        jax.random.PRNGKey(seed))
+
+
+def _assert_same(outs_a, outs_b):
+    assert len(outs_a) == len(outs_b)
+    for a, b in zip(outs_a, outs_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Cache correctness
+# ---------------------------------------------------------------------------
+
+
+def test_warm_vs_cold_bitwise_equivalence():
+    """A cache-hit wave produces bitwise the same samples as a cold run
+    with the same keys — across a cold pass, a warm pass, and a second
+    warm pass (stable group seeds + arrival-id request seeds)."""
+    rt, cold = _rt(cache=True), _rt(cache=False)
+    q = _queue()
+    for p in range(3):
+        outs, rep = rt.process(q)
+        couts, crep = cold.process(q)
+        _assert_same(outs, couts)
+        if p:
+            assert rep["cache_hits"] >= 1
+            assert rep["requests_from_cache"] == len(q)
+            assert rep["server_calls_physical"] == 0   # scan axis S == 0
+            assert rep["server_calls_saved_by_cache"] == \
+                crep["server_calls_logical"]
+        assert crep["server_calls_physical"] > 0
+        assert rep["server_calls_saved_by_dedup"] == \
+            crep["server_calls_saved_by_dedup"]
+
+
+def test_resubmission_draws_fresh_samples():
+    """Replaying a queue reuses cached PREFIXES but never reuses client
+    noise: arrival ids advance, so the user gets new samples."""
+    rt = _rt(cache=True)
+    q = _queue()
+    outs1, _ = rt.process(q)
+    outs2, rep2 = rt.process(q)
+    assert rep2["cache_hits"] >= 1
+    for a, b in zip(outs1, outs2):
+        assert float(jnp.abs(a - b).max()) > 1e-6
+
+
+def test_eviction_under_pressure_stays_correct():
+    """A one-entry cache thrashes (evictions > 0) but never corrupts:
+    outputs stay bitwise equal to the cache-less run."""
+    rt = _rt(cache=True, cache_max_entries=1)
+    cold = _rt(cache=False)
+    q = _queue()
+    for _ in range(2):
+        outs, _ = rt.process(q)
+        couts, _ = cold.process(q)
+        _assert_same(outs, couts)
+    assert rt.cache.stats.evictions > 0
+    assert len(rt.cache) <= 1
+
+
+def test_icm_groups_never_pollute_cache_telemetry():
+    """Zero-step (ICM, t_ζ=T) prefixes are uncacheable by design — the
+    runtime must neither probe nor insert them, so steady-state traffic
+    containing ICM requests still reports hit_rate 1.0 with no
+    ever-growing miss/rejected counters."""
+    rt, cold = _rt(cache=True), _rt(cache=False)
+    q = [_req(0, T, 0), _req(1, 8, 0)]          # ICM + cacheable
+    for _ in range(3):
+        outs, rep = rt.process(q)
+        couts, _ = cold.process(q)
+        _assert_same(outs, couts)
+    assert rep["cache_misses"] == 0 and rep["cache_hit_rate"] == 1.0
+    assert rt.cache.stats.rejected == 0
+    assert len(rt.cache) == 1                    # only the t_ζ=8 prefix
+
+
+def test_cache_key_isolation_across_runtimes():
+    """Different base keys -> different key-schedule fingerprints: two
+    runtimes can never alias each other's cache entries."""
+    rt0, rt1 = _rt(seed=0), _rt(seed=1)
+    gk = group_key(4, _req(0, 4, 0).y)
+    assert rt0._cache_key(gk) != rt1._cache_key(gk)
+    assert rt0._cache_key(gk) == _rt(seed=0)._cache_key(gk)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler semantics
+# ---------------------------------------------------------------------------
+
+
+def test_policy_invariance_fifo_vs_depth():
+    """Bucketing is a pure performance knob: fifo (PR-3 arrival-order
+    waves) and depth buckets produce bitwise identical outputs, in
+    arrival order, for the same traffic."""
+    a, b = _rt(policy="depth"), _rt(policy="fifo")
+    q = _queue()
+    outs_a, rep_a = a.process(q)
+    outs_b, rep_b = b.process(q)
+    _assert_same(outs_a, outs_b)
+    # depth buckets eliminate intra-wave depth padding; fifo pays it
+    assert rep_a["padded_model_calls"] < rep_b["padded_model_calls"]
+
+
+def test_steady_state_one_signature_per_bucket():
+    """Shape stability: after the cold and first-warm passes, repeated
+    traffic presents exactly one compiled signature per bucket and the
+    engine never re-traces (the compile guard the CI smoke asserts)."""
+    rt = _rt(cache=True)
+    q = _queue()
+    rt.process(q)
+    rt.process(q)
+    traces_before = rt.traces
+    _, rep = rt.process(q)
+    assert rep["engine_traces"] == 0
+    assert rt.traces == traces_before
+    assert rep["max_signatures_per_bucket"] == 1
+    assert rep["buckets"] == 2          # cuts {4, 8}
+
+
+def test_strided_runtime_warm_vs_cold():
+    """The strided-DDIM server phase composes with the cache: bitwise
+    warm-vs-cold, and the prefix costs ⌈(T−t_ζ)/stride⌉ calls."""
+    rt = _rt(cache=True, server_stride=3)
+    cold = _rt(cache=False, server_stride=3)
+    q = [_req(0, 4, 0), _req(1, 8, 1), _req(2, 4, 0)]
+    for p in range(2):
+        outs, rep = rt.process(q)
+        couts, crep = cold.process(q)
+        _assert_same(outs, couts)
+    assert rep["cache_hits"] >= 1
+    # groups (4,y0) and (8,y1): ceil(12/3) + ceil(8/3) = 4 + 3
+    assert crep["server_calls_logical"] == 7
+
+
+# ---------------------------------------------------------------------------
+# Padding invariance of the scheduler's fixed tiers (ragged marker)
+# ---------------------------------------------------------------------------
+
+_PAD_ENGINE = make_sample_engine(SCHED, apply_fn, IMG)
+
+
+@pytest.mark.ragged
+@hypothesis.settings(max_examples=4, deadline=None)
+@hypothesis.given(gpad=st.integers(min_value=0, max_value=2),
+                  rpad=st.integers(min_value=0, max_value=2),
+                  ipad=st.integers(min_value=0, max_value=2))
+def test_tier_padding_invariance(gpad, rpad, ipad):
+    """pad_plan's inert rows — all-masked scan groups, all-masked
+    requests, zero inject rows — never change real outputs, bitwise:
+    exactly the property that lets the scheduler pad every wave to fixed
+    (G, R, H) tiers for one compile per bucket."""
+    key = jax.random.PRNGKey(13)
+    hit_key = group_key(4, _req(0, 4, 0).y)
+    stored = jnp.arange(np.prod((B,) + IMG), dtype=jnp.float32
+                        ).reshape((B,) + IMG) * 0.01
+    lookup = lambda gk: stored if gk == hit_key else None
+    reqs = [_req(0, 4, 0), _req(1, 8, 0), _req(2, 4, 1)]
+    plan = plan_requests(reqs, T, group_seed_fn=stable_group_seed,
+                         lookup_fn=lookup, image_shape=IMG)
+    assert plan.n_hits == 1 and plan.n_groups == 2
+    base_out, base_hand = _PAD_ENGINE(SP, CP, key, plan.tables, plan.inject)
+    padded = pad_plan(plan, n_groups=plan.n_groups + gpad,
+                      n_requests=plan.n_requests + rpad,
+                      n_inject=plan.n_hits + ipad)
+    out, hand = _PAD_ENGINE(SP, CP, key, padded.tables, padded.inject)
+    np.testing.assert_array_equal(np.asarray(out[:len(reqs)]),
+                                  np.asarray(base_out))
+    np.testing.assert_array_equal(np.asarray(hand[:plan.n_groups]),
+                                  np.asarray(base_hand))
+
+
+def test_pad_plan_validation():
+    plan = plan_requests([_req(0, 4, 0)], T)
+    with pytest.raises(ValueError):
+        pad_plan(plan, n_groups=0)
+    with pytest.raises(ValueError):
+        pad_plan(plan, n_inject=1)      # no inject tables on this plan
+    # stride and server update rule travel together (check_engine_plan)
+    strided = plan_requests([_req(0, 4, 0)], T, server_stride=2)
+    with pytest.raises(ValueError):
+        check_engine_plan(False, strided)
+    with pytest.raises(ValueError):
+        check_engine_plan(True, plan)
+    check_engine_plan(True, strided)
+    check_engine_plan(False, plan)
+    cfg_bad = dataclasses.replace(ServeConfig(T=T, image_shape=IMG))
+    with pytest.raises(ValueError):
+        ServeRuntime(cfg_bad, SP, CP, apply_fn,
+                     DiffusionSchedule.linear(T + 1),
+                     jax.random.PRNGKey(0))

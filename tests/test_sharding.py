@@ -82,6 +82,46 @@ def test_skip_reasons_match_design_doc():
             assert skip_reason(get_arch(a), sh) is None
 
 
+def test_serve_plan_and_inject_specs_on_mesh():
+    """The serve operands' specs cover every leaf, place on a
+    ("clients","data")-style mesh, and the engine runs on the placed
+    operands — plan tables, injected cache-hit rows, and a single cached
+    handoff entry (the serve-runtime layout, ISSUE 4)."""
+    from repro.core.sample_plan import SampleRequest, group_key, \
+        plan_requests
+    from repro.core.sampler import make_sample_engine
+    from repro.core.schedules import DiffusionSchedule
+    T, B, img = 8, 2, (4, 4, 3)
+    y = np.broadcast_to(np.eye(2, dtype=np.float32)[0], (B, 2)).copy()
+    reqs = [SampleRequest(0, 2, y), SampleRequest(1, 4, y)]
+    stored = jnp.zeros((B,) + img)
+    plan = plan_requests(
+        reqs, T, n_clients=2, image_shape=img,
+        lookup_fn=lambda gk: stored if gk == group_key(2, y) else None)
+    assert plan.n_groups == 1 and plan.n_hits == 1
+    # specs zip leaf-for-leaf and match ranks
+    for tree, spec_tree in ((plan.tables, S.sample_plan_specs(plan.tables)),
+                            (plan.inject, S.inject_specs(plan.inject))):
+        for leaf, spec in zip(tree, spec_tree):
+            assert len(spec) == leaf.ndim, (spec, leaf.shape)
+    assert S.inject_specs(plan.inject).x == \
+        P(S.CLIENT_AXIS, "data", None, None, None)
+    assert S.handoff_spec(1 + len(img)) == P("data", None, None, None)
+    mesh = jax.make_mesh((1,), (S.CLIENT_AXIS,))
+    tables = S.shard_sample_plan(mesh, plan.tables)
+    inject = S.shard_inject(mesh, plan.inject)
+    entry = jax.device_put(stored, jax.sharding.NamedSharding(
+        mesh, S.sanitize_spec(S.handoff_spec(stored.ndim),
+                              stored.shape, mesh)))
+    assert entry.shape == stored.shape
+    sched = DiffusionSchedule.linear(T)
+    eng = make_sample_engine(sched, lambda p, x, t, yy: x * p["a"], img)
+    sp = {"a": jnp.float32(0.2)}
+    cp = {"a": jnp.linspace(0.1, 0.2, 2)}
+    out, hand = eng(sp, cp, jax.random.PRNGKey(0), tables, inject)
+    assert out.shape == (2, B) + img and hand.shape == (1, B) + img
+
+
 def test_inference_layout_drops_fsdp():
     """Decode layout: no "data" factor on dense weights (no FSDP gathers);
     MoE experts carry the FFN dim on "data" instead (weights stationary)."""
