@@ -1,0 +1,166 @@
+"""Train-runtime benchmark: the federated round orchestrator
+(repro.train — shape-stable pow2 cohort tiers, identity-keyed masked
+engine) vs the PR-1-style full-stack driver under COHORT CHURN, where
+the tier discipline earns its keep.
+
+Workload: k registered clients with equal local datasets, Bernoulli
+participation at p ∈ {0.5, 0.8} — every round a different cohort size,
+the regime FL practice says to expect (de Goede et al.; Phoenix).  Both
+drivers run the SAME masked engine math; what differs is shape policy:
+
+* old (PR-1 driver semantics): stack exactly the sampled cohort —
+  (nb, |cohort|, B) drifts every round, so jit RE-COMPILES once per
+  distinct cohort size it ever sees (k of them in the worst case), and
+  position keying means a cohort's draws depend on who else showed up;
+* new (TrainRuntime): cohorts pad to pow2 participation tiers with
+  fully-masked inert slots — at most one compile per TIER (≈ log2 k),
+  at the price of padded-client waste the masked engine burns as
+  discarded model calls on pad slots.
+
+Reported per (k, p) on the toy denoiser (dispatch/compile-bound — the
+regime where recompiles dominate): steady rounds/s for both drivers
+(compile rounds excluded), total recompile counts, and the runtime's
+padded-cell waste fraction — the compile-count/padding trade the tier
+menu makes explicit.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.collab import make_vectorized_round, stack_clients, \
+    unstack_clients
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.train import ParticipationConfig, TrainConfig, TrainRuntime
+from repro.train.participation import TAG_ROUND, sample_cohort
+from repro.train.rounds import plan_round
+
+
+def _toy():
+    init_one = lambda k: {"a": jax.random.uniform(k, (), minval=0.1,
+                                                  maxval=0.6),
+                          "b": jnp.float32(0.0)}
+    return init_one, lambda p, x, t, y: x * p["a"] + p["b"]
+
+
+def _data(seed, n, img=8, n_classes=4):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(size=(n, img, img, 3)).astype(np.float32)),
+            jnp.zeros((n, n_classes)).at[:, seed % n_classes].set(1.0))
+
+
+def _config(k, p, T, nb, B):
+    return TrainConfig(
+        T=T, t_cut=max(T // 4, 1), image_shape=(8, 8, 3), n_classes=4,
+        batch_size=B, batches_per_round=nb,
+        participation=ParticipationConfig(policy="bernoulli", p=p))
+
+
+def _old_driver_rounds(cfg: TrainConfig, key, k, n_rounds, n_per_client):
+    """PR-1 driver semantics under partial participation: per round,
+    stack EXACTLY the cohort (no tier padding, position keying) and call
+    the masked engine — one compiled signature per distinct cohort size.
+    Reuses the runtime's registry/plan for identical cohorts and data,
+    then slices the padding off."""
+    init_one, apply_fn = _toy()
+    traces = [0]
+    raw = make_vectorized_round(cfg.sched(), cfg.cut(), apply_fn,
+                                AdamWConfig(lr=cfg.lr), jit=False)
+
+    def counted(*a):
+        traces[0] += 1
+        return raw(*a)
+
+    engine = jax.jit(counted)
+    # same registry/data layout as the runtime run it is compared against
+    rt = TrainRuntime(cfg, init_one, apply_fn, key)
+    for i in range(k):
+        rt.register_client(*_data(i, n_per_client))
+    sp = init_one(jax.random.fold_in(key, 1))
+    so = init_opt_state(sp)
+    walls = []
+    for r in range(n_rounds):
+        # full-round walls (plan + stack + engine + scatter), matching
+        # what TrainRuntime's per-round wall_s measures
+        t0 = time.perf_counter()
+        cohort = sample_cohort(cfg.participation, key, r,
+                               rt.registry.active_uids())
+        plan = plan_round(rt.registry, cohort, r, key,
+                          n_batches=cfg.batches_per_round,
+                          batch_size=cfg.batch_size,
+                          image_shape=cfg.image_shape,
+                          n_classes=cfg.n_classes)
+        if plan is None:
+            continue
+        m = len(plan.cohort)
+        cp = stack_clients([rt.registry.get(u).params
+                            for u in plan.cohort])
+        co = stack_clients([rt.registry.get(u).opt for u in plan.cohort])
+        rkey = jax.random.fold_in(jax.random.fold_in(key, TAG_ROUND), r)
+        out = engine(cp, co, sp, so, plan.xs[:, :m], plan.ys[:, :m],
+                     plan.mask[:, :m], rkey)
+        jax.block_until_ready(out[2])
+        cp, co, sp, so = out[:4]
+        for p_, o_, u in zip(unstack_clients(cp, m), unstack_clients(co, m),
+                             plan.cohort):
+            rec = rt.registry.get(u)
+            rec.params, rec.opt = p_, o_
+        walls.append(time.perf_counter() - t0)
+    return walls, traces[0]
+
+
+def _bench(key, k: int, p: float, T: int = 48, n_rounds: int = 16,
+           n_per_client: int = 16, nb: int = 2, B: int = 4):
+    cfg = _config(k, p, T, nb, B)
+    init_one, apply_fn = _toy()
+    rt = TrainRuntime(cfg, init_one, apply_fn, key)
+    for i in range(k):
+        rt.register_client(*_data(i, n_per_client))
+    reps = rt.run(n_rounds)
+    trained = [r for r in reps if r["tier"] > 0]
+    steady = [r["wall_s"] for r in trained if r["engine_traces"] == 0]
+    waste = (sum(r["padded_cells"] for r in trained) /
+             max(sum(r["padded_cells"] + r["real_samples"]
+                     for r in trained), 1))
+    old_walls, old_traces = _old_driver_rounds(cfg, key, k, n_rounds,
+                                               n_per_client)
+    old_sorted = sorted(old_walls)
+    # steady = everything but the compile rounds (one per signature)
+    old_steady = old_sorted[:max(len(old_walls) - old_traces, 1)]
+    us_new = float(np.median(steady)) * 1e6 if steady else float("nan")
+    us_old = float(np.median(old_steady)) * 1e6
+    # total wall incl. compiles: what the tier menu actually buys — each
+    # avoided signature is a full XLA compile the old driver pays
+    tot_new = sum(r["wall_s"] for r in trained)
+    tot_old = sum(old_walls)
+    emit(f"collab_train_runtime/old_exact_stack_k{k}_p{p}", us_old,
+         f"rounds={len(old_walls)};recompiles={old_traces};pad_waste=0.00;"
+         f"total_wall_s={tot_old:.2f}")
+    emit(f"collab_train_runtime/new_tiered_k{k}_p{p}", us_new,
+         f"rounds={len(trained)};recompiles={rt.traces};"
+         f"tiers={sorted(rt._sigs)};"
+         f"sigs_per_tier={max(len(s) for s in rt._sigs.values())};"
+         f"pad_waste={waste:.2f};"
+         f"recompile_cut={old_traces}->{rt.traces};"
+         f"total_wall_s={tot_new:.2f};"
+         f"total_speedup={tot_old / tot_new:.2f}x;"
+         f"steady_speedup={us_old / us_new:.2f}x")
+
+
+def main(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    ks = [5] if quick else [5, 8]
+    ps = [0.8] if quick else [0.5, 0.8]
+    for k in ks:
+        for p in ps:
+            _bench(jax.random.fold_in(key, 100 * k + int(10 * p)), k, p,
+                   T=24 if quick else 48,
+                   n_rounds=8 if quick else 16)
+
+
+if __name__ == "__main__":
+    main()

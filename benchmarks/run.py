@@ -8,6 +8,8 @@ Suites:
   collab_sample        per-request Alg.-2 sampling vs batched sampling engine
   collab_serve_runtime serve runtime (prefix cache + shape-stable waves)
                        vs the PR-3 fifo/no-cache driver on Zipf traffic
+  collab_train_runtime federated train runtime (pow2 cohort tiers) vs the
+                       PR-1 exact-stack driver under Bernoulli cohort churn
   fidelity_sweep       paper Fig. 4 (top): FD vs cut point, GM/ICM baselines
   attr_inference_sweep paper Fig. 7: attribute-inference F1 vs cut point
   inversion_sweep      paper Fig. 8: cross-client inversion vs cut point
@@ -27,7 +29,7 @@ import sys
 import time
 
 SUITES = ["kernel_bench", "collab_round", "collab_sample",
-          "collab_serve_runtime", "compute_split",
+          "collab_serve_runtime", "collab_train_runtime", "compute_split",
           "attr_inference_sweep", "inversion_sweep", "m_remap_ablation",
           "beyond_paper", "fl_comparison", "dp_payload", "fidelity_sweep"]
 

@@ -12,7 +12,16 @@
 #                              signature per bucket in steady state (jit
 #                              trace-counter guard), and >=30% fewer
 #                              physical server model calls than the
-#                              fifo/no-cache PR-3-style driver
+#                              fifo/no-cache PR-3-style driver,
+#                              plus the train-runtime smoke (registry ->
+#                              participation sampler -> cohort tier plan ->
+#                              identity-keyed masked engine -> aggregation ->
+#                              checkpoint), which ASSERTS the federated
+#                              training contract: >=1 strict-subset cohort
+#                              round, exactly one compiled signature per
+#                              participation tier (jit trace-counter guard),
+#                              and bitwise resume-from-checkpoint ==
+#                              uninterrupted (params, opt states, EMA, RNG)
 #   scripts/ci.sh slow       - only the long system/sampler/U-Net tests
 #   scripts/ci.sh <pytest args...>  - passed through unchanged
 set -euo pipefail
@@ -21,7 +30,9 @@ run() { PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"; }
 case "${1:-}" in
   tier1) shift; run -m "not slow" "$@"
          PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-           python -m repro.launch.collab_serve --smoke;;
+           python -m repro.launch.collab_serve --smoke
+         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+           python -m repro.launch.collab_train --smoke;;
   slow)  shift; run -m "slow" "$@";;
   *)     run "$@";;
 esac

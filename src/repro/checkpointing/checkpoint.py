@@ -1,8 +1,11 @@
 """Msgpack-based pytree checkpointing (no orbax offline).
 
 Arrays are serialized as (dtype, shape, raw bytes); the pytree structure is
-encoded with string-keyed dicts / lists. Saves are atomic (tmp + rename).
-CollaFuse drivers persist {server, clients[i], opt states, step}.
+encoded with string-keyed dicts / lists. Saves are atomic AND durable
+(tmp + fsync + rename). CollaFuse drivers persist {server, clients[i],
+opt states, step}; the federated training runtime (repro.train) persists
+its full resumable state {params, opt states, registry, cohort cursor,
+base RNG key, EMA}.
 """
 from __future__ import annotations
 
@@ -20,7 +23,10 @@ _ARR = "__arr__"
 
 
 def _pack(obj):
-    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+    if isinstance(obj, (jnp.ndarray, np.ndarray, np.generic)):
+        # np.generic: numpy SCALARS (np.float32(x), np.bool_(True), …) —
+        # easy to produce from eager reductions; packed as 0-d arrays so
+        # their dtype survives the trip (as python floats it would not).
         a = np.asarray(obj)
         # dtype by NAME ("bfloat16"): ml_dtypes registers these with numpy,
         # while the .str form ("|V2") round-trips as raw void.
@@ -40,7 +46,14 @@ def _unpack(obj):
     if isinstance(obj, dict):
         if obj.get(_ARR):
             a = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
-            return jnp.asarray(a.reshape(obj["shape"]))
+            a = a.reshape(obj["shape"])
+            j = jnp.asarray(a)
+            if j.dtype != a.dtype:
+                # jnp.asarray silently downcasts 64-bit leaves when
+                # jax_enable_x64 is off — return the (writable) numpy
+                # array instead so the round trip never mangles a dtype
+                return a.copy()
+            return j
         if "__list__" in obj:
             items = [_unpack(v) for v in obj["__list__"]]
             return tuple(items) if obj.get("__tuple__") else items
@@ -56,6 +69,12 @@ def save(path: str, tree: Any) -> None:
     try:
         with os.fdopen(fd, "wb") as f:
             f.write(payload)
+            # fsync BEFORE the atomic rename: rename orders metadata, not
+            # data — a crash between rename and writeback could otherwise
+            # leave a valid name on truncated bytes (the mid-run-resume
+            # contract of the training runtime needs the file durable).
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
     finally:
         if os.path.exists(tmp):

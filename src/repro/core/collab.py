@@ -74,7 +74,7 @@ import numpy as np
 from repro.configs.base import ArchConfig, get_arch, reduced
 from repro.configs.ddpm_unet import SMALL, UNetConfig
 from repro.core.dit import DiTConfig, init_dit, make_dit_apply
-from repro.core.protocol import (ServerPayload, client_losses,
+from repro.core.protocol import (ServerPayload, client_keys, client_losses,
                                  make_collab_step, server_loss)
 from repro.core.sampler import collaborative_sample, server_denoise
 from repro.core.schedules import DiffusionSchedule
@@ -337,11 +337,13 @@ def _masked_adamw(params, grads, opt, opt_cfg, active):
 
 
 def make_vectorized_round(sched: DiffusionSchedule, cut: CutPoint, apply_fn,
-                          opt_cfg: AdamWConfig, masked: bool = True):
+                          opt_cfg: AdamWConfig, masked: bool = True,
+                          identity_keyed: bool = False, jit: bool = True):
     """Builds the jitted whole-round function:
 
     (client_params, client_opt, server_params, server_opt, xs, ys, [mask,]
-     key) -> (client_params, client_opt, server_params, server_opt, metrics)
+     [uids,] key) -> (client_params, client_opt, server_params, server_opt,
+     metrics)
 
     client_params/client_opt are stacked (leading (k,) axis); xs/ys are
     (n_batches, k, B, ...). One lax.scan over batches; per batch the client
@@ -356,9 +358,25 @@ def make_vectorized_round(sched: DiffusionSchedule, cut: CutPoint, apply_fn,
     the flattened mask, and a (client, batch) cell — or a whole server
     batch slot — whose mask is all-zero keeps params, optimizer moments,
     and the AdamW step counter untouched. ``masked=False`` builds the dense
-    PR-1 body (no mask argument), kept as the differential baseline."""
+    PR-1 body (no mask argument), kept as the differential baseline.
+
+    ``identity_keyed=True`` (requires ``masked``): the round takes an
+    extra (k,) int32 ``uids`` vector (between mask and key) and derives
+    slot c's per-batch key as ``fold_in(batch_key, uids[c])``
+    (protocol.client_keys) instead of ``fold_in(batch_key, c)`` — the
+    federated runtime's REGISTRY keying.  A client's randomness then
+    depends only on its identity, never on its seat in the cohort stack,
+    so a cohort padded along the client axis to a participation tier is
+    bitwise-equal to the unpadded run (tests/test_train_runtime.py).
+
+    ``jit=False`` returns the raw python callable for callers that wrap
+    it before jitting (the train runtime's trace-counter recompile
+    guard), mirroring ``sampler.make_sample_engine(jit=False)``."""
     train_client = cut.t_cut > 0
     train_server = cut.t_cut < cut.T
+    if identity_keyed and not masked:
+        raise ValueError("identity_keyed requires the masked engine "
+                         "(cohort stacks always carry a validity mask)")
 
     def client_update(cp, copt, x0, y, w, k):
         (loss_c, payload), grads = jax.value_and_grad(
@@ -375,7 +393,7 @@ def make_vectorized_round(sched: DiffusionSchedule, cut: CutPoint, apply_fn,
             gn = jnp.float32(0.0)
         return cp, copt, payload, loss_c, gn
 
-    def batch_step(carry, inp):
+    def batch_step(carry, inp, uids=None):
         cp, copt, sp, sopt = carry
         if masked:
             x0, y, w, bkey = inp
@@ -383,8 +401,8 @@ def make_vectorized_round(sched: DiffusionSchedule, cut: CutPoint, apply_fn,
             x0, y, bkey = inp
             w = None
         n_clients = x0.shape[0]
-        ckeys = jax.vmap(lambda c: jax.random.fold_in(bkey, c))(
-            jnp.arange(n_clients))
+        ckeys = client_keys(bkey, jnp.arange(n_clients) if uids is None
+                            else uids)
         if masked:
             cp, copt, payload, loss_c, gn = jax.vmap(client_update)(
                 cp, copt, x0, y, w, ckeys)
@@ -410,14 +428,20 @@ def make_vectorized_round(sched: DiffusionSchedule, cut: CutPoint, apply_fn,
         return (cp, copt, sp, sopt), metrics
 
     def _scan(client_params, client_opt, server_params, server_opt, xss,
-              key):
+              key, uids=None):
         bkeys = jax.vmap(lambda b: jax.random.fold_in(key, b))(
             jnp.arange(xss[0].shape[0]))
         carry = (client_params, client_opt, server_params, server_opt)
-        carry, metrics = jax.lax.scan(batch_step, carry, xss + (bkeys,))
+        carry, metrics = jax.lax.scan(
+            lambda c, i: batch_step(c, i, uids), carry, xss + (bkeys,))
         return (*carry, metrics)
 
-    if masked:
+    if identity_keyed:
+        def round_fn(client_params, client_opt, server_params, server_opt,
+                     xs, ys, mask, uids, key):
+            return _scan(client_params, client_opt, server_params,
+                         server_opt, (xs, ys, mask), key, uids)
+    elif masked:
         def round_fn(client_params, client_opt, server_params, server_opt,
                      xs, ys, mask, key):
             return _scan(client_params, client_opt, server_params,
@@ -428,7 +452,7 @@ def make_vectorized_round(sched: DiffusionSchedule, cut: CutPoint, apply_fn,
             return _scan(client_params, client_opt, server_params,
                          server_opt, (xs, ys), key)
 
-    return jax.jit(round_fn)
+    return jax.jit(round_fn) if jit else round_fn
 
 
 def setup_vectorized(key, cfg: CollabConfig
@@ -509,7 +533,7 @@ def train_round_vectorized(state: VectorizedCollabState, round_fn, xs, ys,
 
 def train_round_reference(state: CollabState, xs, ys, key,
                           sched: DiffusionSchedule, cut: CutPoint, apply_fn,
-                          opt_cfg: AdamWConfig, mask=None):
+                          opt_cfg: AdamWConfig, mask=None, uids=None):
     """Differential-testing oracle for the vectorized engine: identical
     semantics and PRNG discipline (per-batch fold_in, per-client fold_in,
     one concatenated server update per batch, masked losses with real-count
@@ -517,7 +541,9 @@ def train_round_reference(state: CollabState, xs, ys, key,
     per-client pytrees — no vmap, no scan, no ``where``-select (a skipped
     update is simply not executed). Mutates ``state`` in place.
     ``mask=None`` means every sample is real (the dense case);
-    ``state.step`` counts only real (client, batch) cells either way."""
+    ``state.step`` counts only real (client, batch) cells either way.
+    ``uids`` (len n_clients) switches the per-client keys to registry
+    identities — the oracle for the identity-keyed cohort round."""
     train_client = cut.t_cut > 0
     train_server = cut.t_cut < cut.T
     n_batches, n_clients = xs.shape[0], xs.shape[1]
@@ -526,7 +552,8 @@ def train_round_reference(state: CollabState, xs, ys, key,
         payloads = []
         wrows = []
         for c in range(n_clients):
-            ckey = jax.random.fold_in(bkey, c)
+            ckey = jax.random.fold_in(
+                bkey, c if uids is None else int(uids[c]))
             w = None if mask is None else mask[b, c]
             active = mask is None or bool(np.asarray(mask[b, c]).sum() > 0)
             (loss_c, payload), grads = jax.value_and_grad(

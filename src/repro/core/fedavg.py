@@ -97,6 +97,49 @@ def average_weights(client_params: List[Dict], weights=None) -> Dict:
     return jax.tree.map(avg, *client_params)
 
 
+def average_cohort(client_params: List[Dict], seen: List[int],
+                   members: List[bool]) -> List[Dict]:
+    """Cross-cohort FedAvg for the federated training runtime
+    (repro.train): average the client nets of a PARTIAL cohort and
+    redistribute to its members only.
+
+    ``members`` marks which clients participated this aggregation window;
+    ``seen`` is each client's real trained-sample count over the window
+    (the n_c of [McMahan et al. 2017]'s n_c/Σn weighting — padded/masked
+    cells never count, so the masked engine's cohort raggedness is already
+    priced in). Guards, each pinned by tests/test_fedavg.py:
+
+      * an ABSENT client (members[c] falsy) neither contributes nor
+        receives — its entry comes back untouched (identity, not a copy);
+      * a member with ``seen == 0`` (joined late, dropped before its first
+        real batch, empty dataset) contributes ZERO weight but still
+        receives the cohort average — and because the Σn normalization
+        runs over the member seen-counts only, one zero-seen member can
+        never drag a NaN into the average;
+      * if NO member saw a sample the whole call is a no-op (the
+        all-zero-weight case ``average_weights`` refuses) — an empty
+        round must not destroy anyone's net.
+
+    Returns a new list; input trees are never mutated."""
+    n = len(client_params)
+    if not (len(seen) == len(members) == n):
+        raise ValueError(f"one seen-count and member flag per client: "
+                         f"{len(seen)}/{len(members)} != {n}")
+    idx = [c for c in range(n) if members[c]]
+    if not idx:
+        return list(client_params)
+    w = [float(seen[c]) for c in idx]
+    if any(x < 0 for x in w):
+        raise ValueError(f"negative seen count: {w}")
+    if sum(w) <= 0:
+        return list(client_params)          # nobody trained: no-op
+    avg = average_weights([client_params[c] for c in idx], weights=w)
+    out = list(client_params)
+    for c in idx:
+        out[c] = jax.tree.map(jnp.copy, avg)
+    return out
+
+
 def fedavg_round(state: FedAvgState, step_fn, batches_per_client, key
                  ) -> Dict[str, float]:
     """One FedAvg round: local training, weight upload, average, download.

@@ -45,6 +45,21 @@ def rowwise_normal(key, shape):
         row_keys(key, shape[0]))
 
 
+def client_keys(batch_key, client_ids):
+    """One PRNG key per client SLOT: ``fold_in(batch_key, id)`` for a
+    (k,) int vector of client identities — the client-axis face of the
+    ``row_keys`` discipline.  With ``client_ids = arange(k)`` this is the
+    PR-1 position keying (stack slot c draws from fold_in(bkey, c)); with
+    registry uids it is IDENTITY keying: a client's ε/t stream depends
+    only on (key, uid), never on where the cohort planner seated it or
+    how many other clients showed up this round.  That is what makes
+    partial participation, cohort padding, and tier choice pure policy
+    knobs for the federated runtime (repro.train): every per-sample draw
+    inside ``client_losses`` chains off this key, so seating a cohort of
+    3 in a tier-4 stack perturbs no real client's randomness."""
+    return jax.vmap(lambda i: jax.random.fold_in(batch_key, i))(client_ids)
+
+
 class ServerPayload(NamedTuple):
     """What crosses the client→server wire during training. Its byte volume
     (vs. model weights for FL) is the paper's communication claim — measured

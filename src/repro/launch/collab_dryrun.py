@@ -16,7 +16,12 @@ same mesh with no extra collectives beyond the dense round's. The
 (core/sampler.make_sample_engine): one program serving k+1 requests with
 heterogeneous cut points (GM, ICM, and two collaborative cuts, plus one
 dedup'd duplicate), request/group stacks sharded ("clients", "data")
-per sharding/specs.sample_plan_specs.
+per sharding/specs.sample_plan_specs. The ``train_runtime`` entry
+compiles the IDENTITY-KEYED cohort round of the federated training
+runtime (repro.train): the masked engine plus a (tier,) registry-uid
+vector sharded with the cohort axis (specs.cohort_uid_spec) — proving a
+partial-participation tier round lowers on the same mesh with the same
+collectives as the dense round.
 
     PYTHONPATH=src python -m repro.launch.collab_dryrun [--multi-pod] \
         [--image-size 64] [--batch 256] [--t-cut 200] [--T 1000] \
@@ -46,8 +51,9 @@ from repro.launch.dryrun import collective_census
 from repro.launch.mesh import make_production_mesh
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
 from repro.sharding.specs import (CLIENT_AXIS, client_opt_specs,
-                                  client_stacked_specs, mesh_batch_axes,
-                                  sample_plan_specs, sanitize_spec)
+                                  client_stacked_specs, cohort_uid_spec,
+                                  mesh_batch_axes, sample_plan_specs,
+                                  sanitize_spec)
 
 
 def main():
@@ -146,6 +152,9 @@ def main():
     mask = csh(jax.ShapeDtypeStruct(
         (args.round_batches, k, per_client_b), jnp.float32),
         P(None, CLIENT_AXIS, "data"))
+    cohort_round_fn = make_vectorized_round(sched, cut, apply_fn, opt_cfg,
+                                            masked=True, identity_keyed=True)
+    uids = csh(jax.ShapeDtypeStruct((k,), jnp.int32), cohort_uid_spec())
 
     # --- batched sampling engine: k requests, heterogeneous cuts ---------
     # one request per client; cuts span GM (0), the configured t_cut, its
@@ -182,6 +191,9 @@ def main():
         ("ragged_round",
          masked_round_fn,
          (cparams, copt, sparams, sopt, xs, ys, mask, ckey), cmesh),
+        ("train_runtime",
+         cohort_round_fn,
+         (cparams, copt, sparams, sopt, xs, ys, mask, uids, ckey), cmesh),
         ("vectorized_sample",
          sample_engine, (sparams, cparams, ckey, tables), cmesh),
     ):

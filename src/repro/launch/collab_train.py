@@ -1,45 +1,191 @@
-"""CollaFuse end-to-end driver (the paper's experiment, offline scale).
+"""Thin CLI over the federated training runtime (train/runtime.py).
 
+    PYTHONPATH=src python -m repro.launch.collab_train --smoke
     PYTHONPATH=src python -m repro.launch.collab_train \
-        --clients 5 --t-cut 200 --T 1000 --rounds 3 --steps-per-round 40 \
-        [--denoiser unet | --denoiser mamba2-2.7b] [--iid] [--sequential] \
-        [--checkpoint runs/collafuse.msgpack]
+        --clients 5 --T 1000 --t-cut 200 --rounds 10 --policy bernoulli \
+        --p 0.8 --drop-p 0.1 --fedavg-every 4 --ema 0.99 \
+        --checkpoint runs/collafuse.msgpack --checkpoint-every 2 [--resume]
 
-Trains k client U-Nets + one server U-Net with Alg. 1 on synthetic
-attribute-structured client datasets (non-IID by default, mirroring the
-paper's CelebA split), then samples collaboratively with Alg. 2 and reports
-FD-proxy fidelity + disclosure. This is deliverable (b)'s end-to-end
-example; benchmarks/ runs the full cut-point sweeps.
+All the training machinery now lives in ``repro.train`` (client registry
+→ participation sampler → shape-stable cohort round plan → identity-
+keyed masked engine → FedAvg/EMA aggregation → checkpoint loop) — this
+driver only builds models, synthesizes per-client datasets, replays
+join/leave events, and prints the round reports:
 
-Uses the vectorized multi-client engine (one jitted scan per round, clients
-stacked and sharded over a "clients" mesh axis) by default. Heterogeneous /
-unbalanced clients — ``--client-sizes 128,256,512`` — run through the SAME
-engine: batches are zero-padded to a common shape with a validity mask
-(core/collab.stack_round_batches) and every sample, including trailing
-partial batches, trains exactly once; there is no ragged fallback.
-``--sequential`` selects the per-(client, batch) Alg.-1 loop — the
-paper-faithful baseline (it drops no samples either — trailing partial
-batches just cost it one extra jit specialization per tail shape — but it
-dispatches one program per real (client, batch) pair).
+  register clients → TrainRuntime.run_round per round → cohort / tier /
+  padded-waste / recompile / loss report, periodic durable checkpoints.
+
+Each client holds its OWN synthetic attribute-structured dataset
+(non-IID by default, mirroring the paper's CelebA split; ``--client-
+sizes`` makes them unbalanced) and participates only when the sampler
+picks it (``--policy`` full | bernoulli | fixed, ``--drop-p`` mid-round
+dropout).  ``--join-at``/``--leave-at`` replay a roster change mid-run
+(one extra client joins / client 0 leaves at that round).  ``--resume``
+restores the checkpoint and continues toward ``--rounds`` total rounds —
+bitwise-equal to never having stopped, since all randomness is
+addressed by (base key, stream tag, round, uid).  ``--toy`` (default
+for --smoke) uses the protocol-scale linear denoiser; ``--denoiser
+unet`` (the default otherwise) trains the reduced paper U-Net.
+
+``--smoke`` is the CI tier-1 entry (scripts/ci.sh): a 5-client ragged
+roster under bernoulli participation with mid-round dropout, ASSERTING
+the train-runtime contract — (a) at least one round trained a STRICT
+SUBSET cohort, (b) every participation tier compiled exactly ONE engine
+signature for the whole run (jit trace-counter guard: total re-traces ==
+distinct tiers), and (c) a run interrupted at the midpoint and resumed
+from its checkpoint finishes BITWISE equal to the uninterrupted run
+(server+client params, optimizer moments and step counters, EMA track,
+RNG key, and cohort cursor all compared).
 """
 from __future__ import annotations
 
 import argparse
-import time
+import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.checkpointing.checkpoint import save
-from repro.core.collab import (CollabConfig, CollabState, sample_for_client,
-                               setup, setup_vectorized, stack_round_batches,
-                               to_sequential, train_round,
-                               train_round_vectorized)
-from repro.data.synthetic import (SyntheticConfig, batches,
-                                  make_client_datasets)
-from repro.eval.fd_proxy import fd_proxy
-from repro.sharding.specs import (make_client_mesh, shard_round_batches,
-                                  shard_vectorized_state)
+from repro.core.collab import CollabConfig, build_denoiser
+from repro.data.synthetic import SyntheticConfig, make_client_datasets
+from repro.sharding.specs import make_client_mesh
+from repro.train import (ParticipationConfig, TrainConfig, TrainRuntime,
+                         participation_tier)
+
+
+def build_model(args, key):
+    """Returns (init_one, apply_fn)."""
+    if args.denoiser == "toy":
+        def init_one(k):
+            return {"a": jax.random.uniform(k, (), minval=0.1, maxval=0.6),
+                    "b": jnp.float32(0.0)}
+        return init_one, lambda p, x, t, y: x * p["a"] + p["b"]
+    ccfg = CollabConfig(n_clients=args.clients, T=args.T, t_cut=args.t_cut,
+                        denoiser=args.denoiser, image_size=args.image_size,
+                        batch_size=args.batch, n_classes=args.n_classes)
+    return build_denoiser(key, ccfg)
+
+
+def make_train_config(args) -> TrainConfig:
+    return TrainConfig(
+        T=args.T, t_cut=args.t_cut,
+        image_shape=(args.image_size, args.image_size, 3),
+        n_classes=args.n_classes,
+        batch_size=args.batch, batches_per_round=args.batches_per_round,
+        lr=args.lr,
+        participation=ParticipationConfig(
+            policy=args.policy, p=args.p, cohort_k=args.cohort_k,
+            drop_p=args.drop_p),
+        fedavg_every=args.fedavg_every, ema_decay=args.ema)
+
+
+def make_data(args, key):
+    dcfg = SyntheticConfig(image_size=args.image_size,
+                           n_attrs=args.n_classes)
+    sizes = (None if args.client_sizes is None else
+             [int(s) for s in args.client_sizes.split(",")])
+    return make_client_datasets(key, dcfg, args.clients, args.n_per_client,
+                                non_iid=not args.iid, sizes=sizes)
+
+
+def make_mesh(args):
+    """1-D "clients" mesh sized to the pow2 tier menu, so a sharded
+    cohort axis divides every tier (1 device on a plain CPU host — the
+    placement the PR-1 driver always applied, kept by the runtime)."""
+    return make_client_mesh(participation_tier(args.clients))
+
+
+def fresh_runtime(args, key, init_one, apply_fn, data) -> TrainRuntime:
+    rt = TrainRuntime(make_train_config(args), init_one, apply_fn, key,
+                      mesh=make_mesh(args))
+    for (x, y) in data:
+        rt.register_client(x, y)
+    return rt
+
+
+def print_report(tag: str, rep: dict):
+    print(f"{tag}: cohort={rep['cohort']} tier={rep['tier']} "
+          f"drops={rep['mid_round_drops']} "
+          f"waste={rep['pad_waste_frac']:.2f} "
+          f"traces={rep['engine_traces']} "
+          f"client_loss={rep['client_loss']:.4f} "
+          f"server_loss={rep['server_loss']:.4f} "
+          f"fedavg={rep['fedavg_applied']} ({rep['wall_s']:.2f}s)")
+
+
+def _trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def assert_runtimes_bitwise(a: TrainRuntime, b: TrainRuntime) -> None:
+    """Full-state bitwise comparison: params, opt states (moments AND
+    step counters), EMA, registry counters, cohort cursor, RNG key."""
+    from repro.train.runtime import _key_pack
+    assert a.round == b.round and a.total_steps == b.total_steps
+    ka, kb = _key_pack(a._key), _key_pack(b._key)
+    assert ka["typed"] == kb["typed"] and \
+        np.array_equal(ka["data"], kb["data"])
+    assert _trees_equal(a.server_params, b.server_params)
+    assert _trees_equal(a.server_opt, b.server_opt)
+    assert _trees_equal(a.ema_server, b.ema_server)
+    assert a.registry.uids() == b.registry.uids()
+    for u in a.registry.uids():
+        ra, rb = a.registry.get(u), b.registry.get(u)
+        assert _trees_equal(ra.params, rb.params), f"client {u} params"
+        assert _trees_equal(ra.opt, rb.opt), f"client {u} opt"
+        assert (ra.seen, ra.window_seen, ra.active) == \
+            (rb.seen, rb.window_seen, rb.active), f"client {u} counters"
+
+
+def smoke(args) -> dict:
+    """CI assertions — see module docstring.  Raises on violation."""
+    key = jax.random.PRNGKey(args.seed)
+    init_one, apply_fn = build_model(args, key)
+    data = make_data(args, key)
+    mk = lambda: fresh_runtime(args, key, init_one, apply_fn, data)
+
+    # (a)+(b): partial-participation churn converges onto the tier menu
+    rt = mk()
+    reps = rt.run(args.rounds)
+    for r in reps:
+        print_report(f"train/round{r['round']}", r)
+    subset_rounds = sum(1 for r in reps
+                        if r["strict_subset"] and r["cohort_size"] > 0)
+    assert subset_rounds >= 1, "no strict-subset cohort round"
+    last = reps[-1]
+    assert last["max_signatures_per_tier"] == 1, last
+    assert rt.traces == len(last["signatures_per_tier"]), \
+        (rt.traces, last["signatures_per_tier"])
+    # steady state: more churn, zero NEW compiles beyond new tiers
+    more = rt.run(4)[-1]
+    assert more["max_signatures_per_tier"] == 1, more
+    assert rt.traces == len(more["signatures_per_tier"]), \
+        (rt.traces, more["signatures_per_tier"])
+
+    # (c): interrupt at the midpoint, resume from checkpoint, finish —
+    # bitwise equal to the uninterrupted run
+    full = mk()
+    full.run(args.rounds)
+    half = mk()
+    mid = args.rounds // 2
+    half.run(mid)
+    path = os.path.join(tempfile.mkdtemp(), "train_smoke.msgpack")
+    half.save(path)
+    resumed = TrainRuntime.restore(make_train_config(args), init_one,
+                                   apply_fn, path)
+    for uid, (x, y) in enumerate(data):
+        resumed.attach_data(uid, x, y)
+    resumed.run(args.rounds - mid)
+    assert_runtimes_bitwise(full, resumed)
+
+    print(f"smoke: OK ({subset_rounds} strict-subset rounds, "
+          f"1 signature per tier over {rt.traces} tiers, "
+          f"bitwise resume-at-round-{mid} == uninterrupted)")
+    return last
 
 
 def main(argv=None):
@@ -47,102 +193,106 @@ def main(argv=None):
     ap.add_argument("--clients", type=int, default=5)
     ap.add_argument("--T", type=int, default=1000)
     ap.add_argument("--t-cut", type=int, default=200)
-    ap.add_argument("--rounds", type=int, default=3)
-    ap.add_argument("--steps-per-round", type=int, default=40)
-    ap.add_argument("--image-size", type=int, default=16)
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="TOTAL rounds; with --resume the run continues "
+                         "from the checkpoint's cursor toward this")
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batches-per-round", type=int, default=4,
+                    help="fixed per-client batch slots per round (the "
+                         "shape-stability knob: nb never drifts)")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--image-size", type=int, default=16)
+    ap.add_argument("--n-classes", type=int, default=4,
+                    help="attribute/label count shared by the synthetic "
+                         "data and the denoiser's conditioning")
     ap.add_argument("--n-per-client", type=int, default=512)
     ap.add_argument("--client-sizes", default=None,
-                    help="comma-separated per-client dataset sizes, e.g. "
-                         "128,256,512 — unbalanced clients train through "
-                         "the masked engine with no dropped samples "
-                         "(overrides --n-per-client)")
-    ap.add_argument("--denoiser", default="unet")
+                    help="comma-separated per-client dataset sizes "
+                         "(unbalanced clients; overrides --n-per-client)")
+    ap.add_argument("--denoiser", default="unet",
+                    help="unet | toy | assigned arch id")
     ap.add_argument("--iid", action="store_true")
-    ap.add_argument("--sequential", action="store_true",
-                    help="per-(client,batch) Alg.-1 loop instead of the "
-                         "vectorized engine")
-    ap.add_argument("--eval-samples", type=int, default=64)
+    ap.add_argument("--policy", choices=("full", "bernoulli", "fixed"),
+                    default="bernoulli")
+    ap.add_argument("--p", type=float, default=0.8,
+                    help="bernoulli participation probability")
+    ap.add_argument("--cohort-k", type=int, default=0,
+                    help="cohort size for --policy fixed")
+    ap.add_argument("--drop-p", type=float, default=0.0,
+                    help="mid-round dropout probability per cohort member")
+    ap.add_argument("--fedavg-every", type=int, default=0,
+                    help="cross-cohort FedAvg of client nets every N "
+                         "rounds (0 = off)")
+    ap.add_argument("--ema", type=float, default=0.0,
+                    help="server-param EMA decay (0 = off); sampling "
+                         "should load the EMA track")
+    ap.add_argument("--join-at", type=int, default=None,
+                    help="register one extra client at this round")
+    ap.add_argument("--leave-at", type=int, default=None,
+                    help="client 0 leaves at this round")
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=1)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore --checkpoint (if present) and continue")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI preset: assert the train-runtime contract "
+                         "(see module docstring)")
     args = ap.parse_args(argv)
+    if args.smoke:
+        # 5 ragged clients, bernoulli cohorts with mid-round dropout,
+        # FedAvg + EMA on, toy denoiser — wide enough to hit >=2 tiers
+        # and a strict subset, small enough for tier-1 CI
+        args.clients, args.T, args.t_cut = 5, 20, 5
+        args.rounds, args.batch, args.batches_per_round = 6, 4, 3
+        args.image_size, args.denoiser = 8, "toy"
+        args.policy, args.p, args.drop_p = "bernoulli", 0.6, 0.3
+        args.fedavg_every, args.ema = 2, 0.9
+        args.client_sizes, args.seed = "24,16,8,24,12", 0
+        return smoke(args)
 
     key = jax.random.PRNGKey(args.seed)
-    ccfg = CollabConfig(n_clients=args.clients, T=args.T, t_cut=args.t_cut,
-                        denoiser=args.denoiser, image_size=args.image_size,
-                        batch_size=args.batch)
-    dcfg = SyntheticConfig(image_size=args.image_size,
-                           n_attrs=ccfg.n_classes)
-    sizes = (None if args.client_sizes is None else
-             [int(s) for s in args.client_sizes.split(",")])
-    data = make_client_datasets(key, dcfg, args.clients, args.n_per_client,
-                                non_iid=not args.iid, sizes=sizes)
-
-    mesh = None
-    if args.sequential:
-        state, step_fn, apply_fn = setup(key, ccfg)
+    init_one, apply_fn = build_model(args, key)
+    data = make_data(args, key)
+    cfg = make_train_config(args)
+    if args.resume and args.checkpoint and os.path.exists(args.checkpoint):
+        rt = TrainRuntime.restore(cfg, init_one, apply_fn, args.checkpoint,
+                                  mesh=make_mesh(args))
+        for uid, (x, y) in enumerate(data):
+            if uid in rt.registry:
+                rt.attach_data(uid, x, y)
+        # a --join-at client restored from the checkpoint regenerates its
+        # data from the same addressed key the join used — without this
+        # it would resume data-less and silently sit out every round
+        if args.join_at is not None and args.clients in rt.registry:
+            xj, yj = make_data(args, jax.random.fold_in(key, 777))[0]
+            rt.attach_data(args.clients, xj, yj)
+        print(f"resumed {args.checkpoint} at round {rt.round}")
     else:
-        vstate, round_fn, apply_fn = setup_vectorized(key, ccfg)
-        mesh = make_client_mesh(args.clients)
-        vstate = shard_vectorized_state(vstate, mesh)
-    engine = "sequential" if args.sequential else "vectorized"
-    print(f"CollaFuse: k={args.clients} T={args.T} t_cut={args.t_cut} "
-          f"denoiser={args.denoiser} non_iid={not args.iid} engine={engine}"
-          + (f" sizes={sizes}" if sizes else ""))
-
-    for r in range(args.rounds):
-        t0 = time.time()
-        kr = jax.random.fold_in(key, 10_000 + r)
-        per_client = []
-        for c, (x, y) in enumerate(data):
-            bs = list(batches(x, y, args.batch, jax.random.fold_in(kr, c),
-                              drop_last=False))
-            per_client.append(bs[:args.steps_per_round])
-        if args.sequential:
-            metrics = train_round(state, step_fn, per_client, kr)
-        else:
-            xs, ys, mask = stack_round_batches(per_client)
-            if xs is not None:
-                xs, ys, mask = shard_round_batches(mesh, xs, ys, mask)
-            metrics = train_round_vectorized(vstate, round_fn, xs, ys, kr,
-                                             mask=mask)
-        # a data-less client reports {}; the round is empty only when EVERY
-        # client does
-        m0 = next((m for m in metrics.values() if m), None)
-        if m0 is None:
-            print(f"round {r}: no client had any data — skipped")
-            continue
-        print(f"round {r}: client_loss={m0['client_loss']:.4f} "
-              f"server_loss={m0['server_loss']:.4f} "
-              f"payload={m0['payload_bytes']:.0f}B "
-              f"({time.time() - t0:.1f}s)")
-
-    if not args.sequential:
-        state = to_sequential(vstate)  # evaluation/checkpoint use list form
-
-    # --- evaluation: fidelity per client + disclosure at the cut ---
-    n_eval = args.eval_samples
-    for c, (x, y) in enumerate(data[: min(2, args.clients)]):
-        if y.shape[0] == 0:
-            print(f"client {c}: no data — skipping eval")
-            continue
-        ke = jax.random.fold_in(key, 20_000 + c)
-        ys = y[:n_eval]
-        samp, handoff = sample_for_client(state, c, ke, ys, ccfg, apply_fn,
-                                          return_handoff=True)
-        fid = fd_proxy(x[:n_eval], samp)
-        dis = fd_proxy(x[:n_eval], handoff)
-        print(f"client {c}: FD(real, collab-sample)={fid:.3f}  "
-              f"FD(real, server-handoff)={dis:.3f}  (higher = less disclosed)")
-
+        rt = fresh_runtime(args, key, init_one, apply_fn, data)
+    print(f"CollaFuse train runtime: k={args.clients} T={args.T} "
+          f"t_cut={args.t_cut} denoiser={args.denoiser} "
+          f"policy={args.policy}(p={args.p}, drop_p={args.drop_p}) "
+          f"fedavg_every={args.fedavg_every} ema={args.ema} "
+          f"rounds={rt.round}->{args.rounds}")
+    while rt.round < args.rounds:
+        if args.join_at is not None and rt.round == args.join_at and \
+                args.clients not in rt.registry:
+            x, y = make_data(args, jax.random.fold_in(key, 777))[0]
+            uid = rt.register_client(x, y)
+            print(f"round {rt.round}: client {uid} joined")
+        if args.leave_at is not None and rt.round == args.leave_at:
+            rt.leave(0)
+            print(f"round {rt.round}: client 0 left")
+        rep = rt.run_round()
+        print_report(f"round {rep['round']}", rep)
+        if args.checkpoint and args.checkpoint_every > 0 and \
+                rt.round % args.checkpoint_every == 0:
+            rt.save(args.checkpoint)
     if args.checkpoint:
-        save(args.checkpoint, {
-            "server_params": state.server_params,
-            "client_params": state.client_params,
-            "step": state.step,
-        })
+        rt.save(args.checkpoint)
         print("checkpoint ->", args.checkpoint)
-    return state
+    return rt
 
 
 if __name__ == "__main__":

@@ -190,6 +190,25 @@ def shard_round_batches(mesh, xs, ys, mask=None):
     return put(xs), put(ys), put(mask)
 
 
+def cohort_uid_spec(client_axis: str = CLIENT_AXIS) -> P:
+    """The (tier,) registry-uid vector of an identity-keyed cohort round
+    (core/collab.make_vectorized_round(identity_keyed=True)): one id per
+    cohort SLOT, so it shards with the slot axis — each shard folds its
+    own clients' identities locally, no collectives."""
+    return P(client_axis)
+
+
+def shard_cohort_round(mesh, xs, ys, mask, uids):
+    """Place one federated round's operands (repro.train's padded cohort
+    stacks + the uid vector) on ``mesh`` — ``shard_round_batches`` plus
+    the identity vector, so a cohort slot, its validity, and its uid
+    always live on the same shard."""
+    xs, ys, mask = shard_round_batches(mesh, xs, ys, mask)
+    uids = jax.device_put(uids, NamedSharding(
+        mesh, sanitize_spec(cohort_uid_spec(), uids.shape, mesh)))
+    return xs, ys, mask, uids
+
+
 def make_client_mesh(n_clients: int):
     """1-D ``clients`` mesh over the most local devices that evenly divide
     n_clients (1 device on a plain CPU host — specs still apply, making the

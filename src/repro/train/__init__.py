@@ -1,0 +1,14 @@
+"""Federated training runtime (partial-participation round orchestrator
+with shape-stable cohort tiers and bitwise mid-run resume) layered on the
+PR-1/2 masked vectorized engine.  See train/runtime.py for the
+architecture notes."""
+from repro.train.participation import (ParticipationConfig, sample_cohort,
+                                       sample_drops, uid_scores)
+from repro.train.registry import ClientRecord, ClientRegistry
+from repro.train.rounds import RoundPlan, participation_tier, plan_round
+from repro.train.runtime import TrainConfig, TrainRuntime
+
+__all__ = ["ClientRecord", "ClientRegistry", "ParticipationConfig",
+           "RoundPlan", "TrainConfig", "TrainRuntime",
+           "participation_tier", "plan_round", "sample_cohort",
+           "sample_drops", "uid_scores"]

@@ -1,0 +1,113 @@
+"""Partial-participation sampling — identity-keyed, so policy is never
+semantics.
+
+FL practice (de Goede et al.; Phoenix) trains each round on a sampled
+COHORT of the registered clients, and real cohorts shrink further when
+members drop mid-round.  Every draw here is ADDRESSED, never chained
+(the serve runtime's discipline): a client's participation score for
+round r is a pure function of ``(base_key, tag, r, uid)``, computed as
+
+    uniform(fold_in(fold_in(fold_in(base_key, TAG), r), uid))
+
+so registering or removing one client never perturbs another's draws,
+and a checkpoint needs only (base_key, round cursor) to reproduce every
+future cohort bitwise — the mid-run-resume guarantee of
+train/runtime.py.
+
+Policies:
+  * ``full``      — everyone active (the PR-1 fiction, kept as baseline);
+  * ``bernoulli`` — each active client independently with prob ``p``;
+  * ``fixed``     — the ``cohort_k`` active clients with the smallest
+                    scores (uniform-without-replacement in distribution).
+
+Mid-round DROPOUT (``drop_p``): a cohort member drops with prob
+``drop_p`` at a batch slot derived from the same score draw — the
+runtime zeroes the member's validity mask from that slot on, so a
+dropped client simply stops contributing loss/gradient weight and its
+remaining AdamW updates are where-skipped by the masked engine.  The
+batch slot is ``floor(score / drop_p * n_batches)``: conditioned on
+dropping, the score is uniform on [0, drop_p), so the slot is uniform
+over the round — one addressed draw covers both decisions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Disjoint stream tags: every runtime PRNG purpose folds its own tag into
+# the base key first, so streams can never collide across purposes.
+TAG_INIT = 0x1217          # per-uid parameter init
+TAG_ROUND = 0x20D5         # per-round training key (batch/client/row keys)
+TAG_PART = 0x9A27          # participation scores
+TAG_DROP = 0xD209          # mid-round dropout scores
+TAG_DATA = 0xDA7A          # per-(round, uid) data shuffling
+
+
+@dataclasses.dataclass(frozen=True)
+class ParticipationConfig:
+    policy: str = "bernoulli"    # "full" | "bernoulli" | "fixed"
+    p: float = 0.8               # bernoulli participation probability
+    cohort_k: int = 0            # cohort size for "fixed"
+    drop_p: float = 0.0          # mid-round dropout probability per member
+    min_cohort: int = 1          # floor (lowest-score fill-in)
+
+    def __post_init__(self):
+        if self.policy not in ("full", "bernoulli", "fixed"):
+            raise ValueError(f"unknown participation policy {self.policy!r}")
+        if not 0.0 <= self.p <= 1.0 or not 0.0 <= self.drop_p <= 1.0:
+            raise ValueError(f"probabilities must be in [0, 1]: "
+                             f"p={self.p} drop_p={self.drop_p}")
+
+
+def uid_scores(base_key, tag: int, round_idx: int,
+               uids: Sequence[int]) -> np.ndarray:
+    """Per-uid uniform scores for round ``round_idx`` — the addressed
+    draw everything in this module derives from."""
+    rk = jax.random.fold_in(jax.random.fold_in(base_key, tag), round_idx)
+    return np.asarray(jax.vmap(
+        lambda u: jax.random.uniform(jax.random.fold_in(rk, u)))(
+        jnp.asarray(list(uids), jnp.int32)))
+
+
+def sample_cohort(cfg: ParticipationConfig, base_key, round_idx: int,
+                  active_uids: Sequence[int]) -> List[int]:
+    """This round's cohort (sorted uids).  Deterministic in
+    (base_key, round_idx, the active set) and independent per uid."""
+    uids = sorted(active_uids)
+    if not uids or cfg.policy == "full":
+        return uids
+    scores = uid_scores(base_key, TAG_PART, round_idx, uids)
+    if cfg.policy == "bernoulli":
+        chosen = [u for u, s in zip(uids, scores) if s < cfg.p]
+    else:                                    # fixed: k smallest scores
+        k = max(min(cfg.cohort_k, len(uids)), 0)
+        order = np.lexsort((uids, scores))   # score, uid-tiebreak
+        chosen = sorted(uids[i] for i in order[:k])
+    if len(chosen) < cfg.min_cohort:
+        order = np.lexsort((uids, scores))
+        for i in order:
+            if uids[i] not in chosen:
+                chosen.append(uids[i])
+            if len(chosen) >= min(cfg.min_cohort, len(uids)):
+                break
+    return sorted(chosen)
+
+
+def sample_drops(cfg: ParticipationConfig, base_key, round_idx: int,
+                 cohort: Sequence[int], n_batches: int) -> Dict[int, int]:
+    """Mid-round dropouts: ``{uid: batch slot it vanishes from}``.  A
+    slot of 0 means the member never trains this round (connected, then
+    immediately gone) — the masked engine keeps its state untouched."""
+    if cfg.drop_p <= 0.0 or n_batches <= 0 or not cohort:
+        return {}
+    scores = uid_scores(base_key, TAG_DROP, round_idx, cohort)
+    drops = {}
+    for u, s in zip(cohort, scores):
+        if s < cfg.drop_p:
+            drops[int(u)] = min(int(s / cfg.drop_p * n_batches),
+                                n_batches - 1)
+    return drops

@@ -1,0 +1,119 @@
+"""Round planning: cohort → one shape-stable padded stack per tier.
+
+The PR-2 masked engine already makes zero-padding inert WITHIN a fixed
+client stack (row/batch masking).  This module extends the same trick to
+the CLIENT AXIS itself: a round's cohort — whatever the participation
+sampler produced — is seated into a stack padded to the next
+power-of-two participation TIER, with the pad slots fully masked.  Batch
+count and batch size are pinned by the runtime config, so the compiled
+signature of a round depends on NOTHING but the tier: drifting cohort
+sizes {3, 5, 2, 4, …} converge onto the tier menu {4, 8} instead of one
+XLA compile per size (the jit trace-counter guard in train/runtime.py
+asserts exactly this).
+
+Everything in a plan is derived from addressed draws: member m's batches
+this round are its own dataset shuffled by
+``fold_in(fold_in(fold_in(base, TAG_DATA), round), uid)``, and the pad
+slots repeat member 0's uid/data — harmless, because their mask is
+all-zero and the engine's where-skipped AdamW plus identity-keyed
+randomness make a masked slot a bitwise no-op for every real slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import batches
+from repro.train.participation import TAG_DATA
+from repro.train.registry import ClientRegistry
+
+
+def participation_tier(n: int, cap: Optional[int] = None) -> int:
+    """Next power of two >= max(n, 1), optionally capped — the cohort
+    axis's fixed shape menu (the client-axis sibling of
+    serve/scheduler.tier)."""
+    t = 1
+    while t < n:
+        t *= 2
+    return t if cap is None else min(t, max(cap, 1))
+
+
+@dataclasses.dataclass
+class RoundPlan:
+    """One round's engine inputs: fixed-shape stacks + the identity
+    vector.  ``cohort`` lists the real member uids (slot order);
+    slots ``len(cohort)..tier-1`` are all-masked padding."""
+    round_idx: int
+    cohort: List[int]
+    tier: int
+    xs: jnp.ndarray           # (n_batches, tier, B, H, W, C)
+    ys: jnp.ndarray           # (n_batches, tier, B, n_classes)
+    mask: jnp.ndarray         # (n_batches, tier, B) 0/1 validity
+    uids: jnp.ndarray         # (tier,) int32 registry identities
+    drops: Dict[int, int]     # uid -> first masked batch slot (mid-round)
+
+    @property
+    def real_samples(self) -> int:
+        return int(np.asarray(self.mask).sum())
+
+    @property
+    def padded_cells(self) -> int:
+        return int(self.mask.size) - self.real_samples
+
+    def signature(self) -> tuple:
+        """What jit keys compiles on — shapes only, never values."""
+        return (self.xs.shape, self.ys.shape, self.mask.shape,
+                self.uids.shape)
+
+
+def plan_round(registry: ClientRegistry, cohort: Sequence[int],
+               round_idx: int, base_key, *, n_batches: int, batch_size: int,
+               image_shape, n_classes: int, tier_cap: Optional[int] = None,
+               drops: Optional[Dict[int, int]] = None
+               ) -> Optional[RoundPlan]:
+    """Build the padded stacks for ``cohort``.  Returns None for an empty
+    cohort or when no member holds a single sample (the runtime then
+    advances the cursor without an engine call).  Each member contributes
+    up to ``n_batches`` batches of up to ``batch_size`` rows from its own
+    registry data (round-keyed shuffle, trailing partial batch kept);
+    shorter members are row/batch-masked exactly like PR-2 raggedness."""
+    cohort = list(cohort)
+    if not cohort:
+        return None
+    tier = participation_tier(len(cohort), tier_cap)
+    if len(cohort) > tier:
+        raise ValueError(f"cohort of {len(cohort)} exceeds tier cap {tier}")
+    H, W, C = image_shape
+    xs = np.zeros((n_batches, tier, batch_size, H, W, C), np.float32)
+    ys = np.zeros((n_batches, tier, batch_size, n_classes), np.float32)
+    mask = np.zeros((n_batches, tier, batch_size), np.float32)
+    dkey = jax.random.fold_in(base_key, TAG_DATA)
+    rkey = jax.random.fold_in(dkey, round_idx)
+    drops = drops or {}
+    for m, uid in enumerate(cohort):
+        rec = registry.get(uid)
+        if rec.n_samples == 0:
+            continue
+        it = batches(rec.x, rec.y, batch_size,
+                     key=jax.random.fold_in(rkey, uid), drop_last=False)
+        for b, (x, y) in enumerate(it):
+            if b >= n_batches:
+                break
+            n = x.shape[0]
+            xs[b, m, :n] = np.asarray(x)
+            ys[b, m, :n] = np.asarray(y)
+            mask[b, m, :n] = 1.0
+        if uid in drops:                  # gone from slot d onward
+            mask[drops[uid]:, m, :] = 0.0
+    if mask.sum() == 0:
+        return None
+    pad_uid = cohort[0]
+    uid_vec = np.asarray(cohort + [pad_uid] * (tier - len(cohort)), np.int32)
+    return RoundPlan(round_idx=round_idx, cohort=cohort, tier=tier,
+                     xs=jnp.asarray(xs), ys=jnp.asarray(ys),
+                     mask=jnp.asarray(mask), uids=jnp.asarray(uid_vec),
+                     drops=dict(drops))

@@ -1,0 +1,428 @@
+"""CollaFuse federated training runtime — persistent Alg.-1 training
+under partial participation.  Design notes (the training counterpart of
+serve/runtime.py's, and the mirror image of its queue→engine loop):
+
+* **Registry → participation sampler → round plan → engine →
+  aggregation → telemetry/checkpoint.**  ``TrainRuntime`` is constructed
+  once and runs rounds forever: clients ``register_client``/``leave`` at
+  any time (control plane, between rounds); each ``run_round`` samples a
+  cohort from the ACTIVE registry (train/participation.py: full /
+  bernoulli / fixed-k, plus mid-round dropout), plans it into padded
+  fixed-shape stacks (train/rounds.py), runs ONE jitted masked round
+  (core/collab.make_vectorized_round(identity_keyed=True)), scatters the
+  cohort's updated nets back into the registry, applies the optional
+  cross-cohort FedAvg and server-EMA aggregation, and emits a round
+  report.  ``run`` loops rounds with periodic durable checkpoints.
+* **One compiled signature per participation TIER.**  Cohorts are padded
+  along the CLIENT axis to power-of-two tiers with fully-masked slots —
+  the client-axis extension of PR 2's row/batch masking.  Batch count
+  and batch size are pinned by the config, so a round's jit signature
+  depends only on its tier and drifting cohort sizes converge onto the
+  tier menu instead of one compile per size.  A python trace counter on
+  the jitted engine (incremented only when jit re-traces) is the
+  recompile guard; the CI smoke asserts exactly one signature per tier.
+* **Identity keying makes participation a pure policy knob.**  Every
+  per-client draw is keyed by REGISTRY uid, not stack seat
+  (protocol.client_keys), every per-sample draw is row-keyed below that
+  (splitting.row_keys), and every runtime purpose folds its own stream
+  tag into the ONE base key (participation.TAG_*) — randomness is
+  addressed, never chained.  Consequences, pinned by
+  tests/test_train_runtime.py: a cohort-of-3 round padded to tier 4 is
+  BITWISE equal to the unpadded run (params, opt states, metrics); a
+  masked slot is a bitwise no-op (absent clients' nets, moments, and
+  step counters are untouched, via the where-skipped AdamW); and cohort
+  membership changes never perturb a non-member.  The vectorized round
+  is additionally differential-tested against the sequential eager
+  oracle (``train_round_reference(uids=)``) at the repo's established
+  oracle tolerance.
+* **Bitwise mid-run resume.**  ``state_dict``/``save`` persist the FULL
+  resumable state — server params/opt, per-client params/opt, registry
+  metadata (uids, counters, membership), the cohort cursor, the base
+  PRNG key, and the EMA track — through checkpointing/checkpoint.py
+  (atomic + fsync'd).  Because all randomness is addressed by
+  (base key, tag, round, uid), a run interrupted after round j and
+  resumed from its checkpoint replays rounds j+1..n bitwise-identically
+  to the uninterrupted run: same cohorts, same drops, same batches, same
+  updates (asserted by the CI smoke and tests).  Client DATA is never
+  checkpointed (split-learning premise): drivers re-attach each uid's
+  local dataset on resume.
+* **Aggregation closes the loop to sampling.**  Optional cross-cohort
+  FedAvg (``fedavg_every``) averages the cohort members' client nets
+  size-weighted by their real trained-sample counts
+  (core/fedavg.average_cohort — zero-seen members are weight-guarded,
+  absent clients are no-ops), and a server-parameter EMA track
+  (``ema_decay``) maintains the smoothed server net that sampling/serve
+  should load (``sampling_server_params``).
+* **Sharding.**  The runtime is mesh-agnostic; pass ``mesh`` to place
+  the round stacks with the cohort specs
+  (sharding/specs.shard_cohort_round — client axis over "clients", like
+  the stacked training state).  launch/collab_dryrun.py's
+  ``train_runtime`` entry compiles the identity-keyed cohort round on
+  the ("clients", "data") mesh.
+
+Remaining open (ROADMAP): overlap of client/server phases, multi-host
+cohorts, asynchronous (stale-cohort) aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing import checkpoint as ckpt
+from repro.core.collab import make_vectorized_round, stack_clients, \
+    unstack_clients
+from repro.core.fedavg import average_cohort
+from repro.core.schedules import DiffusionSchedule
+from repro.core.splitting import CutPoint
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.train.participation import (TAG_INIT, TAG_PART, TAG_ROUND,
+                                       ParticipationConfig, sample_cohort,
+                                       sample_drops, uid_scores)
+from repro.train.registry import ClientRegistry
+from repro.train.rounds import plan_round
+
+
+def _key_pack(key) -> Dict[str, Any]:
+    """Checkpointable form of a PRNG key (raw uint32 or typed)."""
+    try:
+        data, typed = jax.random.key_data(key), True
+        typed = jnp.issubdtype(key.dtype, jax.dtypes.prng_key)
+    except TypeError:
+        data, typed = key, False
+    return {"data": np.asarray(data), "typed": bool(typed)}
+
+
+def _key_unpack(packed) -> Any:
+    data = jnp.asarray(packed["data"])
+    return jax.random.wrap_key_data(data) if packed["typed"] else data
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    T: int
+    t_cut: int
+    image_shape: Tuple[int, int, int]       # (H, W, C)
+    n_classes: int
+    batch_size: int = 8
+    batches_per_round: int = 4              # fixed nb — shape stability
+    lr: float = 1e-3
+    schedule: str = "linear"
+    participation: ParticipationConfig = ParticipationConfig()
+    fedavg_every: int = 0                   # 0 = off
+    ema_decay: float = 0.0                  # 0 = off
+    tier_cap: Optional[int] = None          # cap on the pow2 cohort tier
+
+    def cut(self) -> CutPoint:
+        return CutPoint(self.T, self.t_cut)
+
+    def sched(self) -> DiffusionSchedule:
+        mk = (DiffusionSchedule.linear if self.schedule == "linear"
+              else DiffusionSchedule.cosine)
+        return mk(self.T)
+
+
+class TrainRuntime:
+    """The persistent federated training loop.  Construct once, register
+    clients, ``run`` rounds forever; the registry, compiled signatures,
+    counters, and EMA persist across calls (that persistence IS the
+    subsystem)."""
+
+    def __init__(self, config: TrainConfig, init_one, apply_fn, key,
+                 mesh=None):
+        self.config = config
+        self.sched = config.sched()
+        self.cut = config.cut()
+        self._init_one = init_one
+        self._apply_fn = apply_fn
+        self._key = key
+        self.mesh = mesh
+        self.registry = ClientRegistry()
+        self.round = 0                       # cohort cursor
+        self.total_steps = 0                 # real (client, batch) cells
+        self.traces = 0                      # engine re-traces == compiles
+        self._sigs: Dict[int, set] = {}      # tier -> signatures seen
+        self.server_params = init_one(
+            jax.random.fold_in(jax.random.fold_in(key, TAG_INIT), 0))
+        self.server_opt = init_opt_state(self.server_params)
+        self.ema_server = (jax.tree.map(jnp.copy, self.server_params)
+                           if config.ema_decay > 0.0 else None)
+
+        raw = make_vectorized_round(self.sched, self.cut, apply_fn,
+                                    AdamWConfig(lr=config.lr), masked=True,
+                                    identity_keyed=True, jit=False)
+
+        def counted(cp, copt, sp, sopt, xs, ys, mask, uids, rkey):
+            # body runs only when jit (re-)traces — a new (tier, nb, B)
+            # signature — making this python counter the compile guard
+            # the CI smoke asserts on (steady cohort churn: zero)
+            self.traces += 1
+            return raw(cp, copt, sp, sopt, xs, ys, mask, uids, rkey)
+
+        self._engine = jax.jit(counted)
+
+    # -- control plane -----------------------------------------------------
+    def register_client(self, x=None, y=None, uid: Optional[int] = None
+                        ) -> int:
+        """Admit a client: permanent uid, identity-keyed fresh net.  The
+        init key is ``fold_in(fold_in(base, TAG_INIT), 1 + uid)`` (slot 0
+        is the server), so a client's init depends only on its identity —
+        join order and roster size never matter."""
+        uid = self.registry.register(x=x, y=y, uid=uid,
+                                     joined_round=self.round)
+        rec = self.registry.get(uid)
+        ik = jax.random.fold_in(
+            jax.random.fold_in(self._key, TAG_INIT), 1 + uid)
+        rec.params = self._init_one(ik)
+        rec.opt = init_opt_state(rec.params)
+        return uid
+
+    def leave(self, uid: int) -> None:
+        self.registry.leave(uid)
+
+    def rejoin(self, uid: int) -> None:
+        self.registry.rejoin(uid)
+
+    def attach_data(self, uid: int, x, y) -> None:
+        self.registry.attach_data(uid, x, y)
+
+    # -- reporting ---------------------------------------------------------
+    def _empty_report(self) -> Dict:
+        """Zeroed report with the FULL key set — empty rounds must not
+        change the schema consumers sum over."""
+        return {
+            "round": self.round, "n_registered": len(self.registry),
+            "n_active": len(self.registry.active_uids()),
+            "cohort": [], "cohort_size": 0, "strict_subset": False,
+            "tier": 0, "padded_client_slots": 0,
+            "real_samples": 0, "padded_cells": 0, "pad_waste_frac": 0.0,
+            "mid_round_drops": 0, "engine_traces": 0,
+            "signatures_per_tier": {t: len(s)
+                                    for t, s in sorted(self._sigs.items())},
+            "max_signatures_per_tier": max(
+                (len(s) for s in self._sigs.values()), default=0),
+            "client_loss": 0.0, "server_loss": 0.0,
+            "fedavg_applied": False, "seen_total": 0, "wall_s": 0.0,
+        }
+
+    # -- the loop ----------------------------------------------------------
+    def run_round(self) -> Dict:
+        """One federated round: sample cohort → plan → one engine call →
+        scatter-back → aggregate → report.  Advances the cohort cursor
+        even when the round is empty (no active client, no data), so the
+        round→randomness mapping never depends on data availability."""
+        t0 = time.perf_counter()
+        cfg = self.config
+        active = self.registry.active_uids()
+        cohort = sample_cohort(cfg.participation, self._key, self.round,
+                               active)
+        if cfg.tier_cap is not None and len(cohort) > cfg.tier_cap:
+            # the cap bounds the compiled cohort axis, so it must bound
+            # the cohort itself: keep the tier_cap members with the
+            # smallest participation scores (same addressed draw the
+            # sampler used — deterministic, identity-keyed, fair across
+            # rounds), overflow members sit this round out
+            scores = uid_scores(self._key, TAG_PART, self.round, cohort)
+            order = np.lexsort((np.asarray(cohort), scores))
+            cohort = sorted(int(cohort[i]) for i in order[:cfg.tier_cap])
+        drops = sample_drops(cfg.participation, self._key, self.round,
+                             cohort, cfg.batches_per_round)
+        plan = plan_round(
+            self.registry, cohort, self.round, self._key,
+            n_batches=cfg.batches_per_round, batch_size=cfg.batch_size,
+            image_shape=cfg.image_shape, n_classes=cfg.n_classes,
+            tier_cap=cfg.tier_cap, drops=drops)
+        report = self._empty_report()
+        report.update({"cohort": list(cohort), "cohort_size": len(cohort),
+                       "strict_subset": len(cohort) < len(active),
+                       "mid_round_drops": len(drops)})
+        if plan is None:
+            report["fedavg_applied"] = self._maybe_fedavg()
+            self._update_ema()
+            self.round += 1
+            report["wall_s"] = time.perf_counter() - t0
+            return report
+
+        traces0 = self.traces
+        members = [self.registry.get(u) for u in plan.cohort]
+        pad = plan.tier - len(members)
+        cp = stack_clients([m.params for m in members] +
+                           [members[0].params] * pad)
+        co = stack_clients([m.opt for m in members] +
+                           [members[0].opt] * pad)
+        xs, ys, mask, uids = plan.xs, plan.ys, plan.mask, plan.uids
+        if self.mesh is not None:
+            from repro.sharding.specs import shard_cohort_round
+            xs, ys, mask, uids = shard_cohort_round(self.mesh, xs, ys,
+                                                    mask, uids)
+        rkey = jax.random.fold_in(
+            jax.random.fold_in(self._key, TAG_ROUND), self.round)
+        cp, co, self.server_params, self.server_opt, metrics = self._engine(
+            cp, co, self.server_params, self.server_opt, xs, ys, mask,
+            uids, rkey)
+        jax.block_until_ready(self.server_params)
+        self._sigs.setdefault(plan.tier, set()).add(plan.signature())
+
+        # scatter ONLY the real cohort slots back; pad slots are discarded
+        # (the engine left them bitwise-untouched anyway)
+        new_p = unstack_clients(cp, plan.tier)
+        new_o = unstack_clients(co, plan.tier)
+        mask_np = np.asarray(plan.mask)
+        for m, rec in enumerate(members):
+            rec.params, rec.opt = new_p[m], new_o[m]
+            n_real = int(mask_np[:, m, :].sum())
+            rec.seen += n_real
+            rec.window_seen += n_real
+            rec.window_member = True
+        cells = mask_np.any(axis=2)                 # (nb, tier)
+        self.total_steps += int(cells.sum())
+
+        report.update(self._losses(metrics, mask_np))
+        report["fedavg_applied"] = self._maybe_fedavg()
+        self._update_ema()
+        self.round += 1
+        report.update({
+            "tier": plan.tier, "padded_client_slots": pad,
+            "real_samples": plan.real_samples,
+            "padded_cells": plan.padded_cells,
+            "pad_waste_frac": plan.padded_cells / plan.mask.size,
+            "engine_traces": self.traces - traces0,
+            "signatures_per_tier": {t: len(s)
+                                    for t, s in sorted(self._sigs.items())},
+            "max_signatures_per_tier": max(len(s)
+                                           for s in self._sigs.values()),
+            "seen_total": sum(r.seen for r in self.registry.records()),
+            "wall_s": time.perf_counter() - t0,
+        })
+        return report
+
+    def run(self, n_rounds: int, checkpoint_path: Optional[str] = None,
+            checkpoint_every: int = 1) -> List[Dict]:
+        """Run ``n_rounds`` rounds; checkpoint after every
+        ``checkpoint_every``-th completed round (and once more at the
+        end) when a path is given — the periodic persistence that makes
+        mid-run interruption recoverable."""
+        reports = []
+        saved_at = -1
+        for i in range(n_rounds):
+            reports.append(self.run_round())
+            if checkpoint_path and checkpoint_every > 0 and \
+                    (i + 1) % checkpoint_every == 0:
+                self.save(checkpoint_path)
+                saved_at = i
+        if checkpoint_path and saved_at != n_rounds - 1:
+            self.save(checkpoint_path)
+        return reports
+
+    # -- aggregation -------------------------------------------------------
+    def _maybe_fedavg(self) -> bool:
+        cfg = self.config
+        if not cfg.fedavg_every or (self.round + 1) % cfg.fedavg_every:
+            return False
+        recs = self.registry.records()
+        if not recs:
+            return False
+        # a member that LEFT since it trained neither contributes nor
+        # receives — departure freezes its net bitwise until rejoin (the
+        # registry contract), so membership is gated on active here
+        members = [r.window_member and r.active for r in recs]
+        new = average_cohort([r.params for r in recs],
+                             [r.window_seen for r in recs], members)
+        applied = any(m and r.window_seen > 0
+                      for m, r in zip(members, recs))
+        for r, p in zip(recs, new):
+            r.params = p
+            r.window_seen = 0
+            r.window_member = False
+        return applied
+
+    def _update_ema(self) -> None:
+        d = self.config.ema_decay
+        if self.ema_server is None or d <= 0.0:
+            return
+        self.ema_server = jax.tree.map(
+            lambda e, p: (d * e.astype(jnp.float32) +
+                          (1.0 - d) * p.astype(jnp.float32)).astype(p.dtype),
+            self.ema_server, self.server_params)
+
+    def sampling_server_params(self):
+        """The server net inference should load: the EMA track when
+        enabled, else the raw trained params."""
+        return (self.server_params if self.ema_server is None
+                else self.ema_server)
+
+    def _losses(self, metrics, mask_np) -> Dict[str, float]:
+        valid = mask_np.any(axis=2)                 # (nb, tier)
+        if not valid.any():
+            return {"client_loss": 0.0, "server_loss": 0.0}
+        cl = np.asarray(metrics["client_loss"])
+        out = {"client_loss": float(cl[valid].mean())}
+        b_srv = int(np.nonzero(valid.any(axis=1))[0][-1])
+        sl = np.asarray(metrics.get("server_loss", np.zeros(len(valid))))
+        out["server_loss"] = float(sl[b_srv])
+        return out
+
+    # -- persistence -------------------------------------------------------
+    def state_dict(self) -> Dict:
+        """The FULL resumable state.  Client data is deliberately absent
+        (it never leaves the client's record): re-attach by uid after
+        ``restore``."""
+        clients = {}
+        for rec in self.registry.records():
+            clients[str(rec.uid)] = {
+                "params": rec.params, "opt": rec.opt,
+                "seen": int(rec.seen),
+                "window_seen": int(rec.window_seen),
+                "window_member": bool(rec.window_member),
+                "joined_round": int(rec.joined_round),
+                "active": bool(rec.active),
+            }
+        return {
+            "version": 1,
+            "round": int(self.round),
+            "total_steps": int(self.total_steps),
+            "base_key": _key_pack(self._key),
+            "server_params": self.server_params,
+            "server_opt": self.server_opt,
+            "ema_server": self.ema_server,
+            "clients": clients,
+        }
+
+    def save(self, path: str) -> None:
+        ckpt.save(path, self.state_dict())
+
+    @classmethod
+    def restore(cls, config: TrainConfig, init_one, apply_fn, path: str,
+                mesh=None) -> "TrainRuntime":
+        """Rebuild a runtime from a checkpoint: params, opt states,
+        registry, cohort cursor, and RNG all resume where they stopped —
+        continuing from here is bitwise-equal to never having stopped.
+        Data is not in the checkpoint: call ``attach_data(uid, x, y)``
+        for every client that should keep training."""
+        state = ckpt.load(path)
+        if state.get("version") != 1:
+            raise ValueError(f"unknown checkpoint version "
+                             f"{state.get('version')!r}")
+        rt = cls(config, init_one, apply_fn, _key_unpack(state["base_key"]),
+                 mesh=mesh)
+        rt.round = int(state["round"])
+        rt.total_steps = int(state["total_steps"])
+        rt.server_params = state["server_params"]
+        rt.server_opt = state["server_opt"]
+        rt.ema_server = state["ema_server"]
+        for uid_s in sorted(state["clients"], key=int):
+            d = state["clients"][uid_s]
+            uid = int(uid_s)
+            rt.registry.register(uid=uid,
+                                 joined_round=int(d["joined_round"]))
+            rec = rt.registry.get(uid)
+            rec.params, rec.opt = d["params"], d["opt"]
+            rec.seen = int(d["seen"])
+            rec.window_seen = int(d["window_seen"])
+            rec.window_member = bool(d["window_member"])
+            rec.active = bool(d["active"])
+        return rt

@@ -1,9 +1,20 @@
-"""Checkpoint roundtrip tests."""
+"""Checkpoint roundtrip tests.
+
+The property layer (hypothesis, or the seeded boundary-inclusive
+fallback in _hypothesis_compat) sweeps the leaf types the training
+runtime's resumable state actually contains — bfloat16 params, boolean
+mask arrays, 0-d scalar leaves (opt step counters, EMA decay), numpy
+scalars — asserting dtype+shape+value survive the save/load round trip
+bitwise (the mid-run-resume contract rides on this).
+"""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import hypothesis, st
 from repro.checkpointing.checkpoint import load, save
 
 
@@ -33,3 +44,55 @@ def test_atomic_overwrite(tmp_path, key):
     save(path, {"v": jnp.ones((2,))})
     save(path, {"v": jnp.zeros((2,))})
     assert float(load(path)["v"].sum()) == 0.0
+
+
+_DTYPES = ("float32", "bfloat16", "bool", "int32", "uint32", "float16")
+_SHAPES = ((), (1,), (3,), (2, 2), (2, 1, 3))
+
+
+def _leaf(dtype: str, shape, seed: int):
+    rng = np.random.default_rng(seed)
+    if dtype == "bool":
+        return jnp.asarray(rng.integers(0, 2, shape).astype(bool))
+    if dtype in ("int32", "uint32"):
+        return jnp.asarray(rng.integers(0, 100, shape).astype(dtype))
+    return jnp.asarray(rng.normal(size=shape)).astype(dtype)
+
+
+@hypothesis.settings(max_examples=12, deadline=None)
+@hypothesis.given(dtype=st.sampled_from(_DTYPES),
+                  shape=st.sampled_from(_SHAPES),
+                  seed=st.integers(min_value=0, max_value=10_000))
+def test_roundtrip_property(dtype, shape, seed):
+    """Every (dtype, shape) leaf — incl. bfloat16, boolean masks, and 0-d
+    scalars — round-trips with dtype, shape, and bytes intact, nested
+    under dicts / lists / tuples like the runtime state_dict.  (No
+    function-scoped tmp_path under @given — real hypothesis health-checks
+    that; a per-example tempdir is used instead.)"""
+    import tempfile
+    leaf = _leaf(dtype, shape, seed)
+    tree = {"top": leaf, "nest": {"l": [leaf, leaf * 0], "t": (leaf,)},
+            "meta": {"seen": seed, "flag": True, "none": None}}
+    path = os.path.join(tempfile.mkdtemp(),
+                        f"prop_{dtype}_{len(shape)}_{seed}.msgpack")
+    save(path, tree)
+    back = load(path)
+    for got in (back["top"], back["nest"]["l"][0], back["nest"]["t"][0]):
+        assert got.dtype == leaf.dtype and got.shape == leaf.shape
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(leaf))
+    assert isinstance(back["nest"]["t"], tuple)
+    assert back["meta"] == {"seen": seed, "flag": True, "none": None}
+
+
+def test_numpy_scalar_leaves(tmp_path):
+    """np.generic scalars (np.float32(x), np.bool_, np.int64) — easy to
+    produce from eager reductions — used to raise; they now round-trip as
+    0-d arrays with their dtype preserved."""
+    tree = {"f": np.float32(2.5), "b": np.bool_(True), "i": np.int64(-3)}
+    path = str(tmp_path / "scalars.msgpack")
+    save(path, tree)
+    back = load(path)
+    assert back["f"].dtype == jnp.float32 and float(back["f"]) == 2.5
+    assert back["b"].dtype == jnp.bool_ and bool(back["b"]) is True
+    assert back["i"].dtype == jnp.int64 and int(back["i"]) == -3
+    assert all(back[k].shape == () for k in ("f", "b", "i"))

@@ -4,8 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.fedavg import (average_weights, fedavg_round, fedavg_sample,
-                               fedavg_setup, make_local_step, params_nbytes)
+from repro.core.fedavg import (average_cohort, average_weights,
+                               fedavg_round, fedavg_sample, fedavg_setup,
+                               make_local_step, params_nbytes)
 from repro.core.schedules import DiffusionSchedule
 from repro.optim.adamw import AdamWConfig
 
@@ -52,6 +53,42 @@ def test_average_weights_bad_weights():
         average_weights([a, a], weights=[1.0, -1.0])
     with pytest.raises(ValueError, match="non-negative"):
         average_weights([a, a], weights=[0.0, 0.0])
+
+
+def test_average_cohort_weighted_and_absent_noop():
+    """Registry-facing cohort FedAvg (the train runtime's aggregation):
+    members average n_c/Σn-weighted; ABSENT clients come back untouched
+    — bitwise, same object — never pulled toward the cohort."""
+    params = [{"w": jnp.array([0.0, 8.0])}, {"w": jnp.array([4.0, 0.0])},
+              {"w": jnp.array([100.0, 100.0])}]
+    out = average_cohort(params, seen=[1, 3, 50],
+                         members=[True, True, False])
+    np.testing.assert_allclose(np.asarray(out[0]["w"]), [3.0, 2.0])
+    np.testing.assert_allclose(np.asarray(out[1]["w"]), [3.0, 2.0])
+    assert out[2] is params[2]                       # absent: identity
+    # members share ONE average but hold independent copies
+    assert out[0] is not out[1]
+
+
+def test_average_cohort_zero_seen_guard():
+    """A zero-seen member (dropped before its first real batch) must not
+    NaN the normalization: it contributes nothing but still receives the
+    average; if NO member saw a sample the whole call is a no-op."""
+    params = [{"w": jnp.array([2.0])}, {"w": jnp.array([6.0])}]
+    out = average_cohort(params, seen=[0, 4], members=[True, True])
+    np.testing.assert_allclose(np.asarray(out[0]["w"]), [6.0])
+    np.testing.assert_allclose(np.asarray(out[1]["w"]), [6.0])
+    assert np.isfinite(np.asarray(out[0]["w"])).all()
+    # all-zero seen: the case average_weights refuses — guarded no-op
+    noop = average_cohort(params, seen=[0, 0], members=[True, True])
+    assert noop[0] is params[0] and noop[1] is params[1]
+    # empty membership: no-op too
+    noop2 = average_cohort(params, seen=[3, 3], members=[False, False])
+    assert noop2[0] is params[0] and noop2[1] is params[1]
+    with pytest.raises(ValueError, match="seen-count"):
+        average_cohort(params, seen=[1], members=[True, True])
+    with pytest.raises(ValueError, match="negative"):
+        average_cohort(params, seen=[-1, 2], members=[True, True])
 
 
 def test_fedavg_round_weights_by_samples(key):
