@@ -22,6 +22,16 @@ regime where recompiles dominate): steady rounds/s for both drivers
 (compile rounds excluded), total recompile counts, and the runtime's
 padded-cell waste fraction — the compile-count/padding trade the tier
 menu makes explicit.
+
+PR-6 straggler columns (``sync_barrier`` / ``async_stale``): the same
+runtime under TAG_LAG straggler injection (lag_p, lag_max) with each
+lag round charged ``lag_s`` of simulated upload delay.  Sync mode
+blocks the round barrier for the slowest member (barrier_stall_s);
+async mode scatters stragglers into a pending queue and folds them in
+late through fedavg.average_stale — the speedup column is the removed
+barrier time, and max_drift reports |async - sync| against the atol
+5e-2 tolerance documented in train/runtime.py (the ISSUE-6 acceptance
+gate).
 """
 from __future__ import annotations
 
@@ -151,6 +161,61 @@ def _bench(key, k: int, p: float, T: int = 48, n_rounds: int = 16,
          f"steady_speedup={us_old / us_new:.2f}x")
 
 
+def _bench_straggler(key, k: int = 5, p: float = 0.8, T: int = 48,
+                     n_rounds: int = 16, n_per_client: int = 16,
+                     nb: int = 2, B: int = 4, lag_p: float = 0.5,
+                     lag_max: int = 2, lag_s: float = 0.2):
+    """PR-6 barrier columns: sync straggler barrier vs async staleness-
+    tolerant merging on the same lag-injected workload."""
+    import dataclasses as dc
+    base = _config(k, p, T, nb, B)
+    part = dc.replace(base.participation, lag_p=lag_p, lag_max=lag_max)
+    init_one, apply_fn = _toy()
+
+    def run(async_mode):
+        cfg = dc.replace(base, participation=part, async_mode=async_mode,
+                         lag_s=lag_s)
+        rt = TrainRuntime(cfg, init_one, apply_fn, key)
+        for i in range(k):
+            rt.register_client(*_data(i, n_per_client))
+        reps = rt.run(n_rounds)
+        drained = rt.drain() if async_mode else 0
+        return rt, reps, drained
+
+    sync_rt, sync_reps, _ = run(False)
+    async_rt, async_reps, drained = run(True)
+    stragglers = sum(r["stragglers"] for r in sync_reps)
+    stall = sum(r["barrier_stall_s"] for r in sync_reps)
+    merges = sum(r["stale_merges"] for r in async_reps) + drained
+    # steady rounds only (compile rounds excluded, same discipline as
+    # _bench).  The steady sets are close but not identical — async
+    # busy-exclusion can shift cohort composition — so lag_s is sized
+    # to make the barrier the dominant steady-round cost: sync sleeps
+    # lag_s * max(lag) per straggled round, async never blocks and
+    # pays only the (cheap) stale-merge deliveries instead
+    steady = lambda reps: [r["wall_s"] for r in reps
+                           if r["tier"] > 0 and r["engine_traces"] == 0]
+    s_sync, s_async = steady(sync_reps), steady(async_reps)
+    wall_sync, wall_async = sum(s_sync), sum(s_async)
+    drift = max((float(np.max(np.abs(np.asarray(a, np.float32) -
+                                     np.asarray(b, np.float32))))
+                 for a, b in zip(jax.tree.leaves(async_rt.server_params),
+                                 jax.tree.leaves(sync_rt.server_params))),
+                default=0.0)
+    emit(f"collab_train_runtime/sync_barrier_k{k}_lagp{lag_p}",
+         wall_sync / max(len(s_sync), 1) * 1e6,
+         f"steady_rounds={len(s_sync)};stragglers={stragglers};"
+         f"barrier_stall_s={stall:.2f};steady_wall_s={wall_sync:.2f};"
+         f"lag_s={lag_s}")
+    emit(f"collab_train_runtime/async_stale_k{k}_lagp{lag_p}",
+         wall_async / max(len(s_async), 1) * 1e6,
+         f"steady_rounds={len(s_async)};stale_merges={merges};"
+         f"drained={drained};barrier_stall_s=0.00;"
+         f"steady_wall_s={wall_async:.2f};"
+         f"async_speedup={wall_sync / max(wall_async, 1e-9):.2f}x;"
+         f"max_drift={drift:.4f};tolerance=5e-2")
+
+
 def main(quick: bool = False):
     key = jax.random.PRNGKey(0)
     ks = [5] if quick else [5, 8]
@@ -160,6 +225,9 @@ def main(quick: bool = False):
             _bench(jax.random.fold_in(key, 100 * k + int(10 * p)), k, p,
                    T=24 if quick else 48,
                    n_rounds=8 if quick else 16)
+    _bench_straggler(jax.random.fold_in(key, 555), 5, 0.8,
+                     T=24 if quick else 48,
+                     n_rounds=8 if quick else 16)
 
 
 if __name__ == "__main__":

@@ -7,9 +7,15 @@ Suites:
   collab_round         sequential Alg.-1 loop vs vectorized round engine
   collab_sample        per-request Alg.-2 sampling vs batched sampling engine
   collab_serve_runtime serve runtime (prefix cache + shape-stable waves)
-                       vs the PR-3 fifo/no-cache driver on Zipf traffic
+                       vs the PR-3 fifo/no-cache driver on Zipf traffic;
+                       plus PR-6 seq_barrier/pipelined columns — wave
+                       barrier vs double-buffered overlap under injected
+                       host straggle (bitwise-equal outputs)
   collab_train_runtime federated train runtime (pow2 cohort tiers) vs the
-                       PR-1 exact-stack driver under Bernoulli cohort churn
+                       PR-1 exact-stack driver under Bernoulli cohort
+                       churn; plus PR-6 sync_barrier/async_stale columns
+                       — straggler barrier vs staleness-weighted async
+                       merging (drift within the documented tolerance)
   fidelity_sweep       paper Fig. 4 (top): FD vs cut point, GM/ICM baselines
   attr_inference_sweep paper Fig. 7: attribute-inference F1 vs cut point
   inversion_sweep      paper Fig. 8: cross-client inversion vs cut point

@@ -12,7 +12,11 @@
 #                              signature per bucket in steady state (jit
 #                              trace-counter guard), and >=30% fewer
 #                              physical server model calls than the
-#                              fifo/no-cache PR-3-style driver,
+#                              fifo/no-cache PR-3-style driver, AND a
+#                              straggler-injected overlap pass: pipelined
+#                              double-buffered waves bitwise == sequential
+#                              (same outputs/hits/physical calls, zero
+#                              steady re-traces in both modes),
 #                              plus the train-runtime smoke (registry ->
 #                              participation sampler -> cohort tier plan ->
 #                              identity-keyed masked engine -> aggregation ->
@@ -20,8 +24,14 @@
 #                              training contract: >=1 strict-subset cohort
 #                              round, exactly one compiled signature per
 #                              participation tier (jit trace-counter guard),
-#                              and bitwise resume-from-checkpoint ==
-#                              uninterrupted (params, opt states, EMA, RNG)
+#                              bitwise resume-from-checkpoint ==
+#                              uninterrupted (params, opt states, EMA, RNG,
+#                              pending async payloads), AND a straggler-
+#                              injected pass: the sync barrier is pure
+#                              wall-clock (bitwise == lag-free), async
+#                              staleness-weighted merging stays within the
+#                              documented tolerance with no recompile
+#                              regression
 #   scripts/ci.sh slow       - only the long system/sampler/U-Net tests
 #   scripts/ci.sh <pytest args...>  - passed through unchanged
 set -euo pipefail

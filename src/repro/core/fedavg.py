@@ -140,6 +140,44 @@ def average_cohort(client_params: List[Dict], seen: List[int],
     return out
 
 
+def average_stale(current: Dict, payload: Dict, staleness: int,
+                  alpha: float = 0.6, decay: float = 0.5) -> Dict:
+    """Staleness-weighted async merge (FedAsync, [Xie et al. 2019] —
+    the polynomial staleness family PAPERS.md's federated-diffusion
+    surveys recommend): fold a LATE client payload into the state the
+    server has meanwhile advanced to, at weight
+
+        w = alpha * (1 + staleness) ** (-decay)
+
+    where ``staleness`` counts full rounds between the payload's compute
+    round and its delivery (0 = arrived next round).  The merge is the
+    fp32 convex combination (1-w)·current + w·payload with each leaf's
+    dtype restored — exactly ``average_weights``'s accumulate-restore
+    discipline, so mixed-precision nets stay in their storage dtype.
+
+    Exactness guard: when w rounds to >= 1 (e.g. alpha=1, staleness=0,
+    the async runtime's bitwise-ladder pin) the payload is returned
+    AS-IS — identity, not an arithmetic (1-w)·c + w·p with w == 1.0,
+    which is not bitwise-stable in floating point.  Pinned by
+    tests/test_fedavg.py."""
+    if staleness < 0:
+        raise ValueError(f"staleness must be >= 0, got {staleness}")
+    if not 0.0 <= alpha <= 1.0 or decay < 0.0:
+        raise ValueError(f"need 0 <= alpha <= 1 and decay >= 0, got "
+                         f"alpha={alpha} decay={decay}")
+    w = alpha * (1.0 + staleness) ** (-decay)
+    if w >= 1.0:
+        return payload
+    if w <= 0.0:
+        return current
+
+    def mix(c, p):
+        out = (1.0 - w) * c.astype(jnp.float32) + w * p.astype(jnp.float32)
+        return out.astype(c.dtype)
+
+    return jax.tree.map(mix, current, payload)
+
+
 def fedavg_round(state: FedAvgState, step_fn, batches_per_client, key
                  ) -> Dict[str, float]:
     """One FedAvg round: local training, weight upload, average, download.

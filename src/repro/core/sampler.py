@@ -209,7 +209,7 @@ def make_sample_engine(sched: DiffusionSchedule, apply_fn,
                        image_shape: Tuple[int, ...],
                        use_pallas: Optional[bool] = None,
                        interpret: bool = False, jit: bool = True,
-                       server_ddim: bool = False):
+                       server_ddim: bool = False, split: bool = False):
     """Build the batched executor:
 
         engine(server_params, stacked_client_params, key, tables,
@@ -230,17 +230,32 @@ def make_sample_engine(sched: DiffusionSchedule, apply_fn,
     ``image_shape`` is the per-sample trailing shape (H, W, C); the
     request batch B comes from the tables.  jit recompiles per distinct
     (G, H, R, S_max, C_max, B) signature — the serve scheduler buckets
-    waves and pads the axes to fixed tiers to stabilize shapes."""
+    waves and pads the axes to fixed tiers to stabilize shapes.
+
+    ``split=True`` returns the two masked scans as SEPARATELY jittable
+    stages instead of the fused program:
+
+        server_stage(server_params, key, tables) -> handoffs (G, B, ...)
+        client_stage(client_params, key, tables, handoffs, inject=None)
+            -> samples (R, B, *image_shape)
+
+    The stages are the fused engine's own phase bodies (the fused program
+    IS their composition — one source of truth), and each derives its
+    phase key from the same ``jax.random.split(key)`` the fused engine
+    performs, so ``client_stage(cp, key, t, server_stage(sp, key, t), i)``
+    is bitwise-equal to ``engine(sp, cp, key, t, i)[0]`` (pinned by
+    tests/test_sample_engine.py).  Splitting is what lets the serve
+    runtime pipeline bucket i+1's server scan against bucket i's client
+    scan: the handoff crossing the stage boundary is the one tensor
+    Alg. 2 ships anyway, and jax's async dispatch chains the stages
+    without a host round-trip."""
     up = _resolve_kernel(use_pallas)
 
-    def engine(server_params, client_params, key, tables: PlanTables,
-               inject=None):
-        (gy, gt, gtp, ga, gseed, rgroup, rclient, rseed, ct, ctp,
-         ca) = tables
+    def server_stage(server_params, key, tables: PlanTables):
+        (gy, gt, gtp, ga, gseed, *_rest) = tables
         G, B = gy.shape[0], gy.shape[1]
-        R = rgroup.shape[0]
         shape = (B,) + tuple(image_shape)
-        skey, ckey = jax.random.split(key)
+        skey, _ = jax.random.split(key)
         gkeys = jax.vmap(lambda g: jax.random.fold_in(skey, g))(gseed)
         x0 = jax.vmap(
             lambda gk: _rowwise_normal(jax.random.fold_in(gk, 0), shape))(
@@ -266,7 +281,15 @@ def make_sample_engine(sched: DiffusionSchedule, apply_fn,
         handoff, _ = jax.lax.scan(
             server_step, x0,
             (gt.T, gtp.T, ga.T, jnp.arange(gt.shape[1])))
+        return handoff
 
+    def client_stage(client_params, key, tables: PlanTables, handoff,
+                     inject=None):
+        (gy, _gt, _gtp, _ga, _gseed, rgroup, rclient, rseed, ct, ctp,
+         ca) = tables
+        B = gy.shape[1]
+        shape = (B,) + tuple(image_shape)
+        _, ckey = jax.random.split(key)
         params_r = jax.tree.map(lambda l: l[rclient], client_params)
         if inject is not None:
             handoff_all = jnp.concatenate([handoff, inject.x], axis=0)
@@ -292,8 +315,18 @@ def make_sample_engine(sched: DiffusionSchedule, apply_fn,
         out, _ = jax.lax.scan(
             client_step, x,
             (ct.T, ctp.T, ca.T, jnp.arange(ct.shape[1])))
+        return out
+
+    def engine(server_params, client_params, key, tables: PlanTables,
+               inject=None):
+        handoff = server_stage(server_params, key, tables)
+        out = client_stage(client_params, key, tables, handoff, inject)
         return out, handoff
 
+    if split:
+        if jit:
+            return jax.jit(server_stage), jax.jit(client_stage)
+        return server_stage, client_stage
     return jax.jit(engine) if jit else engine
 
 

@@ -31,8 +31,11 @@ first warm / steady), ASSERTING the
 serve subsystem's contract — ≥1 cache hit, bitwise warm-vs-cold equality
 against a cache-less run, steady-state recompile count per bucket of
 exactly 1 (via the runtime's jit trace-counter guard: zero engine
-re-traces in the steady pass), and ≥30% fewer physical server model
-calls than the fifo/no-cache baseline at equal (bitwise) output.
+re-traces in the steady pass), ≥30% fewer physical server model
+calls than the fifo/no-cache baseline at equal (bitwise) output, and a
+straggler-injected overlap pass: the pipelined loop under a per-wave
+host stall stays bitwise equal to the sequential barrier loop (outputs
+AND cache traffic) with zero steady-state re-traces in both modes.
 """
 from __future__ import annotations
 
@@ -93,14 +96,16 @@ def synth_queue(rng: np.random.Generator, *, clients: int, cuts: List[int],
 
 
 def make_runtime(args, sp, cp, apply_fn, sched, key, *, policy=None,
-                 cache=None) -> ServeRuntime:
+                 cache=None, pipeline=None, straggle_s=None) -> ServeRuntime:
     cfg = ServeConfig(
         T=args.T, image_shape=(args.image_size, args.image_size, 3),
         max_wave=args.max_wave,
         policy=args.policy if policy is None else policy,
         server_stride=args.stride,
         cache=(not args.no_cache) if cache is None else cache,
-        cache_max_bytes=args.cache_bytes)
+        cache_max_bytes=args.cache_bytes,
+        pipeline=(not args.sequential) if pipeline is None else pipeline,
+        straggle_s=args.straggle_s if straggle_s is None else straggle_s)
     return ServeRuntime(cfg, sp, cp, apply_fn, sched, key)
 
 
@@ -166,8 +171,38 @@ def smoke(args, queue, sp, cp, apply_fn, sched, key) -> dict:
     # the report carries both accounting views (logical vs physical)
     assert "padded_model_calls" in steady
     assert "server_calls_saved_by_dedup" in steady
+
+    # straggler-injected overlap pass (PR 6): pipelined vs sequential
+    # under a host-side stall per wave must be BITWISE equal — outputs
+    # and cache traffic — with no recompile-count regression (steady
+    # passes trace zero in both modes; pipelining splits the engine into
+    # two stages, so the compile guard covers both)
+    stall = 0.002
+    pipe = make_runtime(args, sp, cp, apply_fn, sched, key,
+                        policy="depth", cache=True, pipeline=True,
+                        straggle_s=stall)
+    seq = make_runtime(args, sp, cp, apply_fn, sched, key,
+                       policy="depth", cache=True, pipeline=False,
+                       straggle_s=stall)
+    pipe_outs, pipe_reps = run_passes(pipe, queue, n_passes)
+    seq_outs, seq_reps = run_passes(seq, queue, n_passes)
+    for p in range(n_passes):
+        for a, b in zip(pipe_outs[p], seq_outs[p]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for p in range(n_passes):
+        for k_ in ("cache_hits", "cache_misses", "requests_from_cache",
+                   "server_calls_physical", "client_calls_physical"):
+            assert pipe_reps[p][k_] == seq_reps[p][k_], (p, k_)
+    assert pipe_reps[-1]["engine_traces"] == 0, pipe_reps[-1]
+    assert seq_reps[-1]["engine_traces"] == 0, seq_reps[-1]
+    assert pipe_reps[-1]["max_signatures_per_bucket"] == 1
+    print(f"smoke/straggle: pipelined wall "
+          f"{sum(r['wall_s'] for r in pipe_reps):.3f}s vs sequential "
+          f"{sum(r['wall_s'] for r in seq_reps):.3f}s at "
+          f"{stall * 1e3:.0f}ms/wave stall (bitwise equal outputs)")
     print("smoke: OK (cache hits, bitwise warm==cold==fifo, 1 signature "
-          "per bucket in steady state, >=30% fewer physical server calls)")
+          "per bucket in steady state, >=30% fewer physical server calls, "
+          "pipelined==sequential bitwise under straggle)")
     return steady
 
 
@@ -205,6 +240,12 @@ def main(argv=None):
     ap.add_argument("--compare", action="store_true",
                     help="also run the PR-3-equivalent fifo/no-cache "
                          "runtime on the same traffic")
+    ap.add_argument("--sequential", action="store_true",
+                    help="disable wave pipelining (per-wave barrier — "
+                         "the pre-PR-6 baseline loop)")
+    ap.add_argument("--straggle-s", type=float, default=0.0,
+                    help="host-side stall in seconds before each wave "
+                         "(straggler injection; pipelining hides it)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="CI preset: assert the serve-subsystem contract "
@@ -221,6 +262,7 @@ def main(argv=None):
         args.requests, args.T, args.max_wave = 12, 20, 4
         args.clients, args.n_classes, args.zipf = 3, 2, 0.0
         args.unet, args.no_cache, args.stride = False, False, 1
+        args.sequential, args.straggle_s = False, 0.0
 
     if args.t_cuts:
         cuts = [int(c) for c in args.t_cuts.split(",")]

@@ -66,13 +66,16 @@ class _Entry:
 class PrefixCache:
     """LRU, size-bounded store of server handoffs.
 
-    ``max_bytes`` bounds the resident handoff bytes (eviction may empty
-    the cache entirely — an entry larger than the whole budget is
-    admitted and immediately evicted, keeping the invariant simple);
-    ``max_entries`` optionally bounds the count.  ``lookup`` counts a
-    hit/miss and refreshes recency; ``insert`` refuses zero-step prefixes
-    (an ICM "handoff" is pure noise the engine regenerates for free — a
-    stored copy would only burn budget)."""
+    ``max_bytes`` bounds the resident handoff bytes; ``max_entries``
+    optionally bounds the count.  ``lookup`` counts a hit/miss and
+    refreshes recency; ``insert`` refuses zero-step prefixes (an ICM
+    "handoff" is pure noise the engine regenerates for free — a stored
+    copy would only burn budget) and entries that can NEVER serve a hit
+    — larger than the whole byte budget, or any entry when
+    ``max_entries == 0``.  Both refusals count as ``rejected``, never
+    as insertions/evictions, and never touch ``peak_bytes`` (an entry
+    that was admitted only to be flushed on the same call used to
+    inflate all three AND evict innocent resident entries first)."""
 
     def __init__(self, max_bytes: int = 64 << 20,
                  max_entries: Optional[int] = None):
@@ -113,6 +116,12 @@ class PrefixCache:
             self.stats.rejected += 1
             return False
         nbytes = int(handoff.size * handoff.dtype.itemsize)
+        if nbytes > self.max_bytes or self.max_entries == 0:
+            # oversized / zero-capacity: could never serve a hit — reject
+            # upfront instead of admitting, flushing LRU neighbors, and
+            # polluting insertions/evictions/peak_bytes on the way out
+            self.stats.rejected += 1
+            return False
         old = self._entries.pop(key, None)
         if old is not None:
             self.stats.bytes_in_use -= old.nbytes

@@ -48,14 +48,37 @@ core/collab.py's vectorized-round notes):
   batch over "data"), and cached entries (handoff_spec: a single
   (B, ...) x̂_{t_ζ} with batch over "data") — exercised with the engine
   on the ("clients","data") mesh in tests/test_sharding.py.
+* **Pipelined waves (no wave barrier).**  The engine's two masked scans
+  are built as SEPARATELY jittable stages (make_sample_engine(split=
+  True)); each wave dispatches server stage then client stage and — in
+  ``pipeline=True`` mode — does NOT block: jax's async dispatch lets
+  wave i+1's host work (scheduling, planning, cache probes, the
+  ``straggle_s`` stall that models slow request arrival/IO) and wave
+  i+1's server scan proceed while wave i's client scan still runs on
+  the accelerator.  A double-buffered in-flight slot (at most TWO waves
+  outstanding) bounds device memory; the oldest wave retires (blocks,
+  records latency, scatters outputs) only when the slot is full or the
+  queue drains.  Cache fills store the handoff FUTURE at exactly the
+  same point in the wave sequence as the sequential loop, so probes,
+  hits, physical calls, and outputs are all bitwise identical between
+  ``pipeline=True`` and ``pipeline=False`` (differential-tested) —
+  pipelining, like batching and caching, is a pure performance knob.
 
-Remaining open (ROADMAP): overlapping server/client phases across
-buckets, a pmap/multi-host request axis, host-offloaded cache tiers.
+Reproducibility contract: the serve path is SYNCHRONOUS and bitwise —
+every mode of this runtime (pipelined or sequential, any scheduler
+policy, cache on or off) produces bitwise-identical samples for the
+same base key and arrival order; the async/staleness relaxation lives
+only in train/runtime.py's aggregation, never here.
+
+Remaining open (ROADMAP): a pmap/multi-host request axis,
+host-offloaded cache tiers, deeper in-flight windows than the
+double-buffered pair when device memory allows.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -93,6 +116,8 @@ class ServeConfig:
     cache_max_entries: Optional[int] = None
     use_pallas: Optional[bool] = None
     interpret: bool = False
+    pipeline: bool = True                 # False ⇒ per-wave barrier baseline
+    straggle_s: float = 0.0               # host-side stall before each wave
 
 
 class ServeRuntime:
@@ -119,19 +144,26 @@ class ServeRuntime:
         self._next_rid = 0
         self.traces = 0            # engine re-traces == XLA compiles
 
-        raw = make_sample_engine(
+        raw_server, raw_client = make_sample_engine(
             sched, apply_fn, config.image_shape,
             use_pallas=config.use_pallas, interpret=config.interpret,
-            jit=False, server_ddim=config.server_stride > 1)
+            jit=False, server_ddim=config.server_stride > 1, split=True)
 
-        def counted(sp, cp, k, tables, inject):
-            # body runs only when jit (re-)traces — a new table signature
-            # — making this Python counter the compile guard the smoke
-            # asserts on (cache hits on compiled signatures skip it)
+        # stage bodies run only when jit (re-)traces — a new table
+        # signature — making these Python counters the compile guard the
+        # smoke asserts on (cache hits on compiled signatures skip them).
+        # Cold traffic now traces TWO stages per signature; steady-state
+        # still traces zero.
+        def counted_server(sp, k, tables):
             self.traces += 1
-            return raw(sp, cp, k, tables, inject)
+            return raw_server(sp, k, tables)
 
-        self._engine = jax.jit(counted)
+        def counted_client(cp, k, tables, handoff, inject):
+            self.traces += 1
+            return raw_client(cp, k, tables, handoff, inject)
+
+        self._server_stage = jax.jit(counted_server)
+        self._client_stage = jax.jit(counted_client)
 
     # -- stable identities -------------------------------------------------
     # Server-noise seeds are sample_plan.stable_group_seed — a digest of
@@ -147,7 +179,15 @@ class ServeRuntime:
 
     def _empty_report(self) -> Dict:
         """Zeroed report with the FULL key set — idle ticks must not
-        change the report shape consumers sum over."""
+        change the report shape consumers sum over.
+
+        Cache field semantics (audited, PR 6): every ``cache_*`` field
+        except the last two is a DELTA for this ``process`` call —
+        hits/misses/hit_rate/insertions/evictions/rejected all reset to
+        zero per call, so summing reports across calls is meaningful.
+        ``cache_entries`` and ``cache_bytes`` are GAUGES — absolute
+        resident state at report time (an idle tick reports the current
+        occupancy, not zero); never sum them."""
         report = {
             "requests": 0, "waves": 0, "buckets": 0, "wall_s": 0.0,
             "req_per_s": 0.0, "samples_per_s": 0.0,
@@ -162,8 +202,12 @@ class ServeRuntime:
         }
         if self.cache is not None:
             report.update({
+                # deltas (per-call)
                 "cache_hits": 0, "cache_misses": 0, "cache_hit_rate": 0.0,
-                "cache_evictions": 0, "cache_entries": len(self.cache),
+                "cache_insertions": 0, "cache_evictions": 0,
+                "cache_rejected": 0,
+                # gauges (absolute resident state)
+                "cache_entries": len(self.cache),
                 "cache_bytes": self.cache.stats.bytes_in_use,
             })
         return report
@@ -174,7 +218,12 @@ class ServeRuntime:
         """Drain ``queue``; returns (outputs in arrival order — one
         (B, *image_shape) array per request — and the serve report for
         THIS call: latency/throughput, logical savings, physical padding
-        overhead, cache deltas, recompiles and signatures per bucket)."""
+        overhead, cache deltas, recompiles and signatures per bucket).
+
+        ``config.pipeline=True`` keeps up to two waves in flight
+        (dispatch wave i+1 while wave i still runs — see module notes);
+        ``False`` is the barrier-per-wave baseline.  Outputs and cache
+        behavior are bitwise identical either way."""
         if not queue:
             return [], self._empty_report()
         cfg = self.config
@@ -192,7 +241,26 @@ class ServeRuntime:
         sigs: Dict[str, set] = {}
         latencies: List[float] = []
         t_start = time.perf_counter()
+
+        # in-flight window: (out future, wave) pairs not yet retired.
+        # pipeline=True → double-buffered (≤ 2 outstanding);
+        # pipeline=False → retire immediately (the old per-wave barrier).
+        inflight: "deque[Tuple[jnp.ndarray, object]]" = deque()
+
+        def retire():
+            out, wave = inflight.popleft()
+            jax.block_until_ready(out)
+            done = time.perf_counter() - t_start
+            latencies.extend([done] * len(wave.requests))
+            for j, qi in enumerate(wave.queue_idx):
+                outputs[qi] = out[j]
+
         for wave in waves:
+            if cfg.straggle_s > 0.0:
+                # host-side stall (slow arrivals, planning, IO) — sleep
+                # releases the GIL, so in pipeline mode the accelerator
+                # keeps chewing the in-flight waves underneath it
+                time.sleep(cfg.straggle_s)
             use_cache = self.cache is not None
             plan = plan_requests(
                 list(wave.requests), cfg.T, adjusted=cfg.adjusted,
@@ -212,22 +280,24 @@ class ServeRuntime:
                 n_requests=self.scheduler.max_wave,
                 n_inject=self.scheduler.inject_tier(plan.n_hits)
                 if plan.inject is not None else None)
-            out, handoff = self._engine(
-                self.server_params, self.client_params, self._key,
-                padded.tables, padded.inject)
-            jax.block_until_ready(out)
-            done = time.perf_counter() - t_start
-            latencies.extend([done] * len(wave.requests))
-            for j, qi in enumerate(wave.queue_idx):
-                outputs[qi] = out[j]
+            handoff = self._server_stage(self.server_params, self._key,
+                                         padded.tables)
             if use_cache:
                 for g in range(plan.n_groups):
                     # zero-step (ICM) prefixes are uncacheable by design;
-                    # don't churn the rejected counter every wave
+                    # don't churn the rejected counter every wave.  The
+                    # inserted handoff row may still be an un-materialized
+                    # future — size/dtype come from the aval, and a later
+                    # wave's hit just chains on the device computation —
+                    # so this fill point matches the sequential loop's
+                    # exactly and cache behavior stays bitwise identical.
                     if plan.group_steps[g] > 0:
                         self.cache.insert(
                             self._cache_key(plan.group_keys[g]),
                             handoff[g], plan.group_steps[g])
+            out = self._client_stage(self.client_params, self._key,
+                                     padded.tables, handoff, padded.inject)
+            inflight.append((out, wave))
             for k_, v in call_accounting(padded).items():
                 acc[k_] += v
             dedup_saved += plan.server_steps_saved
@@ -236,6 +306,10 @@ class ServeRuntime:
             from_cache += int((rg >= plan.n_groups).sum())
             sigs.setdefault(wave.bucket.label(), set()).add(
                 plan_signature(padded))
+            while len(inflight) > (1 if cfg.pipeline else 0):
+                retire()
+        while inflight:
+            retire()
         wall = time.perf_counter() - t_start
         lat = np.asarray(latencies)
         n_samples = sum(int(r.y.shape[0]) for r in queue)
@@ -263,7 +337,9 @@ class ServeRuntime:
                 "cache_hits": d_hits, "cache_misses": d_miss,
                 "cache_hit_rate": d_hits / (d_hits + d_miss)
                 if d_hits + d_miss else 0.0,
+                "cache_insertions": s.insertions - c0.insertions,
                 "cache_evictions": s.evictions - c0.evictions,
+                "cache_rejected": s.rejected - c0.rejected,
                 "cache_entries": len(self.cache),
                 "cache_bytes": s.bytes_in_use,
             })

@@ -37,12 +37,21 @@ from repro.core.sample_plan import SampleRequest
 
 
 def tier(n: int, cap: int) -> int:
-    """Next power of two ≥ max(n, 1), capped at ``cap`` — the fixed shape
-    menu that keeps per-bucket signatures finite and convergent."""
+    """Next power of two ≥ max(n, 1), capped at the next power of two
+    ≥ ``cap`` — the fixed shape menu that keeps per-bucket signatures
+    finite and convergent.  The cap itself is ROUNDED UP to a power of
+    two rather than applied raw: a raw non-pow2 cap (e.g. max_wave=6 →
+    min(8, 6) = 6) would leak a non-pow2 tier into the menu, breaking
+    the docstring's own guarantee AND pad_plan's target-≥-plan
+    contract, since a plan with n groups > cap still needs a tier that
+    can hold all n rows."""
     t = 1
     while t < n:
         t *= 2
-    return min(t, max(cap, 1))
+    c = 1
+    while c < max(cap, 1):
+        c *= 2
+    return min(t, c)
 
 
 @dataclasses.dataclass(frozen=True)

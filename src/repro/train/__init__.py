@@ -3,7 +3,8 @@ with shape-stable cohort tiers and bitwise mid-run resume) layered on the
 PR-1/2 masked vectorized engine.  See train/runtime.py for the
 architecture notes."""
 from repro.train.participation import (ParticipationConfig, sample_cohort,
-                                       sample_drops, uid_scores)
+                                       sample_drops, sample_lags,
+                                       uid_scores)
 from repro.train.registry import ClientRecord, ClientRegistry
 from repro.train.rounds import RoundPlan, participation_tier, plan_round
 from repro.train.runtime import TrainConfig, TrainRuntime
@@ -11,4 +12,4 @@ from repro.train.runtime import TrainConfig, TrainRuntime
 __all__ = ["ClientRecord", "ClientRegistry", "ParticipationConfig",
            "RoundPlan", "TrainConfig", "TrainRuntime",
            "participation_tier", "plan_round", "sample_cohort",
-           "sample_drops", "uid_scores"]
+           "sample_drops", "sample_lags", "uid_scores"]

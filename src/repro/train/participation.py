@@ -28,6 +28,16 @@ remaining AdamW updates are where-skipped by the masked engine.  The
 batch slot is ``floor(score / drop_p * n_batches)``: conditioned on
 dropping, the score is uniform on [0, drop_p), so the slot is uniform
 over the round — one addressed draw covers both decisions.
+
+STRAGGLER LAG (``lag_p``/``lag_max``, the ``TAG_LAG`` stream): a cohort
+member straggles with prob ``lag_p``; its finished payload then arrives
+``lag`` rounds late, with ``lag`` uniform on {1, .., lag_max} via the
+same conditioned-score trick as dropout (score uniform on [0, lag_p)
+given straggling → ``1 + floor(score / lag_p * lag_max)`` uniform over
+the lag range).  The sync runtime turns max-lag into a round-barrier
+stall; the async runtime folds the late payload in with a
+staleness-decayed weight (fedavg.average_stale) instead of waiting —
+see train/runtime.py.
 """
 from __future__ import annotations
 
@@ -45,6 +55,7 @@ TAG_ROUND = 0x20D5         # per-round training key (batch/client/row keys)
 TAG_PART = 0x9A27          # participation scores
 TAG_DROP = 0xD209          # mid-round dropout scores
 TAG_DATA = 0xDA7A          # per-(round, uid) data shuffling
+TAG_LAG = 0x1A66           # straggler upload-lag draws
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,13 +65,25 @@ class ParticipationConfig:
     cohort_k: int = 0            # cohort size for "fixed"
     drop_p: float = 0.0          # mid-round dropout probability per member
     min_cohort: int = 1          # floor (lowest-score fill-in)
+    lag_p: float = 0.0           # straggler probability per member
+    lag_max: int = 1             # max upload lag in rounds (>= 1)
 
     def __post_init__(self):
         if self.policy not in ("full", "bernoulli", "fixed"):
             raise ValueError(f"unknown participation policy {self.policy!r}")
-        if not 0.0 <= self.p <= 1.0 or not 0.0 <= self.drop_p <= 1.0:
+        if self.policy == "fixed" and self.cohort_k < 1:
+            # cohort_k=0 used to fall through to a silent min_cohort fill
+            # of 1 — an unconfigured cohort size is a bug, not a policy.
+            raise ValueError(
+                f"policy='fixed' requires cohort_k >= 1, got "
+                f"{self.cohort_k}")
+        if not 0.0 <= self.p <= 1.0 or not 0.0 <= self.drop_p <= 1.0 \
+                or not 0.0 <= self.lag_p <= 1.0:
             raise ValueError(f"probabilities must be in [0, 1]: "
-                             f"p={self.p} drop_p={self.drop_p}")
+                             f"p={self.p} drop_p={self.drop_p} "
+                             f"lag_p={self.lag_p}")
+        if self.lag_max < 1:
+            raise ValueError(f"lag_max must be >= 1, got {self.lag_max}")
 
 
 def uid_scores(base_key, tag: int, round_idx: int,
@@ -111,3 +134,23 @@ def sample_drops(cfg: ParticipationConfig, base_key, round_idx: int,
             drops[int(u)] = min(int(s / cfg.drop_p * n_batches),
                                 n_batches - 1)
     return drops
+
+
+def sample_lags(cfg: ParticipationConfig, base_key, round_idx: int,
+                cohort: Sequence[int]) -> Dict[int, int]:
+    """Straggler upload lags: ``{uid: rounds late}`` for the members
+    whose TAG_LAG score lands under ``lag_p``.  A lagging member still
+    COMPUTES its round (CollaFuse's client work is unchanged); only its
+    upload arrives ``lag`` rounds later, uniform on {1, .., lag_max} by
+    the conditioned-score trick ``sample_drops`` uses for slots.
+    Addressed per (base_key, round, uid) — adding or removing a client
+    never perturbs another's lag draw."""
+    if cfg.lag_p <= 0.0 or not cohort:
+        return {}
+    scores = uid_scores(base_key, TAG_LAG, round_idx, cohort)
+    lags = {}
+    for u, s in zip(cohort, scores):
+        if s < cfg.lag_p:
+            lags[int(u)] = 1 + min(int(s / cfg.lag_p * cfg.lag_max),
+                                   cfg.lag_max - 1)
+    return lags

@@ -35,11 +35,19 @@ from repro.train.registry import ClientRegistry
 def participation_tier(n: int, cap: Optional[int] = None) -> int:
     """Next power of two >= max(n, 1), optionally capped — the cohort
     axis's fixed shape menu (the client-axis sibling of
-    serve/scheduler.tier)."""
+    serve/scheduler.tier).  Like its sibling, the cap is rounded UP to
+    a power of two before applying: a raw non-pow2 cap would leak a
+    non-pow2 tier into the menu and defeat the finite-signature
+    guarantee the runtime's trace-counter guard asserts."""
     t = 1
     while t < n:
         t *= 2
-    return t if cap is None else min(t, max(cap, 1))
+    if cap is None:
+        return t
+    c = 1
+    while c < max(cap, 1):
+        c *= 2
+    return min(t, c)
 
 
 @dataclasses.dataclass

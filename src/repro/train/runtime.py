@@ -59,9 +59,41 @@ serve/runtime.py's, and the mirror image of its queue→engine loop):
   the stacked training state).  launch/collab_dryrun.py's
   ``train_runtime`` entry compiles the identity-keyed cohort round on
   the ("clients", "data") mesh.
+* **Async (staleness-tolerant) aggregation — the round barrier falls.**
+  Stragglers are injected via the addressed ``TAG_LAG`` stream
+  (participation.sample_lags: member straggles with prob ``lag_p``, its
+  upload arrives 1..``lag_max`` rounds late).  A straggler still
+  COMPUTES its round (the split protocol's server phase holds the
+  activations in-round, so the server net always updates on time); only
+  the CLIENT-NET upload is late.  ``async_mode=False`` (sync, the
+  barrier): the round blocks ``lag_s``·max-lag wall seconds waiting for
+  the slowest upload, then applies every payload — semantics identical
+  to a lag-free run, just slower.  ``async_mode=True``: late payloads
+  are queued and folded in at their arrival round with the
+  staleness-decayed weight of core/fedavg.average_stale
+  (w = stale_alpha·(1+s)^−stale_decay, FedAsync-style); a busy client
+  (upload outstanding) sits out cohort sampling until it lands, and
+  ``drain()`` flushes the queue at run end.  Delivery order is
+  deterministic (due round, compute round, uid) and the queue
+  checkpoints/restores bitwise (state_dict v2).
 
-Remaining open (ROADMAP): overlap of client/server phases, multi-host
-cohorts, asynchronous (stale-cohort) aggregation.
+Reproducibility contract (sync vs async): SYNC mode is bitwise — for a
+given base key and registry history every quantity (params, opt,
+cohorts, losses) is reproducible to the bit, straggler injection or
+not, and equals the lag-free run's exactly; pinned by
+tests/test_train_runtime.py's differential tests.  ASYNC mode is
+bitwise-deterministic (same config ⇒ same bits, including resume) but
+deviates from the sync trajectory once a payload lands late; the
+deviation is bounded on the smoke workload — final client/server
+params within atol 5e-2 of the sync run (pinned by
+``test_async_tolerance_vs_sync``), and collapses back to bitwise
+equality when no payload is ever late (lag_p=0) or when every payload
+lands one round late at full weight (lag_max=1, stale_alpha=1,
+fedavg off, after ``drain()``) — the bitwise ladder the tests walk.
+
+Remaining open (ROADMAP): multi-host cohorts, server-side momentum on
+stale merges, adaptive staleness weights from observed lag
+distributions.
 """
 from __future__ import annotations
 
@@ -76,13 +108,14 @@ import numpy as np
 from repro.checkpointing import checkpoint as ckpt
 from repro.core.collab import make_vectorized_round, stack_clients, \
     unstack_clients
-from repro.core.fedavg import average_cohort
+from repro.core.fedavg import average_cohort, average_stale
 from repro.core.schedules import DiffusionSchedule
 from repro.core.splitting import CutPoint
 from repro.optim.adamw import AdamWConfig, init_opt_state
 from repro.train.participation import (TAG_INIT, TAG_PART, TAG_ROUND,
                                        ParticipationConfig, sample_cohort,
-                                       sample_drops, uid_scores)
+                                       sample_drops, sample_lags,
+                                       uid_scores)
 from repro.train.registry import ClientRegistry
 from repro.train.rounds import plan_round
 
@@ -116,6 +149,11 @@ class TrainConfig:
     fedavg_every: int = 0                   # 0 = off
     ema_decay: float = 0.0                  # 0 = off
     tier_cap: Optional[int] = None          # cap on the pow2 cohort tier
+    async_mode: bool = False                # True ⇒ staleness-tolerant agg
+    stale_alpha: float = 0.6                # async merge weight at s=0
+    stale_decay: float = 0.5                # polynomial staleness decay
+    lag_s: float = 0.0                      # wall seconds per lag round
+                                            # (the sync barrier's stall)
 
     def cut(self) -> CutPoint:
         return CutPoint(self.T, self.t_cut)
@@ -146,6 +184,10 @@ class TrainRuntime:
         self.total_steps = 0                 # real (client, batch) cells
         self.traces = 0                      # engine re-traces == compiles
         self._sigs: Dict[int, set] = {}      # tier -> signatures seen
+        # outstanding straggler uploads (async mode): each entry is
+        # {uid, params, opt, compute_round, due_round, n_real} — ordered
+        # deterministically at delivery, checkpointed in state_dict v2
+        self._pending: List[Dict] = []
         self.server_params = init_one(
             jax.random.fold_in(jax.random.fold_in(key, TAG_INIT), 0))
         self.server_opt = init_opt_state(self.server_params)
@@ -207,17 +249,77 @@ class TrainRuntime:
                 (len(s) for s in self._sigs.values()), default=0),
             "client_loss": 0.0, "server_loss": 0.0,
             "fedavg_applied": False, "seen_total": 0, "wall_s": 0.0,
+            "stragglers": 0, "stale_merges": 0, "barrier_stall_s": 0.0,
+            "pending_payloads": len(self._pending),   # gauge, not delta
         }
+
+    # -- async delivery ----------------------------------------------------
+    def _deliver(self, payload: Dict, delivery_round: int) -> bool:
+        """Fold one late upload into its client's record at the
+        staleness-decayed weight.  The client's OPT state is replaced
+        wholesale (it is client-owned and travels with the upload); only
+        params are mixed.  Returns False when the client left while its
+        upload was in flight — departure freezes the record (registry
+        contract), so the payload is discarded."""
+        rec = self.registry.get(int(payload["uid"]))
+        if not rec.active:
+            return False
+        s = max(int(delivery_round) - int(payload["compute_round"]) - 1, 0)
+        rec.params = average_stale(rec.params, payload["params"], s,
+                                   self.config.stale_alpha,
+                                   self.config.stale_decay)
+        rec.opt = payload["opt"]
+        n_real = int(payload["n_real"])
+        rec.seen += n_real
+        rec.window_seen += n_real
+        rec.window_member = True
+        return True
+
+    @staticmethod
+    def _delivery_order(p: Dict) -> tuple:
+        return (int(p["due_round"]), int(p["compute_round"]),
+                int(p["uid"]))
+
+    def _deliver_due(self) -> int:
+        """Merge every pending payload whose due round has arrived, in
+        deterministic (due round, compute round, uid) order."""
+        due = [p for p in self._pending
+               if int(p["due_round"]) <= self.round]
+        if not due:
+            return 0
+        self._pending = [p for p in self._pending
+                         if int(p["due_round"]) > self.round]
+        return sum(int(self._deliver(p, self.round))
+                   for p in sorted(due, key=self._delivery_order))
+
+    def drain(self) -> int:
+        """Flush every outstanding straggler payload NOW — the end-of-run
+        step that makes an async run's final registry state include all
+        computed work.  Payloads not yet due merge at the staleness their
+        due round implies (as if they had arrived on time); returns the
+        number merged."""
+        pending, self._pending = self._pending, []
+        return sum(
+            int(self._deliver(p, max(self.round, int(p["due_round"]))))
+            for p in sorted(pending, key=self._delivery_order))
 
     # -- the loop ----------------------------------------------------------
     def run_round(self) -> Dict:
-        """One federated round: sample cohort → plan → one engine call →
-        scatter-back → aggregate → report.  Advances the cohort cursor
-        even when the round is empty (no active client, no data), so the
-        round→randomness mapping never depends on data availability."""
+        """One federated round: deliver due async payloads → sample
+        cohort → plan → one engine call → scatter-back (stragglers
+        enqueue instead, async mode) → aggregate → report.  Advances the
+        cohort cursor even when the round is empty (no active client, no
+        data), so the round→randomness mapping never depends on data
+        availability."""
         t0 = time.perf_counter()
         cfg = self.config
+        stale_merges = self._deliver_due() if self._pending else 0
         active = self.registry.active_uids()
+        busy = {int(p["uid"]) for p in self._pending}
+        if busy:
+            # a client whose upload is still in flight sits the round out
+            # — it can't also train (its net is wherever its upload is)
+            active = [u for u in active if u not in busy]
         cohort = sample_cohort(cfg.participation, self._key, self.round,
                                active)
         if cfg.tier_cap is not None and len(cohort) > cfg.tier_cap:
@@ -231,19 +333,24 @@ class TrainRuntime:
             cohort = sorted(int(cohort[i]) for i in order[:cfg.tier_cap])
         drops = sample_drops(cfg.participation, self._key, self.round,
                              cohort, cfg.batches_per_round)
+        lags = sample_lags(cfg.participation, self._key, self.round,
+                           cohort)
+        report = self._empty_report()
         plan = plan_round(
             self.registry, cohort, self.round, self._key,
             n_batches=cfg.batches_per_round, batch_size=cfg.batch_size,
             image_shape=cfg.image_shape, n_classes=cfg.n_classes,
             tier_cap=cfg.tier_cap, drops=drops)
-        report = self._empty_report()
         report.update({"cohort": list(cohort), "cohort_size": len(cohort),
                        "strict_subset": len(cohort) < len(active),
-                       "mid_round_drops": len(drops)})
+                       "mid_round_drops": len(drops),
+                       "stragglers": len(lags),
+                       "stale_merges": stale_merges})
         if plan is None:
             report["fedavg_applied"] = self._maybe_fedavg()
             self._update_ema()
             self.round += 1
+            report["pending_payloads"] = len(self._pending)
             report["wall_s"] = time.perf_counter() - t0
             return report
 
@@ -267,14 +374,35 @@ class TrainRuntime:
         jax.block_until_ready(self.server_params)
         self._sigs.setdefault(plan.tier, set()).add(plan.signature())
 
+        stall = 0.0
+        if lags and not cfg.async_mode:
+            # THE BARRIER: sync aggregation waits for the slowest upload
+            # before the round can close (lag_s wall seconds per lag
+            # round) — then applies every payload as if nobody lagged
+            stall = cfg.lag_s * max(lags.values())
+            if stall > 0.0:
+                time.sleep(stall)
+
         # scatter ONLY the real cohort slots back; pad slots are discarded
-        # (the engine left them bitwise-untouched anyway)
+        # (the engine left them bitwise-untouched anyway).  In async mode
+        # a straggler's payload is ENQUEUED for its due round instead of
+        # applied — its record (params, opt, counters, window flags)
+        # stays untouched until the upload lands.
         new_p = unstack_clients(cp, plan.tier)
         new_o = unstack_clients(co, plan.tier)
         mask_np = np.asarray(plan.mask)
         for m, rec in enumerate(members):
-            rec.params, rec.opt = new_p[m], new_o[m]
             n_real = int(mask_np[:, m, :].sum())
+            uid = int(plan.cohort[m])
+            if cfg.async_mode and uid in lags and n_real > 0:
+                self._pending.append({
+                    "uid": uid, "params": new_p[m], "opt": new_o[m],
+                    "compute_round": int(self.round),
+                    "due_round": int(self.round + lags[uid]),
+                    "n_real": n_real,
+                })
+                continue
+            rec.params, rec.opt = new_p[m], new_o[m]
             rec.seen += n_real
             rec.window_seen += n_real
             rec.window_member = True
@@ -296,6 +424,8 @@ class TrainRuntime:
             "max_signatures_per_tier": max(len(s)
                                            for s in self._sigs.values()),
             "seen_total": sum(r.seen for r in self.registry.records()),
+            "barrier_stall_s": stall,
+            "pending_payloads": len(self._pending),
             "wall_s": time.perf_counter() - t0,
         })
         return report
@@ -382,7 +512,9 @@ class TrainRuntime:
                 "active": bool(rec.active),
             }
         return {
-            "version": 1,
+            # v2 adds the async pending-payload queue; v1 checkpoints
+            # (no queue) still restore — see ``restore``
+            "version": 2,
             "round": int(self.round),
             "total_steps": int(self.total_steps),
             "base_key": _key_pack(self._key),
@@ -390,6 +522,13 @@ class TrainRuntime:
             "server_opt": self.server_opt,
             "ema_server": self.ema_server,
             "clients": clients,
+            "pending": [
+                {"uid": int(p["uid"]), "params": p["params"],
+                 "opt": p["opt"],
+                 "compute_round": int(p["compute_round"]),
+                 "due_round": int(p["due_round"]),
+                 "n_real": int(p["n_real"])}
+                for p in self._pending],
         }
 
     def save(self, path: str) -> None:
@@ -404,7 +543,7 @@ class TrainRuntime:
         Data is not in the checkpoint: call ``attach_data(uid, x, y)``
         for every client that should keep training."""
         state = ckpt.load(path)
-        if state.get("version") != 1:
+        if state.get("version") not in (1, 2):
             raise ValueError(f"unknown checkpoint version "
                              f"{state.get('version')!r}")
         rt = cls(config, init_one, apply_fn, _key_unpack(state["base_key"]),
@@ -414,6 +553,7 @@ class TrainRuntime:
         rt.server_params = state["server_params"]
         rt.server_opt = state["server_opt"]
         rt.ema_server = state["ema_server"]
+        rt._pending = [dict(p) for p in state.get("pending", [])]
         for uid_s in sorted(state["clients"], key=int):
             d = state["clients"][uid_s]
             uid = int(uid_s)

@@ -4,8 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.fedavg import (average_cohort, average_weights,
-                               fedavg_round, fedavg_sample, fedavg_setup,
+from repro.core.fedavg import (average_cohort, average_stale,
+                               average_weights, fedavg_round,
+                               fedavg_sample, fedavg_setup,
                                make_local_step, params_nbytes)
 from repro.core.schedules import DiffusionSchedule
 from repro.optim.adamw import AdamWConfig
@@ -89,6 +90,40 @@ def test_average_cohort_zero_seen_guard():
         average_cohort(params, seen=[1], members=[True, True])
     with pytest.raises(ValueError, match="negative"):
         average_cohort(params, seen=[-1, 2], members=[True, True])
+
+
+def test_average_stale_weights_and_dtype():
+    """w = alpha (1+s)^-decay, fp32 accumulate, leaf dtype restored."""
+    c = {"w": jnp.array([1.0, 1.0]), "h": jnp.array([1, 1], jnp.bfloat16)}
+    p = {"w": jnp.array([3.0, 3.0]), "h": jnp.array([3, 3], jnp.bfloat16)}
+    out = average_stale(c, p, staleness=0, alpha=0.5, decay=0.5)
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0, 2.0], atol=1e-6)
+    assert out["h"].dtype == jnp.bfloat16
+    # staleness decays the payload's pull: s=3, decay=0.5 -> w = 0.25
+    out3 = average_stale(c, p, staleness=3, alpha=0.5, decay=0.5)
+    np.testing.assert_allclose(np.asarray(out3["w"]), [1.5, 1.5], atol=1e-6)
+    # decay=0 ignores staleness entirely
+    outd0 = average_stale(c, p, staleness=7, alpha=0.5, decay=0.0)
+    np.testing.assert_allclose(np.asarray(outd0["w"]), [2.0, 2.0],
+                               atol=1e-6)
+
+
+def test_average_stale_exactness_guards():
+    """w >= 1 returns the payload AS-IS and w <= 0 the current state —
+    identities, not float arithmetic (the async runtime's bitwise-ladder
+    pin depends on the w=1 case being exact)."""
+    c = {"w": jnp.array([0.1, 0.2])}
+    p = {"w": jnp.array([0.30000001, 0.7])}
+    out = average_stale(c, p, staleness=0, alpha=1.0, decay=0.5)
+    assert out["w"] is p["w"]                      # identity, not ≈
+    out0 = average_stale(c, p, staleness=5, alpha=0.0, decay=0.5)
+    assert out0["w"] is c["w"]
+    with pytest.raises(ValueError):
+        average_stale(c, p, staleness=-1)
+    with pytest.raises(ValueError):
+        average_stale(c, p, staleness=0, alpha=1.5)
+    with pytest.raises(ValueError):
+        average_stale(c, p, staleness=0, decay=-0.1)
 
 
 def test_fedavg_round_weights_by_samples(key):

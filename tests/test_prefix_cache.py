@@ -59,11 +59,30 @@ def test_eviction_by_bytes():
     assert c.stats.peak_bytes == 3 * entry
 
 
-def test_oversized_entry_admitted_then_evicted():
-    c = PrefixCache(max_bytes=4)     # smaller than any entry
-    assert not c.insert("big", _h(1.0), 1)
-    assert len(c) == 0 and c.stats.bytes_in_use == 0
-    assert c.stats.evictions == 1
+def test_oversized_entry_rejected_upfront():
+    """An entry larger than the whole byte budget can never serve a hit:
+    it must count as ``rejected`` — never as an insertion or eviction,
+    never into peak_bytes, and never evicting innocent residents (the
+    pre-PR-6 behavior admitted it, flushed the LRU neighbors first, and
+    inflated all three counters on the way out)."""
+    entry = _h(0.0).nbytes
+    c = PrefixCache(max_bytes=2 * entry)
+    c.insert("a", _h(1.0), 1)
+    c.insert("b", _h(2.0), 1)
+    assert not c.insert("big", _h(3.0, n=32), 1)   # 4× the budget
+    assert c.stats.rejected == 1
+    assert c.stats.insertions == 2 and c.stats.evictions == 0
+    assert c.stats.peak_bytes == 2 * entry         # honest: never held big
+    assert c.keys() == ("a", "b")                  # residents untouched
+    assert c.stats.bytes_in_use == 2 * entry
+
+
+def test_zero_capacity_cache_rejects_everything():
+    c = PrefixCache(max_bytes=1 << 20, max_entries=0)
+    assert not c.insert("a", _h(1.0), 1)
+    assert len(c) == 0 and c.stats.rejected == 1
+    assert c.stats.insertions == 0 and c.stats.evictions == 0
+    assert c.stats.peak_bytes == 0
 
 
 def test_reinsert_refreshes_value_and_bytes():

@@ -46,7 +46,8 @@ def _queue():
 
 
 def _rt(seed: int = 0, **over) -> ServeRuntime:
-    cfg = ServeConfig(T=T, image_shape=IMG, max_wave=4, **over)
+    over.setdefault("max_wave", 4)
+    cfg = ServeConfig(T=T, image_shape=IMG, **over)
     return ServeRuntime(cfg, SP, CP, apply_fn, SCHED,
                         jax.random.PRNGKey(seed))
 
@@ -181,6 +182,100 @@ def test_strided_runtime_warm_vs_cold():
     assert rep["cache_hits"] >= 1
     # groups (4,y0) and (8,y1): ceil(12/3) + ceil(8/3) = 4 + 3
     assert crep["server_calls_logical"] == 7
+
+
+# ---------------------------------------------------------------------------
+# Pipelined waves (PR 6): overlap is a pure performance knob
+# ---------------------------------------------------------------------------
+
+
+def test_pipelined_bitwise_equals_sequential():
+    """The double-buffered pipelined loop must be bitwise-identical to
+    the per-wave-barrier loop — outputs, cache traffic, and physical
+    call counts — across cold, warm, and straggler-stalled passes."""
+    pipe = _rt(pipeline=True)
+    barrier = _rt(pipeline=False)
+    stalled = _rt(pipeline=True, straggle_s=0.001)
+    q = _queue()
+    for p in range(3):
+        outs_p, rep_p = pipe.process(q)
+        outs_b, rep_b = barrier.process(q)
+        outs_s, _ = stalled.process(q)
+        _assert_same(outs_p, outs_b)
+        _assert_same(outs_p, outs_s)
+        for k in ("cache_hits", "cache_misses", "cache_insertions",
+                  "requests_from_cache", "server_calls_physical",
+                  "client_calls_physical", "max_signatures_per_bucket"):
+            assert rep_p[k] == rep_b[k], k
+    assert pipe.cache.keys() == barrier.cache.keys()
+
+
+def test_split_stages_compose_to_fused_engine():
+    """make_sample_engine(split=True)'s stage composition is bitwise the
+    fused engine — the single-source-of-truth contract the pipelined
+    runtime rests on (both derive their phase key from the same
+    jax.random.split)."""
+    key = jax.random.PRNGKey(3)
+    hit_key = group_key(4, _req(0, 4, 0).y)
+    stored = jnp.arange(np.prod((B,) + IMG), dtype=jnp.float32
+                        ).reshape((B,) + IMG) * 0.01
+    lookup = lambda gk: stored if gk == hit_key else None
+    reqs = [_req(0, 4, 0), _req(1, 8, 0), _req(2, 4, 1)]
+    plan = plan_requests(reqs, T, group_seed_fn=stable_group_seed,
+                         lookup_fn=lookup, image_shape=IMG)
+    fused = make_sample_engine(SCHED, apply_fn, IMG)
+    server, client = make_sample_engine(SCHED, apply_fn, IMG, split=True)
+    out_f, hand_f = fused(SP, CP, key, plan.tables, plan.inject)
+    hand_s = server(SP, key, plan.tables)
+    out_s = client(CP, key, plan.tables, hand_s, plan.inject)
+    np.testing.assert_array_equal(np.asarray(hand_s), np.asarray(hand_f))
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_f))
+
+
+def test_non_pow2_max_wave_keeps_pow2_tiers():
+    """Regression (PR 6): scheduler.tier with a non-pow2 cap used to
+    return the raw cap (min(8, 6) = 6), leaking a non-pow2 tier into the
+    signature menu.  The cap now rounds UP, and a max_wave=6 runtime
+    serves correctly with pow2 group tiers."""
+    from repro.serve.scheduler import WaveScheduler, tier
+
+    def pow2ceil(n):
+        t = 1
+        while t < n:
+            t *= 2
+        return t
+
+    for cap in (3, 5, 6, 7):
+        for n in range(1, 10):
+            t = tier(n, cap)
+            assert t & (t - 1) == 0, (n, cap, t)       # power of two
+            assert t == min(pow2ceil(n), pow2ceil(cap))
+    assert tier(5, 6) == 8 and tier(3, 6) == 4 and tier(7, 4) == 4
+    sch = WaveScheduler(max_wave=6)
+    assert sch.group_tier(5) == 8                      # was 6 pre-fix
+    rt, cold = _rt(max_wave=6), _rt(max_wave=6, cache=False)
+    q = _queue()
+    for _ in range(2):
+        outs, rep = rt.process(q)
+        couts, _ = cold.process(q)
+        _assert_same(outs, couts)
+    assert rep["max_signatures_per_bucket"] == 1
+
+
+def test_report_gauge_vs_delta_cache_fields():
+    """cache_entries/cache_bytes are gauges (absolute occupancy, idle
+    ticks included); every other cache field is a per-call delta."""
+    rt = _rt(cache=True)
+    rt.process(_queue())
+    idle = rt.process([])[1]
+    assert idle["cache_entries"] == len(rt.cache) > 0
+    assert idle["cache_bytes"] == rt.cache.stats.bytes_in_use > 0
+    for k in ("cache_hits", "cache_misses", "cache_insertions",
+              "cache_evictions", "cache_rejected"):
+        assert idle[k] == 0, k
+    warm = rt.process(_queue())[1]
+    assert warm["cache_insertions"] == 0       # all prefixes already held
+    assert warm["cache_hits"] > 0
 
 
 # ---------------------------------------------------------------------------

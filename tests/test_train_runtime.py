@@ -29,7 +29,9 @@ from repro.core.schedules import DiffusionSchedule
 from repro.core.splitting import CutPoint
 from repro.optim.adamw import AdamWConfig, init_opt_state
 from repro.train import (ParticipationConfig, TrainConfig, TrainRuntime,
-                         participation_tier, sample_cohort, sample_drops)
+                         participation_tier, sample_cohort, sample_drops,
+                         sample_lags)
+from repro.train.participation import TAG_DROP, uid_scores
 from repro.train.registry import ClientRegistry
 
 SCHED = DiffusionSchedule.linear(60)
@@ -105,6 +107,27 @@ def test_participation_tier():
     assert [participation_tier(n) for n in (0, 1, 2, 3, 4, 5, 8, 9)] == \
         [1, 1, 2, 4, 4, 8, 8, 16]
     assert participation_tier(9, cap=8) == 8
+    # regression (PR 6): non-pow2 caps round UP instead of leaking a
+    # non-pow2 tier into the signature menu
+    assert participation_tier(5, cap=6) == 8
+    assert participation_tier(3, cap=6) == 4
+    assert participation_tier(9, cap=7) == 8
+
+
+def test_fixed_policy_requires_cohort_k():
+    """Regression (PR 6): policy='fixed' with the default cohort_k=0
+    used to silently fall through to a min_cohort fill of 1."""
+    with pytest.raises(ValueError, match="cohort_k"):
+        ParticipationConfig(policy="fixed")
+    with pytest.raises(ValueError, match="cohort_k"):
+        ParticipationConfig(policy="fixed", cohort_k=0)
+    assert ParticipationConfig(policy="fixed", cohort_k=1).cohort_k == 1
+    # other policies keep the 0 default without complaint
+    assert ParticipationConfig(policy="bernoulli").cohort_k == 0
+    with pytest.raises(ValueError):
+        ParticipationConfig(lag_p=1.5)
+    with pytest.raises(ValueError):
+        ParticipationConfig(lag_max=0)
 
 
 def test_cohort_draws_are_identity_keyed(key):
@@ -138,6 +161,49 @@ def test_sample_drops_bounds(key):
     assert all(0 <= d < 3 for d in drops.values())
     assert sample_drops(ParticipationConfig(drop_p=0.0), key, 0, [0],
                         3) == {}
+
+
+def test_sample_drops_slot0_semantics(key):
+    """Slot 0 means 'connected, then immediately gone': the member never
+    trains a single batch.  The slot is the conditioned score mapped
+    over the round — score s < drop_p/n_batches ⇒ slot 0 — and a slot-0
+    drop in plan_round leaves the member's mask all-zero."""
+    cohort, nb = [0, 1, 2, 3, 4, 5, 6, 7], 3
+    cfg = ParticipationConfig(drop_p=1.0)
+    scores = uid_scores(key, TAG_DROP, 0, cohort)
+    drops = sample_drops(cfg, key, 0, cohort, n_batches=nb)
+    for u, s in zip(cohort, scores):
+        assert drops[u] == min(int(s * nb), nb - 1)
+        assert (drops[u] == 0) == (s < 1.0 / nb)
+    # plan-level semantics: a forced slot-0 drop masks the whole member
+    reg = ClientRegistry()
+    for i in range(2):
+        reg.register(*tiny_data(i, 8))
+    from repro.train import plan_round
+    plan = plan_round(reg, [0, 1], 0, key, n_batches=nb, batch_size=4,
+                      image_shape=(6, 6, 3), n_classes=4, drops={0: 0})
+    m = np.asarray(plan.mask)
+    assert m[:, 0, :].sum() == 0          # slot-0 member: zero cells
+    assert m[:, 1, :].sum() > 0           # the other member trains
+
+
+def test_sample_lags_bounds_and_addressing(key):
+    """Lags land in {1..lag_max}, only for members whose TAG_LAG score
+    clears lag_p, and one member's draw never depends on the roster."""
+    cfg = ParticipationConfig(lag_p=1.0, lag_max=3)
+    lags = sample_lags(cfg, key, 0, [0, 1, 2, 3, 4, 5, 6, 7])
+    assert set(lags) == {0, 1, 2, 3, 4, 5, 6, 7}
+    assert all(1 <= v <= 3 for v in lags.values())
+    assert len(set(lags.values())) > 1          # spread across the range
+    assert sample_lags(ParticipationConfig(lag_p=0.0), key, 0, [0]) == {}
+    half = ParticipationConfig(lag_p=0.5, lag_max=2)
+    small = sample_lags(half, key, 3, [0, 1, 2])
+    big = sample_lags(half, key, 3, [0, 1, 2, 9])
+    assert {u: v for u, v in big.items() if u != 9} == small
+    # lag_max=1 forces every straggler exactly one round late
+    one = sample_lags(ParticipationConfig(lag_p=1.0, lag_max=1), key, 0,
+                      [0, 1, 2])
+    assert set(one.values()) == {1}
 
 
 # ---------------------------------------------------------------------------
@@ -397,3 +463,205 @@ def test_runtime_ema_track(key):
                         rt.server_params)
     assert_trees_close(rt.ema_server, want, atol=0, rtol=0)
     assert rt.sampling_server_params() is rt.ema_server
+
+
+def test_whole_cohort_dropout_round(key, monkeypatch):
+    """The degenerate round async mode hits constantly: EVERY member
+    drops at slot 0 (connected, instantly gone).  plan_round must bail
+    to an empty round — finite losses, registry bitwise-untouched, and
+    a clean pass through fedavg.average_cohort's zero-seen guard."""
+    import repro.train.runtime as rt_mod
+    rt = make_runtime(key, sizes=[10, 8, 12],
+                      participation=ParticipationConfig(policy="full",
+                                                        drop_p=1.0),
+                      fedavg_every=1)
+    before = {u: (jax.tree.map(jnp.copy, rt.registry.get(u).params),
+                  jax.tree.map(jnp.copy, rt.registry.get(u).opt))
+              for u in rt.registry.uids()}
+    monkeypatch.setattr(rt_mod, "sample_drops",
+                        lambda cfg, k, r, cohort, nb: {int(u): 0
+                                                       for u in cohort})
+    rep = rt.run_round()
+    assert rep["cohort_size"] == 3 and rep["mid_round_drops"] == 3
+    assert rep["real_samples"] == 0 and rep["tier"] == 0
+    assert np.isfinite(rep["client_loss"]) and rep["client_loss"] == 0.0
+    assert not rep["fedavg_applied"]            # zero-seen guard: no-op
+    assert rt.round == 1                        # cursor still advances
+    for u, (p, o) in before.items():
+        assert trees_equal(rt.registry.get(u).params, p), u
+        assert trees_equal(rt.registry.get(u).opt, o), u
+        assert rt.registry.get(u).seen == 0
+
+
+# ---------------------------------------------------------------------------
+# async (staleness-tolerant) aggregation — PR 6
+# ---------------------------------------------------------------------------
+
+LAGGY = dict(policy="bernoulli", p=0.7, drop_p=0.2)
+
+
+def _async_pair(key, sync_kw=None, async_kw=None, **common):
+    """Twin runtimes differing only in aggregation mode."""
+    a = make_runtime(key, async_mode=True, **(async_kw or {}), **common)
+    s = make_runtime(key, async_mode=False, **(sync_kw or {}), **common)
+    return a, s
+
+
+def _registry_state(rt):
+    return ([(u, rt.registry.get(u).params, rt.registry.get(u).opt,
+              rt.registry.get(u).seen) for u in rt.registry.uids()],
+            rt.server_params, rt.server_opt)
+
+
+def _assert_bitwise(rt_a, rt_b):
+    (ca, spa, soa), (cb, spb, sob) = _registry_state(rt_a), \
+        _registry_state(rt_b)
+    assert trees_equal(spa, spb) and trees_equal(soa, sob)
+    for (u, p, o, seen), (u2, p2, o2, seen2) in zip(ca, cb):
+        assert u == u2 and seen == seen2, (u, seen, seen2)
+        assert trees_equal(p, p2), u
+        assert trees_equal(o, o2), u
+
+
+def test_async_without_lag_is_bitwise_sync(key):
+    """Rung 1 of the bitwise ladder: lag_p=0 ⇒ the async machinery is
+    inert and every quantity matches sync exactly."""
+    common = dict(sizes=[10, 6, 12],
+                  participation=ParticipationConfig(**LAGGY),
+                  fedavg_every=2, ema_decay=0.9)
+    a, s = _async_pair(key, **common)
+    ra = a.run(5)
+    rs = s.run(5)
+    assert a._pending == []
+    _assert_bitwise(a, s)
+    assert all(r["stragglers"] == 0 and r["stale_merges"] == 0
+               for r in ra + rs)
+
+
+def test_async_full_weight_lag1_drain_is_bitwise_sync(key):
+    """Rung 2: every payload exactly one round late (lag_max=1) at full
+    merge weight (stale_alpha=1 ⇒ w=1 ⇒ payload returned AS-IS), FedAvg
+    off so nothing reads the registry between upload and delivery —
+    after drain() the async run equals sync bitwise."""
+    part = ParticipationConfig(lag_p=0.6, lag_max=1, **LAGGY)
+    common = dict(sizes=[10, 6, 12], participation=part)
+    a, s = _async_pair(key, async_kw=dict(stale_alpha=1.0), **common)
+    ra = a.run(6)
+    s.run(6)
+    assert sum(r["stragglers"] for r in ra) > 0   # injection really fired
+    assert sum(r["stale_merges"] for r in ra) > 0
+    a.drain()
+    _assert_bitwise(a, s)
+
+
+def test_async_tolerance_vs_sync(key):
+    """Rung 3 (the documented tolerance): general staleness-weighted
+    merging deviates from the sync trajectory, but on the smoke-scale
+    workload the final params stay within atol 5e-2 (the bound stated in
+    train/runtime.py's module docstring) and everything stays finite."""
+    part = ParticipationConfig(lag_p=0.5, lag_max=2, **LAGGY)
+    common = dict(sizes=[10, 6, 12], participation=part, fedavg_every=2)
+    a, s = _async_pair(key, **common)
+    ra = a.run(8)
+    s.run(8)
+    merged = a.drain()
+    n_straggled = sum(r["stragglers"] for r in ra)
+    assert n_straggled > 0
+    # every enqueued payload lands exactly once (in-round or at drain);
+    # a straggler that trained zero real cells never enqueues, so <=
+    assert 0 < sum(r["stale_merges"] for r in ra) + merged <= n_straggled
+    assert a._pending == []
+    for (u, p, o, _), pa in zip(_registry_state(a)[0],
+                                _registry_state(s)[0]):
+        for x, y in zip(jax.tree.leaves(p), jax.tree.leaves(pa[1])):
+            assert np.isfinite(np.asarray(x)).all()
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32),
+                                       atol=5e-2)
+    for x, y in zip(jax.tree.leaves(a.server_params),
+                    jax.tree.leaves(s.server_params)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=5e-2)
+
+
+def test_async_busy_client_sits_out(key):
+    """While a straggler's upload is in flight its uid must not be
+    sampled into a cohort (its net is wherever its upload is)."""
+    part = ParticipationConfig(policy="full", lag_p=1.0, lag_max=2)
+    rt = make_runtime(key, sizes=[8, 8], async_mode=True,
+                      participation=part)
+    r0 = rt.run_round()
+    assert r0["stragglers"] == 2 and r0["pending_payloads"] == 2
+    busy = {p["uid"] for p in rt._pending}
+    r1 = rt.run_round()
+    assert not busy.intersection(r1["cohort"])
+    total = sum(r["stale_merges"] for r in [rt.run_round()
+                                            for _ in range(3)])
+    assert total > 0                      # uploads eventually land
+
+
+def test_async_resume_bitwise_with_pending(key, tmp_path):
+    """State-dict v2 carries the pending queue: interrupt with uploads
+    in flight, restore, finish, drain — bitwise equal to the
+    uninterrupted async run."""
+    part = ParticipationConfig(lag_p=0.8, lag_max=3, **LAGGY)
+    kw = dict(sizes=[10, 6, 12], participation=part, async_mode=True,
+              fedavg_every=2, ema_decay=0.9)
+    full = make_runtime(key, **kw)
+    full.run(6)
+    half = make_runtime(key, **kw)
+    half.run(3)
+    assert half._pending                       # interrupt mid-flight
+    path = str(tmp_path / "rt_async.msgpack")
+    half.save(path)
+    resumed = TrainRuntime.restore(
+        tiny_config(participation=part, async_mode=True, fedavg_every=2,
+                    ema_decay=0.9), tiny_init, tiny_apply, path)
+    for i in range(3):
+        resumed.attach_data(i, *tiny_data(i, kw["sizes"][i]))
+    assert len(resumed._pending) == len(half._pending)
+    resumed.run(3)
+    full.drain()
+    resumed.drain()
+    assert resumed.round == full.round
+    _assert_bitwise(resumed, full)
+    assert trees_equal(resumed.ema_server, full.ema_server)
+
+
+def test_v1_checkpoint_still_restores(key, tmp_path):
+    """Backward compatibility: a version-1 state dict (no pending queue)
+    restores into an empty queue instead of erroring."""
+    rt = make_runtime(key, sizes=[8],
+                      participation=ParticipationConfig(policy="full"))
+    rt.run(1)
+    state = rt.state_dict()
+    state["version"] = 1
+    del state["pending"]
+    from repro.checkpointing import checkpoint as ckpt
+    path = str(tmp_path / "v1.msgpack")
+    ckpt.save(path, state)
+    restored = TrainRuntime.restore(tiny_config(), tiny_init, tiny_apply,
+                                    path)
+    assert restored._pending == []
+    assert restored.round == rt.round
+    with pytest.raises(ValueError, match="version"):
+        state["version"] = 99
+        ckpt.save(path, state)
+        TrainRuntime.restore(tiny_config(), tiny_init, tiny_apply, path)
+
+
+def test_sync_straggler_barrier_is_pure_wall_clock(key):
+    """Sync mode with straggler injection is TODAY's semantics plus a
+    stall: every quantity bitwise-equals the lag-free run, and the
+    report shows the barrier paying max-lag wall seconds."""
+    part_lag = ParticipationConfig(lag_p=0.8, lag_max=2, **LAGGY)
+    part_free = ParticipationConfig(**LAGGY)
+    kw = dict(sizes=[10, 6, 12], fedavg_every=2)
+    lagged = make_runtime(key, participation=part_lag, lag_s=0.002, **kw)
+    free = make_runtime(key, participation=part_free, **kw)
+    rl = lagged.run(4)
+    free.run(4)
+    _assert_bitwise(lagged, free)
+    assert sum(r["stragglers"] for r in rl) > 0
+    assert sum(r["barrier_stall_s"] for r in rl) > 0.0
+    assert all(r["pending_payloads"] == 0 for r in rl)
