@@ -33,8 +33,24 @@ planner work), sequential (retire the wave before planning the next)
 vs pipelined (double-buffered handoff: bucket i+1's host work overlaps
 bucket i's device scans).  Outputs are BITWISE equal — the speedup
 column is pure barrier removal, the ISSUE-6 acceptance gate.
+
+PR-7 tail-latency columns (``barrier_admit`` / ``continuous_admit``):
+the SAME Poisson open-loop arrival stream (exponential inter-arrivals,
+arrival times fixed up front — the load does not adapt to the server,
+so queueing delay is charged honestly via ``enqueue_t``) served two
+ways.  Before: queue-drain admission — whatever has arrived when the
+runtime goes idle is drained as one ``process()`` call, so a request
+landing just after a drain starts waits for the WHOLE drain (the
+head-of-line blocking ISSUE 7 targets).  After: ``policy="continuous"``
+— each request is submitted at its arrival instant and joins the next
+wave with a free in-flight slot.  Both runs are pre-warmed (signatures
+compiled, cache saturated) and stalled identically per wave, so the
+latency columns isolate ADMISSION TIMING; the p95 improvement is the
+ISSUE-7 acceptance gate (asserted here, not just reported).
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -148,6 +164,96 @@ def _bench_pipeline(key, k: int, T: int = 48, batch: int = 4,
          f"bitwise_equal=1")
 
 
+def _pcts(rows):
+    lat = np.asarray([r["latency_s"] for r in rows], np.float64)
+    return {q: float(np.percentile(lat, q)) for q in (50, 95, 99)}
+
+
+def _drive_barrier(rt, queue, arrivals, t0):
+    """Queue-drain admission over an open-loop stream: sleep until the
+    next arrival, then drain EVERYTHING that has arrived as one
+    process() call — later arrivals wait for the full drain (the
+    pre-PR-7 admission boundary)."""
+    rows = []
+    i = 0
+    while i < len(queue):
+        wait = t0 + arrivals[i] - time.perf_counter()
+        if wait > 0:
+            time.sleep(wait)
+        now = time.perf_counter()
+        j = i
+        while j < len(queue) and t0 + arrivals[j] <= now:
+            j += 1
+        _, rep = rt.process(queue[i:j],
+                            enqueue_t=[t0 + a for a in arrivals[i:j]])
+        rows.extend(rep["per_request"])
+        i = j
+    return rows
+
+
+def _drive_continuous(rt, queue, arrivals, t0):
+    """Wave-boundary admission over the same stream: submit each request
+    at its arrival instant, poll between arrivals (non-blocking while
+    the stream is live, blocking to drain the tail)."""
+    rt.start_report()
+    i = 0
+    while i < len(queue) or rt.busy:
+        now = time.perf_counter()
+        while i < len(queue) and t0 + arrivals[i] <= now:
+            rt.submit([queue[i]], enqueue_t=[t0 + arrivals[i]])
+            i += 1
+        rt.poll(block=i >= len(queue))
+        if i < len(queue):
+            time.sleep(min(2e-4, max(
+                0.0, t0 + arrivals[i] - time.perf_counter())))
+    return rt.finish_report()["per_request"]
+
+
+def _bench_poisson(key, k: int, T: int = 48, batch: int = 4,
+                   requests: int = 48, n_classes: int = 8,
+                   mean_interarrival_s: float = 0.002,
+                   straggle_s: float = 0.003):
+    """PR-7 tail-latency columns — see module docstring."""
+    sched = DiffusionSchedule.linear(T)
+    apply_fn = lambda p, x, t, y: x * p["a"] + p["b"]
+    sp = {"a": jnp.float32(0.2), "b": jnp.float32(0.0)}
+    cp = {"a": jnp.linspace(0.1, 0.5, k), "b": jnp.zeros((k,))}
+    base = max(T // 8, 1)
+    cuts = [base * (2 ** (c % 3)) for c in range(k)]
+    rng = np.random.default_rng(k)
+    queue = synth_queue(rng, clients=k, cuts=cuts, requests=requests,
+                        batch=batch, n_classes=n_classes, zipf=1.1)
+    arrivals = np.cumsum(rng.exponential(mean_interarrival_s, requests))
+
+    mk = lambda policy: ServeRuntime(
+        ServeConfig(T=T, image_shape=(8, 8, 3), max_wave=8, policy=policy,
+                    cache=True, straggle_s=straggle_s),
+        sp, cp, apply_fn, sched, key)
+    barrier, cont = mk("depth"), mk("continuous")
+    # pre-warm BOTH: compile every bucket signature and saturate the
+    # cache, so the timed runs measure admission timing, not compiles
+    for rt in (barrier, cont):
+        rt.process(queue)
+        rt.process(queue)
+
+    b_rows = _drive_barrier(barrier, queue, arrivals, time.perf_counter())
+    c_rows = _drive_continuous(cont, queue, arrivals, time.perf_counter())
+    bp, cp_ = _pcts(b_rows), _pcts(c_rows)
+    tag = f"k{k}_r{requests}_ia{mean_interarrival_s * 1e3:.0f}ms"
+    emit(f"collab_serve_runtime/barrier_admit_{tag}", bp[95] * 1e6,
+         f"latency_p50_ms={bp[50] * 1e3:.2f};"
+         f"latency_p95_ms={bp[95] * 1e3:.2f};"
+         f"latency_p99_ms={bp[99] * 1e3:.2f}")
+    emit(f"collab_serve_runtime/continuous_admit_{tag}", cp_[95] * 1e6,
+         f"latency_p50_ms={cp_[50] * 1e3:.2f};"
+         f"latency_p95_ms={cp_[95] * 1e3:.2f};"
+         f"latency_p99_ms={cp_[99] * 1e3:.2f};"
+         f"p95_speedup={bp[95] / cp_[95]:.2f}x")
+    # ISSUE-7 acceptance gate: wave-boundary admission must beat
+    # queue-drain admission at the tail on the same open-loop stream
+    assert cp_[95] < bp[95], (cp_, bp)
+
+
 def main(quick: bool = False):
     key = jax.random.PRNGKey(0)
     for k in ([5] if quick else [2, 5]):
@@ -159,6 +265,9 @@ def main(quick: bool = False):
                     T=24 if quick else 48,
                     requests=12 if quick else 24,
                     passes=3 if quick else 4)
+    _bench_poisson(jax.random.fold_in(key, 777), 5,
+                   T=24 if quick else 48,
+                   requests=24 if quick else 48)
 
 
 if __name__ == "__main__":

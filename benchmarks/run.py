@@ -10,7 +10,11 @@ Suites:
                        vs the PR-3 fifo/no-cache driver on Zipf traffic;
                        plus PR-6 seq_barrier/pipelined columns — wave
                        barrier vs double-buffered overlap under injected
-                       host straggle (bitwise-equal outputs)
+                       host straggle (bitwise-equal outputs); plus PR-7
+                       barrier_admit/continuous_admit columns — Poisson
+                       open-loop arrivals, queue-drain vs wave-boundary
+                       admission, p50/p95/p99 tail latency (asserts the
+                       continuous p95 beats the barrier p95)
   collab_train_runtime federated train runtime (pow2 cohort tiers) vs the
                        PR-1 exact-stack driver under Bernoulli cohort
                        churn; plus PR-6 sync_barrier/async_stale columns

@@ -16,7 +16,12 @@
 #                              straggler-injected overlap pass: pipelined
 #                              double-buffered waves bitwise == sequential
 #                              (same outputs/hits/physical calls, zero
-#                              steady re-traces in both modes),
+#                              steady re-traces in both modes), AND a
+#                              continuous-admission pass (PR 7):
+#                              policy="continuous" output bitwise == depth
+#                              for the same arrival order, zero new
+#                              compiled signatures beyond depth's menu,
+#                              SLO accounting tracking every request,
 #                              plus the train-runtime smoke (registry ->
 #                              participation sampler -> cohort tier plan ->
 #                              identity-keyed masked engine -> aggregation ->

@@ -49,6 +49,21 @@ randomness — ``pad_plan`` exploits exactly this to pad a plan's axes to
 the scheduler's fixed shape tiers with inert all-masked rows (see
 tests/test_sample_engine.py and tests/test_serve_runtime.py
 padding-invariance tests).
+
+**Partially-refilled waves (continuous admission, PR 7).**  Under
+``policy="continuous"`` the serve runtime plans waves of ANY real size
+1 … max_wave, formed whenever an engine slot frees up — so the
+padding-invariance above is load-bearing in a stronger sense: a request
+planned alone in a 1-row wave must be bitwise-identical to the same
+request planned inside a full wave.  That holds because nothing in a
+plan row depends on wave COMPOSITION: seeds come in from outside
+(content-stable ``group_seed_fn`` + arrival-stable ``request_seeds``,
+never the wave-local ``arange`` defaults), step tables depend only on
+the request's own (T, t_ζ, stride), S_max/C_max are bucket constants
+(one (t_ζ, B) bucket per continuous wave), and ``pad_plan`` appends —
+never renumbers — real rows.  tests/test_serve_runtime.py pins this with
+single-request-vs-full-wave differential tests; anyone adding a field to
+PlanTables must keep it per-row or per-bucket, never per-wave.
 """
 from __future__ import annotations
 
@@ -92,10 +107,17 @@ class InjectTables(NamedTuple):
 @dataclasses.dataclass(frozen=True)
 class SampleRequest:
     """One queue entry: client ``client`` wants ``y.shape[0]`` samples
-    conditioned on ``y`` at its own cut point ``t_cut``."""
+    conditioned on ``y`` at its own cut point ``t_cut``.
+
+    ``slo_s`` is an optional per-request latency deadline in seconds
+    (enqueue → retire); it never influences planning or scheduling — the
+    serve runtime only ACCOUNTS against it (deadline-miss counts in the
+    serve report), so a missed SLO is observable, not silently absorbed.
+    None means untracked."""
     client: int
     t_cut: int
     y: np.ndarray                 # (B, n_classes); B shared across a plan
+    slo_s: Optional[float] = None
 
 
 def n_server_calls(T: int, t_cut: int, stride: int = 1) -> int:

@@ -35,7 +35,12 @@ re-traces in the steady pass), ≥30% fewer physical server model
 calls than the fifo/no-cache baseline at equal (bitwise) output, and a
 straggler-injected overlap pass: the pipelined loop under a per-wave
 host stall stays bitwise equal to the sequential barrier loop (outputs
-AND cache traffic) with zero steady-state re-traces in both modes.
+AND cache traffic) with zero steady-state re-traces in both modes, and
+a continuous-admission pass (PR 7): ``policy="continuous"`` output is
+bitwise equal to depth-bucketed output for the same arrival order, the
+steady pass traces zero and adds ZERO new signatures beyond depth's
+menu, and SLO accounting tracks every deadline-carrying request
+(``--slo-s`` sets a default deadline outside the smoke).
 """
 from __future__ import annotations
 
@@ -111,17 +116,21 @@ def make_runtime(args, sp, cp, apply_fn, sched, key, *, policy=None,
 
 def print_report(tag: str, report: dict):
     for k_, v in report.items():
-        print(f"{tag}/{k_}: {v:.4g}" if isinstance(v, float)
-              else f"{tag}/{k_}: {v}")
+        if k_ == "per_request":      # raw ticket rows — summarize, don't dump
+            print(f"{tag}/per_request: {len(v)} rows")
+        elif isinstance(v, float):
+            print(f"{tag}/{k_}: {v:.4g}")
+        else:
+            print(f"{tag}/{k_}: {v}")
 
 
-def run_passes(rt: ServeRuntime, queue, n_passes: int):
+def run_passes(rt: ServeRuntime, queue, n_passes: int, slo_s=None):
     """Replay ``queue`` n_passes times; returns (per-pass outputs,
     per-pass reports).  Arrival ids keep advancing, so every pass draws
     FRESH samples — only the server prefixes repeat (and hit the cache)."""
     outs, reports = [], []
     for _ in range(n_passes):
-        o, r = rt.process(queue)
+        o, r = rt.process(queue, slo_s=slo_s)
         outs.append(o)
         reports.append(r)
     return outs, reports
@@ -200,9 +209,38 @@ def smoke(args, queue, sp, cp, apply_fn, sched, key) -> dict:
           f"{sum(r['wall_s'] for r in pipe_reps):.3f}s vs sequential "
           f"{sum(r['wall_s'] for r in seq_reps):.3f}s at "
           f"{stall * 1e3:.0f}ms/wave stall (bitwise equal outputs)")
+
+    # continuous-admission pass (PR 7): admission timing is the third
+    # pure perf knob — continuous output must be BITWISE equal to the
+    # depth-bucketed runtime for the same arrival order, and steady
+    # traffic must add ZERO new compiled signatures (a partially-refilled
+    # wave can only present shapes on depth's fixed tier menu)
+    cont = make_runtime(args, sp, cp, apply_fn, sched, key,
+                        policy="continuous", cache=True)
+    cont_outs, cont_reps = run_passes(cont, queue, n_passes, slo_s=60.0)
+    for p in range(n_passes):
+        for a, b in zip(cont_outs[p], outs[p]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c_steady = cont_reps[-1]
+    print_report("continuous/steady", c_steady)
+    assert c_steady["engine_traces"] == 0, c_steady
+    assert c_steady["max_signatures_per_bucket"] == 1, c_steady
+    # zero NEW signatures: every bucket the continuous runtime compiled
+    # is a bucket the depth runtime compiled too (same (t_ζ, B) menu)
+    depth_buckets = set(reps[0]["signatures_per_bucket"])
+    cont_buckets = set(cont_reps[0]["signatures_per_bucket"])
+    assert cont_buckets <= depth_buckets, (cont_buckets, depth_buckets)
+    # SLO accounting: every request carried the 60 s default deadline —
+    # all tracked, none missed at toy scale, percentiles populated
+    assert c_steady["slo_tracked"] == c_steady["requests"], c_steady
+    assert c_steady["slo_misses"] == 0, c_steady
+    assert c_steady["latency_p99_s"] > 0.0, c_steady
+    assert len(c_steady["per_request"]) == c_steady["requests"]
+
     print("smoke: OK (cache hits, bitwise warm==cold==fifo, 1 signature "
           "per bucket in steady state, >=30% fewer physical server calls, "
-          "pipelined==sequential bitwise under straggle)")
+          "pipelined==sequential bitwise under straggle, "
+          "continuous==depth bitwise with zero new signatures)")
     return steady
 
 
@@ -219,9 +257,17 @@ def main(argv=None):
     ap.add_argument("--max-wave", type=int, default=8,
                     help="request-axis tier: requests batched per engine "
                          "call (waves are padded to exactly this)")
-    ap.add_argument("--policy", choices=("depth", "fifo"), default="depth",
-                    help="wave scheduler: depth buckets (shape-stable) or "
-                         "fifo arrival order (the PR-3 baseline)")
+    ap.add_argument("--policy", choices=("depth", "fifo", "continuous"),
+                    default="depth",
+                    help="wave scheduler: depth buckets (shape-stable), "
+                         "fifo arrival order (the PR-3 baseline), or "
+                         "continuous (admission at wave boundaries)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="shorthand for --policy continuous")
+    ap.add_argument("--slo-s", type=float, default=None,
+                    help="default per-request latency deadline in seconds "
+                         "(reports slo_tracked/slo_misses; accounting "
+                         "only — never steers scheduling)")
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the cross-wave server-prefix cache")
     ap.add_argument("--cache-bytes", type=int, default=64 << 20)
@@ -251,6 +297,8 @@ def main(argv=None):
                     help="CI preset: assert the serve-subsystem contract "
                          "(see module docstring)")
     args = ap.parse_args(argv)
+    if args.continuous:
+        args.policy = "continuous"
     if args.requests < 1 or args.max_wave < 1 or args.clients < 1 \
             or args.passes < 1:
         raise SystemExit("--requests, --max-wave, --clients, and --passes "
@@ -292,7 +340,7 @@ def main(argv=None):
         return smoke(args, queue, sp, cp, apply_fn, sched, key)
 
     rt = make_runtime(args, sp, cp, apply_fn, sched, key)
-    _, reports = run_passes(rt, queue, args.passes)
+    _, reports = run_passes(rt, queue, args.passes, slo_s=args.slo_s)
     for i, rep in enumerate(reports):
         print_report(f"serve/pass{i + 1}", rep)
     if args.compare:

@@ -3,8 +3,8 @@ cache + shape-stable wave scheduler + runtime loop) layered on the PR-3
 planner/executor engine.  See serve/runtime.py for the architecture
 notes."""
 from repro.serve.prefix_cache import CacheStats, PrefixCache
-from repro.serve.runtime import ServeConfig, ServeRuntime
+from repro.serve.runtime import RequestTicket, ServeConfig, ServeRuntime
 from repro.serve.scheduler import Wave, WaveBucket, WaveScheduler, tier
 
-__all__ = ["CacheStats", "PrefixCache", "ServeConfig", "ServeRuntime",
-           "Wave", "WaveBucket", "WaveScheduler", "tier"]
+__all__ = ["CacheStats", "PrefixCache", "RequestTicket", "ServeConfig",
+           "ServeRuntime", "Wave", "WaveBucket", "WaveScheduler", "tier"]

@@ -35,6 +35,12 @@ from typing import Hashable, Optional, Tuple
 
 @dataclasses.dataclass
 class CacheStats:
+    """Telemetry.  Every field except the last two describes the current
+    EPOCH — the interval since construction or the latest ``clear()``;
+    ``clears``/``cleared_entries`` are lifetime counters that survive
+    epochs (they are how a monitoring loop sees the drops a clear made,
+    which would otherwise be invisible: cleared entries are neither
+    evictions — there was no capacity pressure — nor a stats wipe)."""
     hits: int = 0
     misses: int = 0
     insertions: int = 0
@@ -43,6 +49,8 @@ class CacheStats:
     bytes_in_use: int = 0
     peak_bytes: int = 0
     server_calls_saved: int = 0  # model calls the hits skipped
+    clears: int = 0              # lifetime: epochs started by clear()
+    cleared_entries: int = 0     # lifetime: entries dropped by clears
 
     @property
     def lookups(self) -> int:
@@ -143,5 +151,20 @@ class PrefixCache:
             self.stats.evictions += 1
 
     def clear(self):
+        """Start a new cache EPOCH: drop every entry and reset the epoch
+        stats — hits/misses/insertions/evictions/rejected/bytes/peak all
+        describe only the new epoch afterwards (the pre-PR-7 half-reset
+        zeroed ``bytes_in_use`` but let ``peak_bytes`` and the hit/miss
+        counters leak across epochs, so post-clear hit rates and peaks
+        lied).  The drop itself stays visible through the LIFETIME
+        counters ``clears`` (+1) and ``cleared_entries`` (+len) — not as
+        evictions, which mean capacity pressure.  This is the key-
+        rotation hook (ServeRuntime.rotate_key): entries are addressed
+        by the base-key fingerprint, so after a rotation every resident
+        entry is permanently unreachable and holding it would only burn
+        byte budget."""
+        dropped = len(self._entries)
         self._entries.clear()
-        self.stats.bytes_in_use = 0
+        self.stats = CacheStats(
+            clears=self.stats.clears + 1,
+            cleared_entries=self.stats.cleared_entries + dropped)

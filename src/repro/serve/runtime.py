@@ -15,7 +15,8 @@ core/collab.py's vectorized-round notes):
   aggregates per-request latency, throughput, hit rate, physical-vs-
   logical model calls and recompiles.
 * **Stable keying is the load-bearing invariant.**  The runtime holds ONE
-  base PRNG key for its lifetime; randomness is addressed, never chained:
+  base PRNG key for its lifetime (``rotate_key`` swaps it deliberately —
+  see below); randomness is addressed, never chained:
   a group's server noise depends only on (base key, a content-derived
   seed — sample_plan.stable_group_seed, a digest of the (y, t_ζ, stride)
   identity) and a request's client noise only on (base key, its arrival
@@ -55,20 +56,63 @@ core/collab.py's vectorized-round notes):
   wave i+1's host work (scheduling, planning, cache probes, the
   ``straggle_s`` stall that models slow request arrival/IO) and wave
   i+1's server scan proceed while wave i's client scan still runs on
-  the accelerator.  A double-buffered in-flight slot (at most TWO waves
-  outstanding) bounds device memory; the oldest wave retires (blocks,
-  records latency, scatters outputs) only when the slot is full or the
-  queue drains.  Cache fills store the handoff FUTURE at exactly the
-  same point in the wave sequence as the sequential loop, so probes,
-  hits, physical calls, and outputs are all bitwise identical between
+  the accelerator.  A double-buffered in-flight window (at most TWO
+  waves outstanding) bounds device memory; the oldest wave retires
+  (blocks, scatters outputs) when the window is full or the queue
+  drains.  Cache fills store the handoff FUTURE at exactly the same
+  point in the wave sequence as the sequential loop, so probes, hits,
+  physical calls, and outputs are all bitwise identical between
   ``pipeline=True`` and ``pipeline=False`` (differential-tested) —
   pipelining, like batching and caching, is a pure performance knob.
+* **Continuous admission (PR 7): ``policy="continuous"``.**  process()'s
+  wave list is fixed at call time — a request that misses the call waits
+  for the entire queue to drain (head-of-line blocking at the queue
+  boundary).  The continuous policy moves admission to WAVE boundaries:
+  ``submit()`` appends tickets to per-bucket pending deques,
+  ``poll()`` forms and dispatches a wave (scheduler.admit — up to
+  max_wave requests popped from the bucket whose head has waited
+  longest) whenever the double-buffered in-flight window has a free
+  slot, and ``drain()`` runs poll to completion.  ``process()`` on a
+  continuous runtime is just submit + drain, so the three are one code
+  path.  Admission timing is a pure performance knob like bucketing and
+  caching: seeds are content-/arrival-stable and partially-refilled
+  waves pad to the exact same tier menu, so continuous output is
+  BITWISE equal to depth-bucketed output for the same arrival order,
+  with zero new steady-state signatures (pinned by tests and the CI
+  smoke; tail latency measured by the Poisson open-loop columns in
+  benchmarks/collab_serve_runtime.py).
+* **Per-request SLO accounting.**  Every request gets a RequestTicket
+  carrying four absolute timestamps: ``t_enqueue`` (entered the runtime
+  — submit()/process() call, or the caller-supplied open-loop arrival
+  time ``enqueue_t``), ``t_admit`` (left pending, bound into a wave
+  being planned), ``t_dispatch`` (its wave's engine stages dispatched),
+  ``t_retire`` (its output OBSERVED ready — see the gauge note below).
+  The report aggregates latency (retire − enqueue) p50/p95/p99,
+  admission wait (admit − enqueue) percentiles, and deadline misses
+  against an optional per-request ``slo_s`` (SampleRequest.slo_s, or a
+  per-call default); ``per_request`` carries the raw rows.  SLO values
+  never steer scheduling — they are accounting only, so adding or
+  changing deadlines cannot perturb outputs.
+
+  **Latency gauge semantics (audited, PR 7):** recorded latency is
+  enqueue → *observed completion*.  Retirement uses a per-wave ready
+  probe (``jax.Array.is_ready``), checked opportunistically before each
+  wave's planning, during ``straggle_s`` stalls, and on every poll — so
+  in pipelined mode a wave's latency no longer inflates by however long
+  the retirement policy left the finished result sitting in the
+  in-flight window (the pre-PR-7 behavior conflated device time with
+  retirement-policy delay; sequential-vs-pipelined latency semantics
+  are pinned by test).  The residual overestimate is bounded by one
+  probe interval (~1 ms during stalls, one host planning step
+  otherwise), and it is an overestimate only — the gauge never reports
+  a request faster than it was.
 
 Reproducibility contract: the serve path is SYNCHRONOUS and bitwise —
 every mode of this runtime (pipelined or sequential, any scheduler
-policy, cache on or off) produces bitwise-identical samples for the
-same base key and arrival order; the async/staleness relaxation lives
-only in train/runtime.py's aggregation, never here.
+policy incl. continuous admission, cache on or off, SLOs tracked or
+not) produces bitwise-identical samples for the same base key and
+arrival order; the async/staleness relaxation lives only in
+train/runtime.py's aggregation, never here.
 
 Remaining open (ROADMAP): a pmap/multi-host request axis,
 host-offloaded cache tiers, deeper in-flight windows than the
@@ -78,8 +122,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -91,7 +135,7 @@ from repro.core.sample_plan import (GroupKey, SamplePlan, SampleRequest,
 from repro.core.sampler import check_engine_plan, make_sample_engine
 from repro.core.schedules import DiffusionSchedule
 from repro.serve.prefix_cache import PrefixCache
-from repro.serve.scheduler import WaveScheduler
+from repro.serve.scheduler import WaveBucket, WaveScheduler
 
 
 def _key_fingerprint(key) -> bytes:
@@ -103,12 +147,23 @@ def _key_fingerprint(key) -> bytes:
     return np.asarray(data).tobytes()
 
 
+def _is_ready(x) -> bool:
+    """Non-blocking readiness probe; conservatively False when the array
+    type predates jax.Array.is_ready (latency then degrades to the old
+    retire-time gauge — an overestimate, never an underestimate)."""
+    try:
+        return bool(x.is_ready())
+    except AttributeError:
+        return False
+
+
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     T: int
     image_shape: Tuple[int, ...]          # per-sample trailing (H, W, C)
     max_wave: int = 8
-    policy: str = "depth"                 # "depth" | "fifo" (PR-3 baseline)
+    policy: str = "depth"    # "depth" | "fifo" (PR-3 baseline) |
+    #                          "continuous" (admission at wave boundaries)
     server_stride: int = 1                # >1 ⇒ strided DDIM server phase
     adjusted: bool = True
     cache: bool = True
@@ -120,10 +175,80 @@ class ServeConfig:
     straggle_s: float = 0.0               # host-side stall before each wave
 
 
+@dataclasses.dataclass
+class RequestTicket:
+    """Per-request admission + SLO record.  Timestamps are absolute
+    ``time.perf_counter()`` seconds; -1.0 marks a stage not reached yet.
+    ``rid`` is the runtime-lifetime arrival id — it seeds the request's
+    client noise (arrival-stable randomness) AND orders continuous
+    admission (scheduler.admit pops oldest-rid-first)."""
+    rid: int
+    request: SampleRequest
+    slo_s: Optional[float] = None
+    t_enqueue: float = -1.0
+    t_admit: float = -1.0
+    t_dispatch: float = -1.0
+    t_retire: float = -1.0
+    output: Optional[jnp.ndarray] = None
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_retire - self.t_enqueue
+
+    @property
+    def admit_wait_s(self) -> float:
+        return self.t_admit - self.t_enqueue
+
+    @property
+    def slo_miss(self) -> bool:
+        return self.slo_s is not None and self.latency_s > self.slo_s
+
+    def as_row(self, t0: float) -> Dict:
+        """Report row; times relative to the report frame's start (an
+        open-loop arrival handed in via ``enqueue_t`` can legitimately
+        predate the frame — its ``enqueue_s`` is then negative)."""
+        rel = lambda t: t - t0 if t >= 0.0 else -1.0
+        return {"rid": self.rid, "client": self.request.client,
+                "t_cut": self.request.t_cut,
+                "enqueue_s": self.t_enqueue - t0,
+                "admit_s": rel(self.t_admit),
+                "dispatch_s": rel(self.t_dispatch),
+                "retire_s": rel(self.t_retire),
+                "latency_s": self.latency_s,
+                "admit_wait_s": self.admit_wait_s,
+                "slo_s": self.slo_s, "slo_miss": self.slo_miss}
+
+
+class _Frame:
+    """One reporting interval's accumulators.  process() opens and closes
+    a frame per call; poll-driven serving opens one with start_report()
+    and closes it with finish_report() whenever a report is wanted —
+    tickets retired during the frame are the frame's population (their
+    enqueue may predate it; latency stays honest because timestamps are
+    absolute)."""
+
+    def __init__(self, cache_stats, traces: int):
+        self.t0 = time.perf_counter()
+        self.acc = {"server_calls_physical": 0, "server_calls_logical": 0,
+                    "client_calls_physical": 0, "client_calls_logical": 0,
+                    "padded_model_calls": 0}
+        self.dedup_saved = 0
+        self.cache_saved = 0
+        self.from_cache = 0
+        self.waves = 0
+        self.n_samples = 0
+        self.sigs: Dict[str, set] = {}
+        self.retired: List[RequestTicket] = []
+        self.cache0 = dataclasses.replace(cache_stats) \
+            if cache_stats is not None else None
+        self.traces0 = traces
+
+
 class ServeRuntime:
     """The persistent serving loop.  Construct once, ``process`` queues
-    forever; the cache, seed registries, and compiled signatures persist
-    across calls (that persistence IS the subsystem)."""
+    (or ``submit``/``poll`` a continuous stream) forever; the cache, seed
+    registries, and compiled signatures persist across calls (that
+    persistence IS the subsystem)."""
 
     def __init__(self, config: ServeConfig, server_params, client_params,
                  apply_fn, sched: DiffusionSchedule, key):
@@ -143,6 +268,13 @@ class ServeRuntime:
         self._key_fp = _key_fingerprint(key)
         self._next_rid = 0
         self.traces = 0            # engine re-traces == XLA compiles
+        # continuous-admission state: per-bucket pending tickets and the
+        # (shared) double-buffered in-flight window
+        self._pending: "OrderedDict[WaveBucket, Deque[RequestTicket]]" = \
+            OrderedDict()
+        self._inflight: "Deque[Tuple[jnp.ndarray, Tuple[RequestTicket, ...]]]" \
+            = deque()
+        self._frame: Optional[_Frame] = None
 
         raw_server, raw_client = make_sample_engine(
             sched, apply_fn, config.image_shape,
@@ -177,21 +309,53 @@ class ServeRuntime:
     def _lookup(self, gk: GroupKey):
         return self.cache.lookup(self._cache_key(gk))
 
+    def rotate_key(self, key) -> None:
+        """Key rotation for long-lived deployments (the PR-4 cache note):
+        swap the base PRNG key and start a fresh cache epoch.  Every
+        resident entry is addressed by the OLD key fingerprint and could
+        never serve a hit again, so they are dropped via
+        PrefixCache.clear() — counted as a clear epoch, not as evictions.
+        Refused while requests are pending or in flight (their seeds were
+        drawn under the old key) and while a report frame is open (the
+        frame's cache-delta baseline belongs to the old epoch)."""
+        if self.busy:
+            raise RuntimeError("rotate_key with requests pending/in flight")
+        if self._frame is not None:
+            raise RuntimeError("rotate_key inside an open report frame; "
+                               "finish_report() first")
+        self._key = key
+        self._key_fp = _key_fingerprint(key)
+        if self.cache is not None:
+            self.cache.clear()
+
+    # -- reporting ---------------------------------------------------------
     def _empty_report(self) -> Dict:
         """Zeroed report with the FULL key set — idle ticks must not
         change the report shape consumers sum over.
 
         Cache field semantics (audited, PR 6): every ``cache_*`` field
-        except the last two is a DELTA for this ``process`` call —
-        hits/misses/hit_rate/insertions/evictions/rejected all reset to
-        zero per call, so summing reports across calls is meaningful.
-        ``cache_entries`` and ``cache_bytes`` are GAUGES — absolute
-        resident state at report time (an idle tick reports the current
-        occupancy, not zero); never sum them."""
+        except the last two is a DELTA for this ``process`` call /
+        report frame — hits/misses/hit_rate/insertions/evictions/
+        rejected all reset to zero per frame, so summing reports across
+        frames is meaningful.  ``cache_entries`` and ``cache_bytes`` are
+        GAUGES — absolute resident state at report time (an idle tick
+        reports the current occupancy, not zero); never sum them.
+
+        Latency field semantics (PR 7): ``latency_*``/``admit_wait_*``
+        are percentiles over the requests RETIRED in the frame, from the
+        ticket timestamps (enqueue → observed-ready; see module notes on
+        the ready-probe gauge); an empty frame reports 0.0, never NaN.
+        ``slo_*`` count only tickets that carried a deadline;
+        ``per_request`` holds the raw ticket rows (a list — inspect it,
+        don't sum it)."""
         report = {
             "requests": 0, "waves": 0, "buckets": 0, "wall_s": 0.0,
             "req_per_s": 0.0, "samples_per_s": 0.0,
             "latency_p50_s": 0.0, "latency_p95_s": 0.0,
+            "latency_p99_s": 0.0,
+            "admit_wait_p50_s": 0.0, "admit_wait_p95_s": 0.0,
+            "slo_tracked": 0, "slo_misses": 0, "slo_miss_rate": 0.0,
+            "per_request": [],
             "server_calls_physical": 0, "server_calls_logical": 0,
             "client_calls_physical": 0, "client_calls_logical": 0,
             "padded_model_calls": 0,
@@ -202,7 +366,7 @@ class ServeRuntime:
         }
         if self.cache is not None:
             report.update({
-                # deltas (per-call)
+                # deltas (per-frame)
                 "cache_hits": 0, "cache_misses": 0, "cache_hit_rate": 0.0,
                 "cache_insertions": 0, "cache_evictions": 0,
                 "cache_rejected": 0,
@@ -212,126 +376,54 @@ class ServeRuntime:
             })
         return report
 
-    # -- the loop ----------------------------------------------------------
-    def process(self, queue: Sequence[SampleRequest]
-                ) -> Tuple[List[jnp.ndarray], Dict]:
-        """Drain ``queue``; returns (outputs in arrival order — one
-        (B, *image_shape) array per request — and the serve report for
-        THIS call: latency/throughput, logical savings, physical padding
-        overhead, cache deltas, recompiles and signatures per bucket).
+    def start_report(self) -> None:
+        """Open a fresh accounting frame.  process() does this per call;
+        poll-driven serving calls it explicitly (submit/poll open one
+        lazily if none is open)."""
+        self._frame = _Frame(self.cache.stats if self.cache is not None
+                             else None, self.traces)
 
-        ``config.pipeline=True`` keeps up to two waves in flight
-        (dispatch wave i+1 while wave i still runs — see module notes);
-        ``False`` is the barrier-per-wave baseline.  Outputs and cache
-        behavior are bitwise identical either way."""
-        if not queue:
-            return [], self._empty_report()
-        cfg = self.config
-        rid0 = self._next_rid
-        self._next_rid += len(queue)
-        waves = self.scheduler.waves(queue)
-        outputs: List[Optional[jnp.ndarray]] = [None] * len(queue)
-        acc = {"server_calls_physical": 0, "server_calls_logical": 0,
-               "client_calls_physical": 0, "client_calls_logical": 0,
-               "padded_model_calls": 0}
-        dedup_saved = cache_saved = from_cache = 0
-        traces0 = self.traces
-        c0 = dataclasses.replace(self.cache.stats) \
-            if self.cache is not None else None
-        sigs: Dict[str, set] = {}
-        latencies: List[float] = []
-        t_start = time.perf_counter()
-
-        # in-flight window: (out future, wave) pairs not yet retired.
-        # pipeline=True → double-buffered (≤ 2 outstanding);
-        # pipeline=False → retire immediately (the old per-wave barrier).
-        inflight: "deque[Tuple[jnp.ndarray, object]]" = deque()
-
-        def retire():
-            out, wave = inflight.popleft()
-            jax.block_until_ready(out)
-            done = time.perf_counter() - t_start
-            latencies.extend([done] * len(wave.requests))
-            for j, qi in enumerate(wave.queue_idx):
-                outputs[qi] = out[j]
-
-        for wave in waves:
-            if cfg.straggle_s > 0.0:
-                # host-side stall (slow arrivals, planning, IO) — sleep
-                # releases the GIL, so in pipeline mode the accelerator
-                # keeps chewing the in-flight waves underneath it
-                time.sleep(cfg.straggle_s)
-            use_cache = self.cache is not None
-            plan = plan_requests(
-                list(wave.requests), cfg.T, adjusted=cfg.adjusted,
-                n_clients=self.n_clients,
-                server_stride=cfg.server_stride,
-                group_seed_fn=stable_group_seed,
-                # arrival ids grow forever; mask to int31 for the tables
-                # (a seed epoch repeats only after ~2.1e9 requests)
-                request_seeds=[(rid0 + qi) & 0x7FFFFFFF
-                               for qi in wave.queue_idx],
-                lookup_fn=self._lookup if use_cache else None,
-                image_shape=cfg.image_shape if use_cache else None)
-            check_engine_plan(cfg.server_stride > 1, plan)
-            padded = pad_plan(
-                plan,
-                n_groups=self.scheduler.group_tier(plan.n_groups),
-                n_requests=self.scheduler.max_wave,
-                n_inject=self.scheduler.inject_tier(plan.n_hits)
-                if plan.inject is not None else None)
-            handoff = self._server_stage(self.server_params, self._key,
-                                         padded.tables)
-            if use_cache:
-                for g in range(plan.n_groups):
-                    # zero-step (ICM) prefixes are uncacheable by design;
-                    # don't churn the rejected counter every wave.  The
-                    # inserted handoff row may still be an un-materialized
-                    # future — size/dtype come from the aval, and a later
-                    # wave's hit just chains on the device computation —
-                    # so this fill point matches the sequential loop's
-                    # exactly and cache behavior stays bitwise identical.
-                    if plan.group_steps[g] > 0:
-                        self.cache.insert(
-                            self._cache_key(plan.group_keys[g]),
-                            handoff[g], plan.group_steps[g])
-            out = self._client_stage(self.client_params, self._key,
-                                     padded.tables, handoff, padded.inject)
-            inflight.append((out, wave))
-            for k_, v in call_accounting(padded).items():
-                acc[k_] += v
-            dedup_saved += plan.server_steps_saved
-            cache_saved += plan.server_steps_saved_by_cache
-            rg = np.asarray(plan.tables.request_group)
-            from_cache += int((rg >= plan.n_groups).sum())
-            sigs.setdefault(wave.bucket.label(), set()).add(
-                plan_signature(padded))
-            while len(inflight) > (1 if cfg.pipeline else 0):
-                retire()
-        while inflight:
-            retire()
-        wall = time.perf_counter() - t_start
-        lat = np.asarray(latencies)
-        n_samples = sum(int(r.y.shape[0]) for r in queue)
-        # one schema: _empty_report defines every key, this fills them in
+    def finish_report(self) -> Dict:
+        """Close the open frame and return its report.  Legal while
+        requests are still pending/in flight (a long-lived service
+        reports periodically): the frame covers what RETIRED during it;
+        in-flight work lands in the next frame."""
+        f, self._frame = self._frame, None
+        if f is None:
+            raise RuntimeError("finish_report without start_report")
+        wall = time.perf_counter() - f.t0
+        done = f.retired
+        lat = np.asarray([t.latency_s for t in done], np.float64)
+        wait = np.asarray([t.admit_wait_s for t in done], np.float64)
+        pct = lambda a, q: float(np.percentile(a, q)) if a.size else 0.0
+        tracked = [t for t in done if t.slo_s is not None]
+        misses = sum(1 for t in tracked if t.slo_miss)
         report = self._empty_report()
         report.update({
-            "requests": len(queue), "waves": len(waves),
-            "buckets": len(sigs), "wall_s": wall,
-            "req_per_s": len(queue) / wall,
-            "samples_per_s": n_samples / wall,
-            "latency_p50_s": float(np.percentile(lat, 50)),
-            "latency_p95_s": float(np.percentile(lat, 95)),
-            **acc,
-            "server_calls_saved_by_dedup": dedup_saved,
-            "server_calls_saved_by_cache": cache_saved,
-            "requests_from_cache": from_cache,
-            "engine_traces": self.traces - traces0,
-            "signatures_per_bucket": {b: len(s) for b, s in sigs.items()},
-            "max_signatures_per_bucket": max(len(s) for s in sigs.values()),
+            "requests": len(done), "waves": f.waves,
+            "buckets": len(f.sigs), "wall_s": wall,
+            "req_per_s": len(done) / wall if wall > 0 else 0.0,
+            "samples_per_s": f.n_samples / wall if wall > 0 else 0.0,
+            "latency_p50_s": pct(lat, 50),
+            "latency_p95_s": pct(lat, 95),
+            "latency_p99_s": pct(lat, 99),
+            "admit_wait_p50_s": pct(wait, 50),
+            "admit_wait_p95_s": pct(wait, 95),
+            "slo_tracked": len(tracked), "slo_misses": misses,
+            "slo_miss_rate": misses / len(tracked) if tracked else 0.0,
+            "per_request": [t.as_row(f.t0) for t in done],
+            **f.acc,
+            "server_calls_saved_by_dedup": f.dedup_saved,
+            "server_calls_saved_by_cache": f.cache_saved,
+            "requests_from_cache": f.from_cache,
+            "engine_traces": self.traces - f.traces0,
+            "signatures_per_bucket": {b: len(s)
+                                      for b, s in f.sigs.items()},
+            "max_signatures_per_bucket": max(
+                (len(s) for s in f.sigs.values()), default=0),
         })
         if self.cache is not None:
-            s = self.cache.stats
+            s, c0 = self.cache.stats, f.cache0
             d_hits, d_miss = s.hits - c0.hits, s.misses - c0.misses
             report.update({
                 "cache_hits": d_hits, "cache_misses": d_miss,
@@ -343,7 +435,238 @@ class ServeRuntime:
                 "cache_entries": len(self.cache),
                 "cache_bytes": s.bytes_in_use,
             })
-        return outputs, report
+        return report
+
+    # -- wave execution (shared by process and poll) -----------------------
+    def _stall(self, seconds: float) -> None:
+        """Host-side stall (slow arrivals, planning, IO).  Sleeps in
+        ~1 ms slices, probing the in-flight window between slices, so a
+        wave finishing on-device mid-stall is retired (and its latency
+        time-stamped) the moment it is observably done — not after the
+        stall plus the next dispatch.  Sleep releases the GIL, so in
+        pipeline mode the accelerator keeps chewing the in-flight waves
+        underneath it."""
+        deadline = time.perf_counter() + seconds
+        while True:
+            self._reap()
+            rem = deadline - time.perf_counter()
+            if rem <= 0.0:
+                return
+            time.sleep(min(rem, 0.001))
+
+    def _reap(self) -> None:
+        """Retire every in-flight wave whose result is observably ready
+        (oldest first; retirement order is FIFO regardless of probing)."""
+        while self._inflight and _is_ready(self._inflight[0][0]):
+            self._retire(block=True)       # ready ⇒ returns immediately
+
+    def _retire(self, block: bool = True) -> bool:
+        """Retire the oldest in-flight wave: block on (or probe) its
+        result, stamp ``t_retire`` at the moment completion is OBSERVED,
+        and scatter outputs to tickets.  Returns False if non-blocking
+        and the result is not ready (or nothing is in flight)."""
+        if not self._inflight:
+            return False
+        if not block and not _is_ready(self._inflight[0][0]):
+            return False
+        out, tickets = self._inflight.popleft()
+        jax.block_until_ready(out)
+        now = time.perf_counter()
+        for j, t in enumerate(tickets):
+            t.t_retire = now
+            t.output = out[j]
+        self._frame.retired.extend(tickets)
+        return True
+
+    def _dispatch(self, label: str, tickets: List[RequestTicket]) -> None:
+        """Plan and dispatch one wave of tickets (all one bucket for
+        depth/continuous; one B for fifo).  Stamps admit before planning
+        and dispatch after the engine stages are launched; appends the
+        un-materialized output to the in-flight window."""
+        cfg = self.config
+        if cfg.straggle_s > 0.0:
+            self._stall(cfg.straggle_s)
+        now = time.perf_counter()
+        for t in tickets:
+            t.t_admit = now
+        use_cache = self.cache is not None
+        plan = plan_requests(
+            [t.request for t in tickets], cfg.T, adjusted=cfg.adjusted,
+            n_clients=self.n_clients,
+            server_stride=cfg.server_stride,
+            group_seed_fn=stable_group_seed,
+            # arrival ids grow forever; mask to int31 for the tables
+            # (a seed epoch repeats only after ~2.1e9 requests)
+            request_seeds=[t.rid & 0x7FFFFFFF for t in tickets],
+            lookup_fn=self._lookup if use_cache else None,
+            image_shape=cfg.image_shape if use_cache else None)
+        check_engine_plan(cfg.server_stride > 1, plan)
+        padded = pad_plan(
+            plan,
+            n_groups=self.scheduler.group_tier(plan.n_groups),
+            n_requests=self.scheduler.max_wave,
+            n_inject=self.scheduler.inject_tier(plan.n_hits)
+            if plan.inject is not None else None)
+        handoff = self._server_stage(self.server_params, self._key,
+                                     padded.tables)
+        if use_cache:
+            for g in range(plan.n_groups):
+                # zero-step (ICM) prefixes are uncacheable by design;
+                # don't churn the rejected counter every wave.  The
+                # inserted handoff row may still be an un-materialized
+                # future — size/dtype come from the aval, and a later
+                # wave's hit just chains on the device computation —
+                # so this fill point matches the sequential loop's
+                # exactly and cache behavior stays bitwise identical.
+                if plan.group_steps[g] > 0:
+                    self.cache.insert(
+                        self._cache_key(plan.group_keys[g]),
+                        handoff[g], plan.group_steps[g])
+        out = self._client_stage(self.client_params, self._key,
+                                 padded.tables, handoff, padded.inject)
+        self._inflight.append((out, tuple(tickets)))
+        f = self._frame
+        for k_, v in call_accounting(padded).items():
+            f.acc[k_] += v
+        f.dedup_saved += plan.server_steps_saved
+        f.cache_saved += plan.server_steps_saved_by_cache
+        rg = np.asarray(plan.tables.request_group)
+        f.from_cache += int((rg >= plan.n_groups).sum())
+        f.sigs.setdefault(label, set()).add(plan_signature(padded))
+        f.waves += 1
+        f.n_samples += sum(int(t.request.y.shape[0]) for t in tickets)
+        td = time.perf_counter()
+        for t in tickets:
+            t.t_dispatch = td
+
+    def _make_ticket(self, r: SampleRequest, slo_s: Optional[float],
+                     enqueue_t: Optional[float]) -> RequestTicket:
+        t = RequestTicket(
+            rid=self._next_rid, request=r,
+            slo_s=r.slo_s if r.slo_s is not None else slo_s,
+            t_enqueue=time.perf_counter() if enqueue_t is None
+            else enqueue_t)
+        self._next_rid += 1
+        return t
+
+    # -- continuous admission (policy="continuous") ------------------------
+    @property
+    def busy(self) -> bool:
+        """True while any request is pending admission or in flight."""
+        return bool(self._inflight) or \
+            any(len(q) > 0 for q in self._pending.values())
+
+    def submit(self, requests: Sequence[SampleRequest],
+               slo_s: Optional[float] = None,
+               enqueue_t: Optional[Sequence[float]] = None
+               ) -> List[RequestTicket]:
+        """Enqueue requests for continuous admission; returns their
+        tickets (outputs land on ``ticket.output`` at retirement).
+        ``slo_s`` is the deadline default for requests that don't carry
+        their own; ``enqueue_t`` overrides the enqueue timestamps with
+        caller-side arrival times (absolute ``time.perf_counter``
+        seconds — the open-loop benchmark charges pre-submit queueing to
+        the latency gauge this way).  Only the continuous policy admits
+        incrementally; depth/fifo admit at queue-drain boundaries
+        through process()."""
+        if self.config.policy != "continuous":
+            raise ValueError(
+                f"submit() requires policy='continuous' (got "
+                f"{self.config.policy!r}); depth/fifo admit whole queues "
+                "via process()")
+        if enqueue_t is not None and len(enqueue_t) != len(requests):
+            raise ValueError(f"{len(enqueue_t)} enqueue_t for "
+                             f"{len(requests)} requests")
+        if self._frame is None:
+            self.start_report()
+        tickets = []
+        for i, r in enumerate(requests):
+            t = self._make_ticket(
+                r, slo_s, None if enqueue_t is None else enqueue_t[i])
+            self._pending.setdefault(self.scheduler.bucket_of(r),
+                                     deque()).append(t)
+            tickets.append(t)
+        return tickets
+
+    def poll(self, block: bool = False) -> List[RequestTicket]:
+        """One admission turn: retire observably-finished waves, then —
+        while the in-flight window has room — form and dispatch waves
+        from the pending deques (scheduler.admit).  ``block=True``
+        additionally forces the oldest in-flight wave to retire, which
+        guarantees progress (drain() is poll(block=True) to emptiness).
+        Returns the tickets retired during this call."""
+        if self._frame is None:
+            self.start_report()
+        done0 = len(self._frame.retired)
+        self._reap()
+        window = 2 if self.config.pipeline else 1
+        while len(self._inflight) < window:
+            admitted = self.scheduler.admit(self._pending)
+            if admitted is None:
+                break
+            bucket, tickets = admitted
+            self._dispatch(bucket.label(), list(tickets))
+            self._reap()
+        if block and self._inflight:
+            self._retire(block=True)
+        return self._frame.retired[done0:]
+
+    def drain(self) -> List[RequestTicket]:
+        """Poll until nothing is pending or in flight; returns all
+        tickets retired along the way."""
+        done: List[RequestTicket] = []
+        while self.busy:
+            done.extend(self.poll(block=True))
+        return done
+
+    # -- the loop ----------------------------------------------------------
+    def process(self, queue: Sequence[SampleRequest],
+                slo_s: Optional[float] = None,
+                enqueue_t: Optional[Sequence[float]] = None
+                ) -> Tuple[List[jnp.ndarray], Dict]:
+        """Drain ``queue``; returns (outputs in arrival order — one
+        (B, *image_shape) array per request — and the serve report for
+        THIS call: latency/SLO accounting, throughput, logical savings,
+        physical padding overhead, cache deltas, recompiles and
+        signatures per bucket).
+
+        ``config.pipeline=True`` keeps up to two waves in flight
+        (dispatch wave i+1 while wave i still runs — see module notes);
+        ``False`` is the barrier-per-wave baseline.  Under
+        ``policy="continuous"`` the call is submit + drain over the
+        incremental admission loop.  Outputs and cache behavior are
+        bitwise identical across all of it; ``slo_s``/``enqueue_t`` (see
+        submit()) only affect accounting."""
+        if self.busy:
+            raise RuntimeError("process() while continuous requests are "
+                               "pending/in flight; drain() first")
+        if self._frame is not None:
+            raise RuntimeError("process() inside an open report frame; "
+                               "finish_report() first")
+        if not queue:
+            return [], self._empty_report()
+        if enqueue_t is not None and len(enqueue_t) != len(queue):
+            raise ValueError(f"{len(enqueue_t)} enqueue_t for "
+                             f"{len(queue)} requests")
+        self.start_report()
+        if self.config.policy == "continuous":
+            tickets = self.submit(queue, slo_s=slo_s, enqueue_t=enqueue_t)
+            self.drain()
+        else:
+            tickets = [self._make_ticket(
+                r, slo_s, None if enqueue_t is None else enqueue_t[i])
+                for i, r in enumerate(queue)]
+            for wave in self.scheduler.waves(queue):
+                self._reap()
+                self._dispatch(wave.bucket.label(),
+                               [tickets[qi] for qi in wave.queue_idx])
+                while len(self._inflight) > \
+                        (1 if self.config.pipeline else 0):
+                    self._retire(block=True)
+            while self._inflight:
+                self._retire(block=True)
+        outputs = [t.output for t in tickets]
+        return outputs, self.finish_report()
 
 
 def plan_signature(plan: SamplePlan) -> tuple:

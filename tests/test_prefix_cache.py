@@ -114,11 +114,45 @@ def test_distinct_keys_do_not_alias():
     assert len(c) == 6
 
 
-def test_clear_and_validation():
+def test_clear_starts_fresh_epoch():
+    """clear() is an EPOCH boundary: every epoch stat resets (the old
+    half-reset zeroed bytes_in_use but leaked peak_bytes and hit/miss
+    counters, so post-clear hit rates and peaks lied), while the drop
+    stays visible through the lifetime clears/cleared_entries counters —
+    NOT through evictions, which mean capacity pressure."""
     c = PrefixCache(max_bytes=1 << 20)
-    c.insert("a", _h(1.0), 1)
+    c.insert("a", _h(1.0), 3)
+    c.insert("b", _h(2.0), 2)
+    assert c.lookup("a") is not None
+    assert c.lookup("zzz") is None
+    pre = c.stats
+    assert (pre.hits, pre.misses, pre.insertions) == (1, 1, 2)
+    assert pre.peak_bytes > 0 and pre.server_calls_saved == 3
+
     c.clear()
-    assert len(c) == 0 and c.stats.bytes_in_use == 0
+    s = c.stats
+    assert len(c) == 0
+    # epoch stats: ALL zero, including the previously-leaked fields
+    assert (s.hits, s.misses, s.insertions, s.evictions, s.rejected) == \
+        (0, 0, 0, 0, 0)
+    assert s.bytes_in_use == 0 and s.peak_bytes == 0
+    assert s.server_calls_saved == 0
+    assert s.hit_rate == 0.0 and s.lookups == 0      # no NaN on 0/0
+    # lifetime counters: the drop is visible, and it is not an eviction
+    assert s.clears == 1 and s.cleared_entries == 2
+
+    # epochs accumulate; an empty clear counts the epoch, drops nothing
+    c.insert("c", _h(3.0), 1)
+    c.clear()
+    c.clear()
+    assert c.stats.clears == 3 and c.stats.cleared_entries == 3
+
+    # the new epoch records its own peak from zero
+    c.insert("d", _h(4.0), 1)
+    assert c.stats.peak_bytes == c.stats.bytes_in_use > 0
+
+
+def test_validation():
     with pytest.raises(ValueError):
         PrefixCache(max_bytes=-1)
     with pytest.raises(ValueError):

@@ -334,3 +334,283 @@ def test_pad_plan_validation():
         ServeRuntime(cfg_bad, SP, CP, apply_fn,
                      DiffusionSchedule.linear(T + 1),
                      jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Continuous admission (PR 7): admission timing is a pure performance knob
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_bitwise_equals_depth():
+    """policy="continuous" (admission at wave boundaries) must produce
+    bitwise the same outputs as policy="depth" (admission at queue-drain
+    boundaries) for the same arrival order — seeds are arrival-/content-
+    stable and partial-wave padding is inert, so WHEN a request is bound
+    into a wave can never leak into its samples."""
+    cont, depth = _rt(policy="continuous"), _rt(policy="depth")
+    q = _queue()
+    for _ in range(3):                      # cold / warm / steady
+        outs_c, rep_c = cont.process(q)
+        outs_d, rep_d = depth.process(q)
+        _assert_same(outs_c, outs_d)
+    # steady state: zero re-traces, and no signature outside depth's menu
+    assert rep_c["engine_traces"] == 0
+    assert rep_c["max_signatures_per_bucket"] == 1
+    assert set(rep_c["signatures_per_bucket"]) <= \
+        set(rep_d["signatures_per_bucket"])
+
+
+def test_continuous_submit_poll_matches_process():
+    """The incremental submit()/poll() loop is the same code path as
+    process(): one-at-a-time submission over a live poll loop retires
+    every ticket with bitwise the outputs a depth process() call returns,
+    and drain() leaves the runtime idle."""
+    cont, depth = _rt(policy="continuous"), _rt(policy="depth")
+    q = _queue()
+    outs_d, _ = depth.process(q)
+    tickets, done = [], []
+    for r in q:                              # open-loop, one per submit
+        tickets.extend(cont.submit([r]))
+        done.extend(cont.poll())             # non-blocking admission turn
+    done.extend(cont.drain())
+    assert not cont.busy
+    assert sorted(t.rid for t in done) == [t.rid for t in tickets]
+    rep = cont.finish_report()
+    assert rep["requests"] == len(q)
+    _assert_same([t.output for t in tickets], outs_d)
+
+
+def test_continuous_partial_wave_padding_invariance():
+    """A request served alone in a partially-refilled wave is bitwise the
+    request served inside a full wave (same arrival id ⇒ same seeds;
+    pad_plan's inert rows carry the rest)."""
+    solo, full = _rt(policy="continuous"), _rt(policy="depth")
+    r = _req(0, 4, 0)
+    outs_solo, rep = solo.process([r])           # 1-request wave
+    outs_full, _ = full.process([r, _req(1, 4, 1),
+                                 _req(2, 4, 0), _req(0, 4, 1)])
+    _assert_same(outs_solo, outs_full[:1])       # both hold arrival id 0
+    assert rep["requests"] == 1 and rep["waves"] == 1
+
+
+def test_submit_requires_continuous_policy():
+    with pytest.raises(ValueError):
+        _rt(policy="depth").submit([_req(0, 4, 0)])
+
+
+def test_process_refused_while_continuous_busy():
+    rt = _rt(policy="continuous")
+    rt.submit([_req(0, 4, 0)])
+    with pytest.raises(RuntimeError):
+        rt.process([_req(1, 8, 1)])
+    rt.drain()
+    rt.finish_report()
+    rt.process([_req(1, 8, 1)])                  # idle again → fine
+
+
+# ---------------------------------------------------------------------------
+# Per-request SLO + latency accounting (PR 7)
+# ---------------------------------------------------------------------------
+
+
+def test_ticket_timestamps_monotone():
+    """enqueue ≤ admit ≤ dispatch ≤ retire on every ticket, and the
+    report rows carry the same ordering relative to the frame start."""
+    rt = _rt(policy="continuous")
+    tickets = rt.submit(_queue())
+    rt.drain()
+    rep = rt.finish_report()
+    for t in tickets:
+        assert t.t_enqueue <= t.t_admit <= t.t_dispatch <= t.t_retire
+        assert t.latency_s > 0.0 and t.admit_wait_s >= 0.0
+    for row in rep["per_request"]:
+        assert 0.0 <= row["admit_s"] <= row["dispatch_s"] <= row["retire_s"]
+    # rows are in RETIREMENT order (waves interleave buckets), but every
+    # submitted ticket retires exactly once
+    assert sorted(row["rid"] for row in rep["per_request"]) == \
+        [t.rid for t in tickets]
+
+
+def test_slo_accounting_default_and_override():
+    """slo_s is accounting only: the per-call default applies to requests
+    without their own deadline, a per-request slo_s overrides it, and a
+    0.0-second deadline is tracked and missed (falsy-zero guard)."""
+    rt = _rt(policy="continuous")
+    q = [_req(0, 4, 0),                                   # default slo
+         dataclasses.replace(_req(1, 8, 1), slo_s=1e4),   # generous
+         dataclasses.replace(_req(2, 4, 0), slo_s=0.0),   # impossible
+         _req(0, 8, 1)]                                   # default slo
+    _, rep = rt.process(q, slo_s=1e-12)
+    assert rep["slo_tracked"] == 4
+    # defaults (1e-12 s) and the 0.0 deadline miss; the 1e4 s one holds
+    assert rep["slo_misses"] == 3
+    assert rep["slo_miss_rate"] == pytest.approx(0.75)
+    rows = {r["rid"]: r for r in rep["per_request"]}
+    assert rows[1]["slo_s"] == 1e4 and not rows[1]["slo_miss"]
+    assert rows[2]["slo_s"] == 0.0 and rows[2]["slo_miss"]
+    # no deadlines anywhere → nothing tracked, rate 0.0 (not NaN)
+    _, rep2 = _rt(policy="depth").process(_queue())
+    assert rep2["slo_tracked"] == 0 and rep2["slo_miss_rate"] == 0.0
+
+
+def test_open_loop_enqueue_t_charges_queueing_delay():
+    """enqueue_t back-dates a request's arrival (open-loop load): its
+    latency must include the pre-submit queueing the caller measured."""
+    import time as _time
+    rt = _rt(policy="depth")
+    t0 = _time.perf_counter()
+    _, rep = rt.process([_req(0, 4, 0)], enqueue_t=[t0 - 1.0])
+    row = rep["per_request"][0]
+    assert row["latency_s"] >= 1.0 and row["enqueue_s"] < 0.0
+    with pytest.raises(ValueError):
+        rt.process([_req(0, 4, 0)], enqueue_t=[t0, t0])   # length mismatch
+
+
+def test_pipelined_latency_not_inflated_by_retirement():
+    """Satellite 3 (the latency-accounting audit): recorded latency is
+    enqueue → OBSERVED completion, via a ready probe that runs during
+    stalls and polls.  Pre-PR-7, a pipelined wave retired only when the
+    in-flight window filled — so with a straggle stall per wave, wave
+    i's recorded latency absorbed wave i+1's whole stall (≈ 2× stall
+    for the first wave).  Post-fix, both modes record ≈ one stall plus
+    device time for the first wave."""
+    stall = 0.08
+    q = [_req(i % K, 4, i % 2) for i in range(8)]   # one bucket, 2 waves
+    for pipeline in (False, True):
+        rt = _rt(cache=False, pipeline=pipeline, straggle_s=stall)
+        rt.process(q)                    # warm-up: compile both stages
+        _, rep = rt.process(q)
+        first_wave = [r for r in rep["per_request"] if r["rid"] < 12]
+        assert len(first_wave) == 4
+        worst = max(r["latency_s"] for r in first_wave)
+        # pre-fix pipelined: ≥ 2 stalls (~0.16 s); post-fix: ~1 stall
+        assert worst < 1.5 * stall, (pipeline, worst)
+        # the queue still pays both stalls overall
+        assert rep["wall_s"] >= 2 * stall
+
+
+# ---------------------------------------------------------------------------
+# fifo mixed-batch arrival order (PR-7 satellite) + admit semantics
+# ---------------------------------------------------------------------------
+
+
+def _req_b(client: int, t_cut: int, label: int, batch: int) -> SampleRequest:
+    y = np.broadcast_to(np.eye(NC, dtype=np.float32)[label],
+                        (batch, NC)).copy()
+    return SampleRequest(client=client, t_cut=t_cut, y=y)
+
+
+def test_fifo_mixed_batch_stays_in_arrival_order():
+    """Regression: fifo waves were keyed by (t_cut=-1, B) buckets, so a
+    mixed-batch queue was silently re-bucketed by B — out of arrival
+    order, contradicting the policy's contract.  fifo now chunks in
+    arrival order, breaking a wave when B changes (one plan = one B)."""
+    from repro.serve.scheduler import WaveScheduler
+
+    sch = WaveScheduler(max_wave=4, policy="fifo")
+    q = [_req_b(0, 4, 0, 2), _req_b(1, 8, 1, 2), _req_b(2, 4, 0, 4),
+         _req_b(0, 8, 1, 2), _req_b(1, 4, 0, 4), _req_b(2, 8, 1, 4)]
+    waves = sch.waves(q)
+    # arrival order preserved end to end (pre-fix: [0, 1, 3, 2, 4, 5])
+    assert [i for w in waves for i in w.queue_idx] == list(range(6))
+    # every wave is single-B, and B breaks force the expected chunking
+    for w in waves:
+        assert len({r.y.shape[0] for r in w.requests}) == 1
+    assert [list(w.queue_idx) for w in waves] == [[0, 1], [2], [3], [4, 5]]
+    # uniform-B queues keep the PR-3 chunking exactly
+    uni = sch.waves(_queue())
+    assert [list(w.queue_idx) for w in uni] == [[0, 1, 2, 3], [4, 5, 6, 7]]
+
+    # end to end: mixed-B fifo serves bitwise what depth serves
+    fifo, depth = _rt(policy="fifo"), _rt(policy="depth")
+    outs_f, _ = fifo.process(q)
+    outs_d, _ = depth.process(q)
+    _assert_same(outs_f, outs_d)
+
+
+def test_admit_pops_oldest_head_first():
+    """scheduler.admit is FIFO across buckets: the bucket whose HEAD
+    ticket arrived earliest dispatches next, up to max_wave tickets."""
+    from collections import OrderedDict, deque
+    from types import SimpleNamespace
+
+    from repro.serve.scheduler import WaveBucket, WaveScheduler
+
+    sch = WaveScheduler(max_wave=2, policy="continuous")
+    bA, bB = WaveBucket(4, 2), WaveBucket(8, 2)
+    pending = OrderedDict()
+    pending[bA] = deque(SimpleNamespace(rid=r) for r in (5, 6, 9))
+    pending[bB] = deque(SimpleNamespace(rid=r) for r in (3,))
+    got = []
+    while (adm := sch.admit(pending)) is not None:
+        b, take = adm
+        got.append((b, [t.rid for t in take]))
+    assert got == [(bB, [3]), (bA, [5, 6]), (bA, [9])]
+    assert all(not q_ for q_ in pending.values())
+
+
+# ---------------------------------------------------------------------------
+# Report edge cases + key rotation (PR-7 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_report_edge_cases_schema_complete():
+    """Empty queue, single request, and all-hits traffic all produce the
+    SAME report schema with finite values — zero (never NaN) percentiles
+    and a 0.0 hit rate when there were no lookups."""
+    import math
+
+    rt = _rt(cache=True)
+    empty = rt.process([])[1]
+    single = rt.process([_req(0, 4, 0)])[1]
+    rt.process(_queue())
+    all_hits = rt.process(_queue())[1]          # warm: every prefix hits
+    assert set(empty) == set(single) == set(all_hits)
+    for k in ("latency_p50_s", "latency_p95_s", "latency_p99_s",
+              "admit_wait_p50_s", "admit_wait_p95_s", "slo_miss_rate",
+              "cache_hit_rate", "req_per_s", "samples_per_s"):
+        assert empty[k] == 0.0, k
+    assert empty["per_request"] == [] and empty["requests"] == 0
+    assert single["requests"] == 1 and single["latency_p50_s"] > 0.0
+    assert single["latency_p50_s"] <= single["latency_p99_s"]
+    assert all_hits["cache_misses"] == 0 and all_hits["cache_hit_rate"] == 1.0
+    for rep in (empty, single, all_hits):
+        for k, v in rep.items():
+            if isinstance(v, float):
+                assert math.isfinite(v), (k, v)
+
+
+def test_rotate_key_starts_fresh_cache_epoch():
+    """rotate_key swaps the base PRNG key and clears the cache (every
+    entry is addressed by the old key fingerprint — permanently
+    unreachable); it refuses to run mid-stream or mid-frame."""
+    rt = _rt(seed=0, cache=True)
+    q = _queue()
+    outs_old, _ = rt.process(q)
+    assert len(rt.cache) > 0
+    rt.rotate_key(jax.random.PRNGKey(42))
+    assert len(rt.cache) == 0 and rt.cache.stats.clears == 1
+    outs_new, rep = rt.process(q)
+    # a different base key draws different noise — outputs must change
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(outs_old, outs_new))
+    # same key in a fresh runtime (same arrival ids) reproduces bitwise —
+    # which also proves no hit served stale old-key content — and the
+    # post-rotation pass behaves exactly like a cold fill (same in-pass
+    # repeat hits, same misses: nothing carried over)
+    fresh = _rt(seed=42, cache=True)
+    fresh._next_rid = len(q)                    # align arrival ids
+    outs_ref, rep_ref = fresh.process(q)
+    _assert_same(outs_new, outs_ref)
+    assert rep["cache_hits"] == rep_ref["cache_hits"]
+    assert rep["cache_misses"] == rep_ref["cache_misses"]
+
+    busy = _rt(policy="continuous")
+    busy.submit([_req(0, 4, 0)])
+    with pytest.raises(RuntimeError):
+        busy.rotate_key(jax.random.PRNGKey(7))
+    busy.drain()
+    with pytest.raises(RuntimeError):           # frame still open
+        busy.rotate_key(jax.random.PRNGKey(7))
+    busy.finish_report()
+    busy.rotate_key(jax.random.PRNGKey(7))      # idle + closed → fine
