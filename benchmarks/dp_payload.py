@@ -5,6 +5,11 @@ end-to-end (server learns from DP-noised x_{t_s}) and measure:
   * client-side sample fidelity (FD-proxy) — the utility cost,
   * attribute-inference F1 on the ACTUAL shipped payloads — the privacy
     gain on top of the protocol's inherent diffusion noise.
+
+The mechanism under test is privacy/dp.py's ``privatize_payload`` (the
+one audited clip+noise shared with the update-DP path), reached through
+``protocol.make_payload``'s dp_sigma/dp_clip knobs; the clip convention
+is the shared ``privacy.dp.DP_CLIP``.
 """
 from __future__ import annotations
 
@@ -20,12 +25,9 @@ from repro.core.collab import CollabConfig, sample_for_client, setup, train_roun
 from repro.data.synthetic import SyntheticConfig, batches, make_client_datasets
 from repro.eval.attr_inference import attribute_inference_f1
 from repro.eval.fd_proxy import fd_proxy
+from repro.privacy.dp import DP_CLIP
 
 T, T_CUT = 80, 16
-# clip ≈ the typical payload L2 norm at 8×8×3 (≈ sqrt(192) ≈ 14): the clip
-# is then mostly inactive and the Gaussian noise std = σ·clip is in
-# meaningful units of the (≈unit-variance) payload.
-DP_CLIP = 16.0
 SIGMAS = [0.0, 0.02, 0.06]
 N_EVAL = 96
 

@@ -1,0 +1,141 @@
+"""PR 9 deliverable — the privacy–utility FRONTIER of the DP-FedAvg
+subsystem (privacy/), measured on the repo's existing attack harness.
+
+For each target ε ∈ {1, 8, ∞} the ACCOUNTANT runs backwards
+(privacy.accountant.noise_multiplier_for_epsilon) to calibrate the noise
+multiplier a planned run of R DP releases needs, the federated train
+runtime (train/runtime.py) trains 2 non-IID clients under that
+PrivacyConfig (update clipping + noised cohort aggregation at every
+fedavg boundary; ε=∞ is the disabled config — today's runtime,
+bitwise), and we measure both axes:
+
+  * UTILITY — FD-proxy between each client's real data and its
+    collaborative samples (Alg. 2 under the trained broadcast nets):
+    the image-quality cost of the noise;
+  * ATTACK SUCCESS — the existing harness pointed at what the privacy
+    subsystem actually defends, the shared (broadcast) nets:
+      - attribute-inference F1 on broadcast-net samples conditioned on
+        the VICTIM's labels (eval/attr_inference — does the shared net
+        reproduce the victim's attribute structure?),
+      - cross-client inversion (eval/inversion): a reconstructor
+        trained on the attacker's (sample, real) pairs attacking the
+        victim's samples → victim-real recovery (mse_cross/fd_cross).
+
+Frontier claim (paper §5 / Patel et al. 2504.00952): as ε tightens,
+attack success degrades toward chance while FD rises — privacy is
+bought with fidelity, and the accountant prices the exchange.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json
+from repro.core.collab import CollabConfig, build_denoiser
+from repro.core.sampler import collaborative_sample
+from repro.data.synthetic import SyntheticConfig, make_client_datasets
+from repro.eval.attr_inference import attribute_inference_f1
+from repro.eval.fd_proxy import fd_proxy
+from repro.eval.inversion import inversion_attack
+from repro.privacy import PrivacyConfig, noise_multiplier_for_epsilon
+from repro.train import ParticipationConfig, TrainConfig, TrainRuntime
+
+EPSILONS = [1.0, 8.0, math.inf]
+DELTA = 1e-5
+UPDATE_CLIP = 1.0          # the per-member window-delta L2 clip C
+T, T_CUT = 80, 16
+ROUNDS = 4                 # fedavg_every=1 → one DP release per round
+N_EVAL = 96
+
+
+def _runtime(key, args_rounds, sigma, init_one, apply_fn, data,
+             batches_per_round):
+    privacy = (PrivacyConfig() if sigma == 0.0 else
+               PrivacyConfig(clip=UPDATE_CLIP, noise_multiplier=sigma,
+                             delta=DELTA))
+    cfg = TrainConfig(
+        T=T, t_cut=T_CUT, image_shape=(8, 8, 3), n_classes=8,
+        batch_size=8, batches_per_round=batches_per_round, lr=2e-3,
+        participation=ParticipationConfig(policy="full"),
+        privacy=privacy, fedavg_every=1)
+    rt = TrainRuntime(cfg, init_one, apply_fn, key)
+    for (x, y) in data:
+        rt.register_client(x, y)
+    return rt
+
+
+def main(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    epsilons = EPSILONS if not quick else [1.0, math.inf]
+    rounds = ROUNDS if not quick else 2
+    n_eval = N_EVAL if not quick else 48
+    batches_per_round = 8 if not quick else 4
+
+    ccfg = CollabConfig(n_clients=2, T=T, t_cut=T_CUT, image_size=8,
+                        batch_size=8, n_classes=8)
+    init_one, apply_fn = build_denoiser(key, ccfg)
+    dcfg = SyntheticConfig(image_size=8, n_attrs=8)
+    data = make_client_datasets(key, dcfg, 2, 256 if not quick else 128,
+                                non_iid=True)
+    sched, cut = ccfg.sched(), ccfg.cut()
+
+    rows = []
+    for eps in epsilons:
+        # the accountant runs backwards: σ for a planned run of `rounds`
+        # full-participation releases landing at ≤ eps (∞ → σ=0, the
+        # disabled config — today's runtime bitwise)
+        sigma = noise_multiplier_for_epsilon(eps, DELTA, rounds, 1.0)
+        rt = _runtime(key, rounds, sigma, init_one, apply_fn, data,
+                      batches_per_round)
+        reps = rt.run(rounds)
+        eps_spent = reps[-1]["dp_epsilon"]
+
+        samples, fds = [], []
+        for c, (x, y) in enumerate(data):
+            samp = collaborative_sample(
+                rt.sampling_server_params(), rt.registry.get(c).params,
+                jax.random.fold_in(key, 60 + c), y[:n_eval],
+                (n_eval, 8, 8, 3), sched, cut, apply_fn)
+            samples.append(samp)
+            fds.append(fd_proxy(x[:n_eval], samp))
+        fd = sum(fds) / len(fds)
+
+        # attacks point at the broadcast nets: client 1 is the victim,
+        # client 0 the attacker holding the shared model
+        (x_att, y_att), (x_vic, y_vic) = data
+        f1 = float(attribute_inference_f1(
+            jax.random.fold_in(key, 7), samples[1], y_vic[:n_eval]).mean())
+        inv = inversion_attack(jax.random.fold_in(key, 8),
+                               samples[0], x_att[:n_eval],
+                               samples[1], x_vic[:n_eval])
+        rows.append({"epsilon_target": eps, "epsilon_spent": eps_spent,
+                     "sigma": sigma, "fd": fd, "attr_f1": f1,
+                     "inv_mse_cross": inv["mse_cross"],
+                     "inv_fd_cross": inv["fd_cross"]})
+        emit(f"privacy_frontier/eps={eps}", 0.0,
+             f"sigma={sigma:.3f};eps_spent={eps_spent:.2f};fd={fd:.3f};"
+             f"attr_f1={f1:.3f};inv_fd_cross={inv['fd_cross']:.3f}")
+
+    tight, free = rows[0], rows[-1]
+    summary = {
+        "rows": rows, "delta": DELTA, "update_clip": UPDATE_CLIP,
+        "rounds": rounds,
+        # the frontier's two directions: tightening ε must not IMPROVE
+        # the attack, and the accountant must never overspend its target
+        "claim_privacy_improves": tight["attr_f1"]
+        <= free["attr_f1"] + 0.05,
+        "claim_accountant_within_target": all(
+            r["epsilon_spent"] <= r["epsilon_target"] + 1e-6
+            for r in rows if math.isfinite(r["epsilon_target"])),
+    }
+    save_json("privacy_frontier", summary)
+    emit("privacy_frontier/summary", 0.0,
+         f"privacy_improves={summary['claim_privacy_improves']};"
+         f"within_target={summary['claim_accountant_within_target']}")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,10 @@ Suites:
   fidelity_sweep       paper Fig. 4 (top): FD vs cut point, GM/ICM baselines
   attr_inference_sweep paper Fig. 7: attribute-inference F1 vs cut point
   inversion_sweep      paper Fig. 8: cross-client inversion vs cut point
+  privacy_frontier     PR 9: DP-FedAvg privacy–utility frontier at
+                       ε ∈ {1, 8, ∞} (accountant-calibrated σ) — attack
+                       success (attr-inference F1 + inversion on the
+                       broadcast nets) vs FD-proxy
   compute_split        paper contribution 2: client compute share + comms
   m_remap_ablation     paper §4.2: Alg.-2 schedule-remap on/off
   kernel_bench         Pallas-kernel oracle micro-benchmarks
@@ -41,7 +45,8 @@ import time
 SUITES = ["kernel_bench", "collab_round", "collab_sample",
           "collab_serve_runtime", "collab_train_runtime", "compute_split",
           "attr_inference_sweep", "inversion_sweep", "m_remap_ablation",
-          "beyond_paper", "fl_comparison", "dp_payload", "fidelity_sweep"]
+          "beyond_paper", "fl_comparison", "dp_payload", "privacy_frontier",
+          "fidelity_sweep"]
 
 
 def print_roofline_summary():

@@ -36,7 +36,16 @@
 #                              wall-clock (bitwise == lag-free), async
 #                              staleness-weighted merging stays within the
 #                              documented tolerance with no recompile
-#                              regression
+#                              regression, AND a privacy pass (PR 9): the
+#                              neutral --dp-clip/--dp-sigma/--secagg
+#                              values (clip=inf, sigma=0, secagg off) are
+#                              bitwise == baseline (identity ladder), a
+#                              DP run with secagg ON is bitwise == the
+#                              same run with secagg OFF (fixed-point
+#                              pairwise masks cancel exactly at the
+#                              cohort sum), and the reported epsilon is
+#                              finite and monotone non-decreasing
+#                              (RDP accountant)
 #   scripts/ci.sh slow       - only the long system/sampler/U-Net tests
 #   scripts/ci.sh <pytest args...>  - passed through unchanged
 set -euo pipefail

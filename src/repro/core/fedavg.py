@@ -12,7 +12,9 @@ averages the weights and redistributes.
 Costs tracked per round (the comparison axes):
   * client compute — full-model fwd/bwd on every batch AND the full T-step
     sampling chain at inference (no server offload),
-  * communication — 2 × |θ| per client per round (up + down),
+  * communication — 2 × |θ| per CONTRIBUTING client per round (up +
+    down; a client that trained no batch sat the round out and is not
+    charged),
 vs. CollaFuse's t_ζ/T client compute share and O(batch·image) payloads.
 """
 from __future__ import annotations
@@ -79,8 +81,28 @@ def average_weights(client_params: List[Dict], weights=None) -> Dict:
     coefficient per client and is normalized to sum to 1 internally, so raw
     per-client dataset sizes are valid input — [McMahan et al. 2017]'s
     n_c/Σn aggregation for unbalanced clients is ``average_weights(params,
-    sizes)``. Default: uniform (equal-sized clients)."""
+    sizes)``. Default: uniform (equal-sized clients).
+
+    Every client tree must carry the SAME per-leaf dtypes: the accumulate
+    runs in fp32 and the result is restored to the leaf's storage dtype,
+    and with heterogeneous inputs that restore would silently pick client
+    0's dtype — a precision change no one asked for.  Validated up front
+    with a clear error (pinned by tests/test_fedavg.py)."""
     n = len(client_params)
+    if n == 0:
+        raise ValueError("average_weights needs at least one client")
+    ref = [(path, l.dtype) for path, l
+           in jax.tree_util.tree_flatten_with_path(client_params[0])[0]]
+    for c in range(1, n):
+        got = [(path, l.dtype) for path, l
+               in jax.tree_util.tree_flatten_with_path(client_params[c])[0]]
+        for (p0, d0), (p1, d1) in zip(ref, got):
+            if d0 != d1:
+                raise ValueError(
+                    f"average_weights: dtype mismatch at leaf "
+                    f"{jax.tree_util.keystr(p1)}: client 0 has {d0}, "
+                    f"client {c} has {d1} — cast clients to a common "
+                    f"storage dtype before aggregating")
     w = [1.0 / n] * n if weights is None else [float(x) for x in weights]
     if len(w) != n:
         raise ValueError(f"one weight per client: {len(w)} != {n}")
@@ -204,7 +226,13 @@ def fedavg_round(state: FedAvgState, step_fn, batches_per_client, key
     state.global_params = average_weights(
         state.client_params, seen if any(seen) else None)
     per_model = params_nbytes(state.global_params)
-    state.comm_bytes += 2 * per_model * len(state.client_params)  # up + down
+    # comm is priced per CONTRIBUTOR: a zero-batch client sat the round
+    # out — it uploads nothing, and its download is deferred to the next
+    # round it actually joins (where the 2x|θ| it is charged then covers
+    # the sync).  Charging absentees 2x|θ| overstated FedAvg's cost on
+    # partial rounds (regression pinned by tests/test_fedavg.py)
+    n_contrib = sum(1 for s in seen if s > 0)
+    state.comm_bytes += 2 * per_model * n_contrib  # up + down
     state.client_params = [jax.tree.map(jnp.copy, state.global_params)
                            for _ in state.client_params]
     state.round += 1

@@ -101,7 +101,10 @@ def make_payload(x0, y, key, sched: DiffusionSchedule, cut: CutPoint,
     (per-sample L2 clip to dp_clip, then N(0, dp_sigma²·dp_clip²) noise) ON
     TOP of the protocol's inherent diffusion noise. The server's regression
     target ε_s is unchanged — DP noise appears to the server as extra label
-    noise. E8 measures the fidelity/privacy trade-off."""
+    noise. E8 measures the fidelity/privacy trade-off.  The mechanism
+    itself lives in privacy/dp.py (``privatize_payload``) so the payload-DP
+    and update-DP paths share one audited clip+noise — bitwise-equal to the
+    pre-PR-9 inline block (pinned by tests/test_privacy.py)."""
     B = x0.shape[0]
     k_ts, k_es, k_ec, k_dp = jax.random.split(key, 4)
     if eps_c is None:
@@ -111,13 +114,8 @@ def make_payload(x0, y, key, sched: DiffusionSchedule, cut: CutPoint,
     x_cut = sched.q_sample(x0, jnp.full((B,), float(cut.t_cut)), eps_c)
     x_ts = sched.renoise(x_cut, cut.t_cut, t_s, eps_s)
     if dp_sigma > 0.0 and dp_clip > 0.0:
-        flat = x_ts.reshape(B, -1)
-        norm = jnp.linalg.norm(flat.astype(jnp.float32), axis=1,
-                               keepdims=True)
-        scale = jnp.minimum(1.0, dp_clip / jnp.maximum(norm, 1e-9))
-        clipped = (flat * scale).reshape(x_ts.shape)
-        noise = rowwise_normal(k_dp, x_ts.shape)
-        x_ts = (clipped + dp_sigma * dp_clip * noise).astype(x_ts.dtype)
+        from repro.privacy.dp import privatize_payload  # late: no cycle
+        x_ts = privatize_payload(x_ts, k_dp, dp_sigma, dp_clip)
     return ServerPayload(x_ts, eps_s, t_s, y)
 
 

@@ -46,11 +46,19 @@ RNG key, cohort cursor, and in-flight async payloads all compared), and
 (d) straggler-injected overlap invariants: the sync barrier is pure
 wall-clock (lagged run BITWISE equal to the lag-free run with
 barrier_stall_s > 0), async merging stays within the documented atol
-5e-2 tolerance with zero barrier stall and zero recompile regression.
+5e-2 tolerance with zero barrier stall and zero recompile regression,
+and (e) the PR-9 privacy pass — the ``--dp-clip/--dp-sigma/--dp-delta/
+--secagg`` flags' neutral values (clip=inf, σ=0, secagg off) are
+BITWISE equal to the baseline run (the identity ladder), a DP run with
+secagg ON is bitwise equal to the same DP run with secagg OFF (pairwise
+masks cancel exactly in the fixed-point cohort sum), and the reported
+cumulative ε is finite, strictly positive after the first release, and
+monotone non-decreasing across round reports.
 """
 from __future__ import annotations
 
 import argparse
+import math
 import os
 import tempfile
 
@@ -61,8 +69,8 @@ import numpy as np
 from repro.core.collab import CollabConfig, build_denoiser
 from repro.data.synthetic import SyntheticConfig, make_client_datasets
 from repro.sharding.specs import make_client_mesh
-from repro.train import (ParticipationConfig, TrainConfig, TrainRuntime,
-                         participation_tier)
+from repro.train import (ParticipationConfig, PrivacyConfig, TrainConfig,
+                         TrainRuntime, participation_tier)
 
 
 def build_model(args, key):
@@ -88,6 +96,9 @@ def make_train_config(args) -> TrainConfig:
         participation=ParticipationConfig(
             policy=args.policy, p=args.p, cohort_k=args.cohort_k,
             drop_p=args.drop_p, lag_p=args.lag_p, lag_max=args.lag_max),
+        privacy=PrivacyConfig(
+            clip=args.dp_clip, noise_multiplier=args.dp_sigma,
+            delta=args.dp_delta, secagg=args.secagg),
         fedavg_every=args.fedavg_every, ema_decay=args.ema,
         async_mode=args.async_mode, stale_alpha=args.stale_alpha,
         stale_decay=args.stale_decay, lag_s=args.lag_s)
@@ -126,7 +137,10 @@ def print_report(tag: str, rep: dict):
           f"traces={rep['engine_traces']} "
           f"client_loss={rep['client_loss']:.4f} "
           f"server_loss={rep['server_loss']:.4f} "
-          f"fedavg={rep['fedavg_applied']} ({rep['wall_s']:.2f}s)")
+          f"fedavg={rep['fedavg_applied']}"
+          + (f" eps={rep['dp_epsilon']:.3f}@ep{rep['dp_epoch']}"
+             if rep.get("dp_epoch") else "")
+          + f" ({rep['wall_s']:.2f}s)")
 
 
 def _trees_equal(a, b) -> bool:
@@ -154,6 +168,13 @@ def assert_runtimes_bitwise(a: TrainRuntime, b: TrainRuntime) -> None:
         assert _trees_equal(ra.opt, rb.opt), f"client {u} opt"
         assert (ra.seen, ra.window_seen, ra.active) == \
             (rb.seen, rb.window_seen, rb.active), f"client {u} counters"
+    # privacy state (neutral configs: None/0 on both sides)
+    assert a.dp_epoch == b.dp_epoch
+    assert _trees_equal(a._dp_ref, b._dp_ref)
+    if a._accountant is not None or b._accountant is not None:
+        sa, sb = a._accountant.state_dict(), b._accountant.state_dict()
+        assert np.array_equal(sa["rdp"], sb["rdp"]) and \
+            sa["steps"] == sb["steps"]
     # in-flight async payloads (empty in sync mode) are state too
     assert len(a._pending) == len(b._pending)
     order = lambda p: (p["due_round"], p["compute_round"], p["uid"])
@@ -248,12 +269,47 @@ def smoke(args) -> dict:
         assert all(np.allclose(np.asarray(x), np.asarray(y), atol=atol)
                    for x, y in zip(la, lb)), f"client {u} drifted"
 
+    # (e): the PR-9 privacy pass.  (e1) identity ladder — the neutral
+    # flag values (clip=inf, sigma=0, secagg off) route through the
+    # legacy aggregation path and must be BITWISE equal to the baseline
+    # run; (e2) secagg on/off — with DP actually on (finite clip,
+    # sigma>0), flipping pairwise masking must not move a single bit of
+    # the aggregate (fixed-point masks cancel exactly); (e3) the
+    # reported cumulative epsilon is finite, positive once a release
+    # landed, and monotone non-decreasing.
+    ident_args = argparse.Namespace(**vars(args))
+    ident_args.dp_clip, ident_args.dp_sigma = math.inf, 0.0
+    ident_args.dp_delta, ident_args.secagg = 1e-5, False
+    ident = fresh_runtime(ident_args, key, init_one, apply_fn, data)
+    id_reps = ident.run(args.rounds)
+    assert_runtimes_bitwise(ident, full)
+    assert all(r["dp_epsilon"] == 0.0 and r["dp_epoch"] == 0
+               for r in id_reps), "disabled privacy must spend nothing"
+
+    dp_args = argparse.Namespace(**vars(args))
+    dp_args.dp_clip, dp_args.dp_sigma, dp_args.dp_delta = 1.0, 0.8, 1e-5
+    dp_args.secagg = False
+    dp_off = fresh_runtime(dp_args, key, init_one, apply_fn, data)
+    off_reps = dp_off.run(args.rounds)
+    sa_args = argparse.Namespace(**vars(dp_args))
+    sa_args.secagg = True
+    dp_on = fresh_runtime(sa_args, key, init_one, apply_fn, data)
+    dp_on.run(args.rounds)
+    assert_runtimes_bitwise(dp_off, dp_on)
+
+    eps = [r["dp_epsilon"] for r in off_reps]
+    assert all(np.isfinite(e) for e in eps), eps
+    assert all(b >= a for a, b in zip(eps, eps[1:])), eps
+    assert dp_off.dp_epoch > 0 and eps[-1] > 0.0, (dp_off.dp_epoch, eps)
+
     print(f"smoke: OK ({subset_rounds} strict-subset rounds, "
           f"1 signature per tier over {rt.traces} tiers, "
           f"bitwise resume-at-round-{mid} == uninterrupted; "
           f"stragglers={n_straggled} sync_stall={sync_stall:.3f}s "
           f"async_stall={async_stall:.3f}s stale_merges={merged} "
-          f"within atol={atol})")
+          f"within atol={atol}; privacy: identity ladder bitwise, "
+          f"secagg on==off bitwise, eps={eps[-1]:.3f} over "
+          f"{dp_off.dp_epoch} releases monotone)")
     return last
 
 
@@ -307,6 +363,19 @@ def main(argv=None):
                     help="base merge weight for stale payloads")
     ap.add_argument("--stale-decay", type=float, default=0.5,
                     help="staleness decay exponent: w = alpha*(1+s)^-decay")
+    ap.add_argument("--dp-clip", type=float, default=math.inf,
+                    help="DP-FedAvg per-member update L2 clip C "
+                         "(inf = no clipping; the identity ladder)")
+    ap.add_argument("--dp-sigma", type=float, default=0.0,
+                    help="DP noise multiplier (noise std = sigma * C at "
+                         "the cohort aggregation; needs a finite "
+                         "--dp-clip)")
+    ap.add_argument("--dp-delta", type=float, default=1e-5,
+                    help="target delta for the RDP epsilon accountant")
+    ap.add_argument("--secagg", action="store_true",
+                    help="pairwise-masked secure-aggregation uploads "
+                         "(bitwise-identical aggregate; the server sees "
+                         "only the sum)")
     ap.add_argument("--fedavg-every", type=int, default=0,
                     help="cross-cohort FedAvg of client nets every N "
                          "rounds (0 = off)")
@@ -337,9 +406,12 @@ def main(argv=None):
         args.fedavg_every, args.ema = 2, 0.9
         args.client_sizes, args.seed = "24,16,8,24,12", 0
         # straggler knobs stay off in the base runs; section (d) turns
-        # them on through Namespace copies so (a)-(c) stay lag-free
+        # them on through Namespace copies so (a)-(c) stay lag-free,
+        # and section (e) turns the DP knobs on the same way
         args.lag_p, args.lag_max, args.lag_s = 0.0, 1, 0.0
         args.async_mode = False
+        args.dp_clip, args.dp_sigma, args.dp_delta = math.inf, 0.0, 1e-5
+        args.secagg = False
         return smoke(args)
 
     key = jax.random.PRNGKey(args.seed)

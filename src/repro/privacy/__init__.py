@@ -1,0 +1,46 @@
+"""Privacy subsystem (DP-FedAvg + secure-aggregation cohorts + an RDP
+epsilon-accountant) for the federated training runtime.  Three modules,
+mirroring the serve/ and train/ subsystem pattern:
+
+  * privacy/dp.py         — the audited clip+noise mechanism: per-member
+                            global-L2 update clipping and calibrated
+                            Gaussian noise at the ``average_cohort``
+                            boundary (DP-FedAvg), plus the per-row
+                            payload-DP primitives core/protocol
+                            delegates to;
+  * privacy/secagg.py     — pairwise-masking secure-aggregation
+                            simulation in exact fixed-point arithmetic
+                            (masks cancel bitwise; dropout recovery);
+  * privacy/accountant.py — integer-order RDP accountant for the
+                            subsampled Gaussian mechanism (amplification
+                            by cohort subsampling), with the inverse
+                            sigma-from-epsilon calibration the privacy
+                            frontier benchmark uses.
+
+Wired into repro.train via ``TrainConfig(privacy=PrivacyConfig(...))``;
+see train/runtime.py's design notes for the runtime contract.
+"""
+from repro.privacy import secagg  # noqa: F401  (before dp: dp imports it)
+from repro.privacy.accountant import (DEFAULT_ORDERS, RdpAccountant,
+                                      epsilon_for,
+                                      noise_multiplier_for_epsilon,
+                                      rdp_subsampled_gaussian,
+                                      rdp_to_epsilon)
+from repro.privacy.dp import (DP_CLIP, TAG_DP, PrivacyConfig,
+                              clip_by_global_norm, clip_rows,
+                              dp_average_cohort, dp_noise_key,
+                              gaussian_noise_like, global_l2_norm,
+                              privatize_payload)
+from repro.privacy.secagg import (SCALE_BITS, TAG_SECAGG, masked_upload,
+                                  quantize, dequantize, mask_for,
+                                  secagg_sum)
+
+__all__ = [
+    "DEFAULT_ORDERS", "DP_CLIP", "PrivacyConfig", "RdpAccountant",
+    "SCALE_BITS", "TAG_DP", "TAG_SECAGG", "clip_by_global_norm",
+    "clip_rows", "dequantize", "dp_average_cohort", "dp_noise_key",
+    "epsilon_for", "gaussian_noise_like", "global_l2_norm", "mask_for",
+    "masked_upload", "noise_multiplier_for_epsilon", "privatize_payload",
+    "quantize", "rdp_subsampled_gaussian", "rdp_to_epsilon", "secagg",
+    "secagg_sum",
+]

@@ -1,0 +1,257 @@
+"""DP-FedAvg primitives — the ONE audited clip+noise mechanism shared by
+the update-DP path (cohort aggregation, this module + train/runtime.py)
+and the payload-DP path (Alg.-1 x_{t_s}, core/protocol.make_payload).
+
+Mechanism (DP-FedAvg, [McMahan et al. 2018]; Patel et al. 2504.00952 for
+the diffusion-net instantiation in PAPERS.md): each contributing member's
+window UPDATE (its net minus the current broadcast reference) is clipped
+to ``clip`` in GLOBAL L2 norm over the whole tree, the clipped updates
+are summed exactly (privacy/secagg.py's fixed-point pipeline — the same
+sum whether pairwise masking is on or off), Gaussian noise with std
+``noise_multiplier * clip`` is added to the sum, and the noised mean
+becomes the new broadcast reference every member adopts.  Sensitivity of
+the sum to any one member is exactly ``clip``, so the noised release is
+the subsampled Gaussian mechanism the accountant (privacy/accountant.py)
+composes across rounds.
+
+Randomness discipline (the repo invariant): every noise draw is
+ADDRESSED, never chained — the round's noise key is
+
+    fold_in(fold_in(fold_in(base_key, TAG_DP), round), uid)
+
+(``uid`` 0 for the central server draw; per-uid slots are reserved for a
+future local-DP mode) and each leaf folds its own index below that, so
+adding a leaf or a member never perturbs another draw and a checkpoint
+needs only (base key, round cursor) to replay every release bitwise.
+
+Identity ladder (pinned by tests/test_privacy.py and the CI smoke):
+``clip=inf, noise_multiplier=0, secagg=False`` must be BITWISE equal to
+the pre-privacy runtime.  That ladder holds at the dispatch level — a
+disabled ``PrivacyConfig`` routes the runtime through the legacy
+``fedavg.average_cohort`` path untouched — because fp arithmetic cannot
+express "ref + clip(θ−ref) == θ" bitwise; the identity is structural,
+not arithmetic (the same pin style as ``fedavg.average_stale``'s w>=1
+guard).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.splitting import row_keys
+from repro.privacy import secagg as _secagg
+
+# Stream tag for DP noise (disjoint from train/participation.py's TAG_*
+# block and secagg.TAG_SECAGG — one tag per PRNG purpose, checked by
+# tests/test_privacy.py).
+TAG_DP = 0xD9C1
+
+# The shared payload-clip convention (satellite: one DP_CLIP across the
+# payload-DP and update-DP paths).  ~ the typical payload L2 norm at
+# 8x8x3 (~ sqrt(192) ~ 14): the clip is then mostly inactive and the
+# Gaussian noise std sigma*clip is in meaningful units of the
+# (~unit-variance) payload.  benchmarks/dp_payload.py imports this.
+DP_CLIP = 16.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PrivacyConfig:
+    """The train runtime's privacy knob.  Neutral defaults
+    (clip=inf, noise_multiplier=0, secagg=False) disable the subsystem
+    entirely — the runtime then runs the legacy aggregation path bitwise
+    (the identity ladder)."""
+    clip: float = math.inf          # per-member update L2 clip C
+    noise_multiplier: float = 0.0   # sigma: noise std = sigma * C
+    delta: float = 1e-5             # accountant's delta target
+    secagg: bool = False            # pairwise-masked uploads
+
+    def __post_init__(self):
+        if not self.clip > 0.0:
+            raise ValueError(f"clip must be > 0, got {self.clip}")
+        if self.noise_multiplier < 0.0:
+            raise ValueError(f"noise_multiplier must be >= 0, got "
+                             f"{self.noise_multiplier}")
+        if not 0.0 < self.delta < 1.0:
+            raise ValueError(f"delta must be in (0, 1), got {self.delta}")
+        if self.noise_multiplier > 0.0 and math.isinf(self.clip):
+            raise ValueError("noise_multiplier > 0 needs a finite clip "
+                             "(noise std is sigma * clip)")
+
+    @property
+    def enabled(self) -> bool:
+        return (not math.isinf(self.clip)) or \
+            self.noise_multiplier > 0.0 or self.secagg
+
+
+def dp_noise_key(base_key, round_idx: int, uid: int = 0):
+    """The addressed key for round ``round_idx``'s noise draw."""
+    return jax.random.fold_in(jax.random.fold_in(
+        jax.random.fold_in(base_key, TAG_DP), round_idx), uid)
+
+
+def global_l2_norm(tree) -> jnp.ndarray:
+    """fp32 L2 norm over EVERY leaf of the tree (the DP-FedAvg clipping
+    norm — one bound per member, not per layer)."""
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+             for l in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(tree, clip: float) -> Tuple[dict, jnp.ndarray]:
+    """Scale ``tree`` to global L2 norm <= ``clip`` (min(1, C/max(n,eps))
+    — the standard DP-FedAvg clip).  ``clip=inf`` returns the tree
+    AS-IS (identity, not an arithmetic *1.0 — bitwise-stability pin).
+    Returns (clipped tree, pre-clip norm)."""
+    norm = global_l2_norm(tree)
+    if math.isinf(clip):
+        return tree, norm
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(
+        lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
+        tree), norm
+
+
+def gaussian_noise_like(key, template, std: float):
+    """A tree of N(0, std^2) draws shaped like ``template``, each leaf
+    addressed by its index under ``key`` (fold_in(key, leaf_idx)) — the
+    leaf-level face of the addressed-randomness discipline.  std=0
+    returns an exact all-zeros tree."""
+    leaves, treedef = jax.tree.flatten(template)
+    out = []
+    for i, l in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        n = jax.random.normal(k, jnp.shape(l), dtype=jnp.float32)
+        out.append(jnp.float32(std) * n if std else jnp.zeros_like(n))
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_sub(a, b):
+    """fp32 leafwise a - b (the member's window update vs the broadcast
+    reference)."""
+    return jax.tree.map(
+        lambda x, y: x.astype(jnp.float32) - y.astype(jnp.float32), a, b)
+
+
+# ---------------------------------------------------------------------------
+# The update-DP aggregation (the average_cohort boundary)
+# ---------------------------------------------------------------------------
+
+
+def dp_average_cohort(client_params: List[dict], seen: Sequence[int],
+                      members: Sequence[bool], ref: dict,
+                      uids: Sequence[int], *, clip: float,
+                      noise_multiplier: float, base_key, round_idx: int,
+                      secagg: bool = False,
+                      dropped_uids: Sequence[int] = (),
+                      ) -> Tuple[List[dict], dict, Dict[str, float]]:
+    """DP-FedAvg at the ``fedavg.average_cohort`` boundary.
+
+    Contract (the privacy mirror of ``average_cohort``'s guards):
+
+      * CONTRIBUTORS are members with ``seen > 0``; each contributes its
+        clipped window delta ``clip_C(theta_c - ref)`` at weight 1 — the
+        UNWEIGHTED mean of DP-FedAvg, because sample-count weights are
+        both a side channel and a sensitivity leak (one member's
+        influence on the sum must be bounded by C alone);
+      * the contributor sum runs through privacy/secagg.py's fixed-point
+        pipeline whether ``secagg`` is on or off — integer addition is
+        exact and order-free, so pairwise masks cancel BITWISE and
+        secagg on/off is bitwise-identical at the aggregate (the pinned
+        summation-order requirement);
+      * ``dropped_uids`` are mask-agreement parties that trained this
+        window but departed before uploading — the recovery path
+        reconstructs and removes their pair masks (secagg.secagg_sum);
+      * the noised mean becomes the new broadcast ``ref`` and EVERY
+        member (zero-seen included — same receive semantics as
+        ``average_cohort``) adopts an independent copy; an absent client
+        (members[c] falsy) comes back untouched (identity);
+      * no contributor: the whole call is a no-op — ref unchanged, no
+        noise spent (the accountant must not be charged either).
+
+    Returns (new client_params list, new ref, stats) where stats carries
+    ``n_contributors``, ``clip_frac`` (fraction of contributors whose
+    pre-clip norm exceeded C) and ``applied`` (0/1)."""
+    n = len(client_params)
+    if not (len(seen) == len(members) == len(uids) == n):
+        raise ValueError(f"one seen-count, member flag and uid per client:"
+                         f" {len(seen)}/{len(members)}/{len(uids)} != {n}")
+    idx = [c for c in range(n)
+           if members[c] and int(seen[c]) > 0]
+    stats = {"n_contributors": len(idx), "clip_frac": 0.0, "applied": 0.0}
+    if not idx:
+        return list(client_params), ref, stats
+
+    deltas, clipped_ct = [], 0
+    for c in idx:
+        d = tree_sub(client_params[c], ref)
+        d, norm = clip_by_global_norm(d, clip)
+        deltas.append(d)
+        if not math.isinf(clip) and float(norm) > clip:
+            clipped_ct += 1
+    stats["clip_frac"] = clipped_ct / len(idx)
+
+    cohort_uids = sorted([int(uids[c]) for c in idx] +
+                         [int(u) for u in dropped_uids])
+    uploads = {int(uids[c]): d for c, d in zip(idx, deltas)}
+    total = _secagg.secagg_sum(uploads, cohort_uids, base_key, round_idx,
+                               masked=secagg)
+
+    std = noise_multiplier * clip if noise_multiplier > 0.0 else 0.0
+    if std > 0.0:
+        noise = gaussian_noise_like(dp_noise_key(base_key, round_idx),
+                                    total, std)
+        total = jax.tree.map(jnp.add, total, noise)
+
+    m = float(len(idx))
+    new_ref = jax.tree.map(
+        lambda r, t: (r.astype(jnp.float32) + t / m).astype(r.dtype),
+        ref, total)
+    out = list(client_params)
+    for c in range(n):
+        if members[c]:
+            out[c] = jax.tree.map(jnp.copy, new_ref)
+    stats["applied"] = 1.0
+    return out, new_ref, stats
+
+
+# ---------------------------------------------------------------------------
+# Payload DP (the Alg.-1 x_{t_s} path) — core/protocol.make_payload's
+# mechanism, hoisted here so both DP paths share one audited clip+noise.
+# ---------------------------------------------------------------------------
+
+
+def rowwise_normal(key, shape):
+    """(B, ...) standard normals with row-keyed draws (splitting.row_keys):
+    row i depends only on (key, i), never on B — byte-identical to
+    protocol.rowwise_normal, duplicated here to keep this module below
+    core/protocol in the import order (protocol imports us)."""
+    return jax.vmap(
+        lambda k: jax.random.normal(k, shape[1:], dtype=jnp.float32))(
+        row_keys(key, shape[0]))
+
+
+def clip_rows(x, clip: float):
+    """Per-SAMPLE L2 clip over a (B, ...) batch — the payload-DP face of
+    the clipping convention (per-row, where the update path clips per
+    member tree).  Same math as the pre-refactor inline block in
+    protocol.make_payload, bitwise."""
+    B = x.shape[0]
+    flat = x.reshape(B, -1)
+    norm = jnp.linalg.norm(flat.astype(jnp.float32), axis=1, keepdims=True)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-9))
+    return (flat * scale).reshape(x.shape)
+
+
+def privatize_payload(x, key, sigma: float, clip: float):
+    """Gaussian-mechanism noising of a shipped payload batch: per-row
+    clip to ``clip`` then N(0, (sigma*clip)^2) row-keyed noise.  The
+    exact mechanism protocol.make_payload used inline before PR 9 —
+    bitwise-equal for the same key (pinned by tests/test_privacy.py)."""
+    clipped = clip_rows(x, clip)
+    noise = rowwise_normal(key, x.shape)
+    return (clipped + sigma * clip * noise).astype(x.dtype)

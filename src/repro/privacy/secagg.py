@@ -1,0 +1,176 @@
+"""Pairwise-masking secure-aggregation SIMULATION (Bonawitz et al. 2017,
+the SecAgg construction) over the registry's permanent uids.
+
+Why fixed-point / modular arithmetic: SecAgg's defining property is that
+the server learns ONLY the sum — each pair of cohort members derives a
+shared mask, one adds it and the other subtracts it, and the masks must
+cancel EXACTLY in the server's summation.  Floating-point addition is
+not associative, so fp masks can never cancel bitwise; real SecAgg (and
+this simulation) therefore runs the transport in an integer ring where
+addition is exact and order-free.  Uploads are fixed-point-quantized
+(round(x * 2^SCALE_BITS) as int64, carried as uint64 so overflow is
+well-defined wraparound mod 2^64) and masks are uniform uint64 — an
+individual masked upload is marginally UNIFORM on the ring (information-
+theoretically hiding, exactly as in the paper), while the mod-2^64 sum
+is provably mask-free.
+
+Consequences, pinned by tests/test_privacy.py and the CI smoke:
+
+  * the aggregation pipeline is the SAME with masking on or off —
+    quantize -> exact integer sum -> dequantize — so ``secagg`` on/off
+    is bitwise-identical at the aggregate (the masks cancel exactly in
+    the summation order used; integer addition makes every order the
+    same order);
+  * mask agreement is keyed by (base key, TAG_SECAGG, round, uid pair)
+    with per-leaf fold-ins — addressed, never chained, so cohort
+    composition changes never perturb an unrelated pair's mask and a
+    checkpoint replays every mask bitwise;
+  * DROPOUT RECOVERY: a mask-agreement party that departs before
+    uploading leaves its pair masks uncancelled in the survivor sum; the
+    server reconstructs exactly those (survivor, dropped) pair masks
+    from the shared seeds and removes them — mod-2^64 exact, so the
+    recovered sum equals the survivors-only sum bitwise (the SecAgg
+    seed-reveal round, collapsed to a direct reconstruction here because
+    the simulation holds the base key).
+
+Quantization error is bounded by 2^-(SCALE_BITS+1) per element per
+member — far below the DP noise floor of any useful (clip, sigma), and
+priced identically whether masking is on or off.  The quantizer
+saturates at +/-2^62/2^SCALE_BITS (~4.4e12 at the default scale);
+training-scale updates never approach it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Stream tag for pairwise mask agreement (disjoint from participation's
+# TAG_* block and dp.TAG_DP — asserted by tests/test_privacy.py).
+TAG_SECAGG = 0x5EA6
+
+SCALE_BITS = 20                      # fixed-point scale 2^20
+_SCALE = float(1 << SCALE_BITS)
+
+
+def quantize(tree) -> List[np.ndarray]:
+    """Leaf list of fixed-point uint64 encodings (two's complement via
+    int64 -> uint64 view) — the SecAgg wire format."""
+    out = []
+    for l in jax.tree.leaves(tree):
+        v = np.asarray(l, np.float64) * _SCALE
+        # saturate at +/-2^62: exactly representable in float64, safely
+        # inside int64, and ~4.4e12 in value units at the default scale
+        v = np.clip(np.rint(v), -(2.0 ** 62), 2.0 ** 62)
+        out.append(v.astype(np.int64).view(np.uint64))
+    return out
+
+
+def dequantize(leaves: Sequence[np.ndarray], template):
+    """Back to a float tree shaped like ``template`` (leaf dtypes follow
+    the template's; accumulate in float64 so the /2^20 rescale is
+    exact for every in-range sum)."""
+    t_leaves, treedef = jax.tree.flatten(template)
+    out = [jnp.asarray((q.view(np.int64).astype(np.float64) / _SCALE)
+                       .astype(np.float32)).astype(t.dtype)
+           for q, t in zip(leaves, t_leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def _pair_key(base_key, round_idx: int, u: int, v: int):
+    """The shared mask seed of pair {u, v} at ``round_idx`` — addressed
+    by the SORTED uid pair, so both parties derive the same key."""
+    lo, hi = (u, v) if u < v else (v, u)
+    k = jax.random.fold_in(jax.random.fold_in(base_key, TAG_SECAGG),
+                           round_idx)
+    return jax.random.fold_in(jax.random.fold_in(k, lo), hi)
+
+
+def _mask_leaves(key, template) -> List[np.ndarray]:
+    """Uniform uint64 mask per leaf (two uint32 draws glued host-side —
+    jax needs no x64 mode), leaf-indexed under ``key``."""
+    out = []
+    for i, l in enumerate(jax.tree.leaves(template)):
+        k = jax.random.fold_in(key, i)
+        bits = np.asarray(jax.random.bits(k, (2,) + tuple(jnp.shape(l)),
+                                          dtype=jnp.uint32), np.uint64)
+        out.append((bits[0] << np.uint64(32)) | bits[1])
+    return out
+
+
+def mask_for(base_key, round_idx: int, uid: int, cohort: Sequence[int],
+             template) -> List[np.ndarray]:
+    """Member ``uid``'s total mask against ``cohort``: the mod-2^64 sum
+    of +pair_mask for every partner with a larger uid and -pair_mask for
+    every smaller one (the canonical SecAgg sign convention)."""
+    leaves = [np.zeros(jnp.shape(l), np.uint64)
+              for l in jax.tree.leaves(template)]
+    with np.errstate(over="ignore"):   # mod-2^64 wraparound is the point
+        for v in cohort:
+            v = int(v)
+            if v == int(uid):
+                continue
+            pm = _mask_leaves(_pair_key(base_key, round_idx, int(uid), v),
+                              template)
+            for i, m in enumerate(pm):
+                if int(uid) < v:
+                    leaves[i] = leaves[i] + m      # uint64 wraps mod 2^64
+                else:
+                    leaves[i] = leaves[i] - m
+    return leaves
+
+
+def masked_upload(tree, base_key, round_idx: int, uid: int,
+                  cohort: Sequence[int]) -> List[np.ndarray]:
+    """What member ``uid`` SENDS: its quantized update plus its total
+    cohort mask, mod 2^64.  Marginally uniform on the ring — the
+    server-sees-only-sum invariant's per-upload half."""
+    q = quantize(tree)
+    m = mask_for(base_key, round_idx, uid, cohort, tree)
+    with np.errstate(over="ignore"):
+        return [a + b for a, b in zip(q, m)]
+
+
+def secagg_sum(uploads: Dict[int, dict], cohort: Sequence[int], base_key,
+               round_idx: int, masked: bool = True):
+    """The server-side aggregate of ``uploads`` (uid -> float tree).
+
+    ``cohort`` is the full mask-agreement party list; uids in ``cohort``
+    missing from ``uploads`` are DROPPED parties and trigger recovery:
+    their pair masks with every surviving uploader are reconstructed and
+    removed from the sum.  With ``masked=False`` the same quantize ->
+    integer-sum -> dequantize pipeline runs without masks — bitwise
+    identical output, which is exactly the point."""
+    if not uploads:
+        raise ValueError("secagg_sum needs at least one upload")
+    survivors = sorted(int(u) for u in uploads)
+    cohort = sorted(int(u) for u in cohort)
+    missing = [u for u in survivors if u not in cohort]
+    if missing:
+        raise ValueError(f"uploaders {missing} not in the mask-agreement "
+                         f"cohort {cohort}")
+    template = uploads[survivors[0]]
+    acc = None
+    with np.errstate(over="ignore"):   # exact arithmetic mod 2^64
+        for u in survivors:
+            leaves = (masked_upload(uploads[u], base_key, round_idx, u,
+                                    cohort)
+                      if masked else quantize(uploads[u]))
+            acc = leaves if acc is None else [a + b
+                                              for a, b in zip(acc, leaves)]
+        if masked:
+            dropped = [u for u in cohort if u not in uploads]
+            for d in dropped:
+                # seed-reveal recovery: remove the (survivor, dropped)
+                # pair masks the survivors' uploads still carry
+                for s in survivors:
+                    pm = _mask_leaves(_pair_key(base_key, round_idx, s, d),
+                                      template)
+                    for i, m in enumerate(pm):
+                        if s < d:
+                            acc[i] = acc[i] - m
+                        else:
+                            acc[i] = acc[i] + m
+    return dequantize(acc, template)

@@ -328,6 +328,25 @@ class ServeRuntime:
         if self.cache is not None:
             self.cache.clear()
 
+    def rotate_for_epoch(self, epoch: int, base_key) -> bool:
+        """DP-epoch-tied key rotation (the PR-4 note, closed by PR 9):
+        hook this as the train runtime's ``on_dp_epoch`` callback and the
+        serve cache turns over its key schedule at EXACTLY the DP release
+        boundary — cached x̂_{t_ζ} prefixes computed under the
+        pre-release nets never outlive the privacy epoch they were drawn
+        in.  The rotated key is the ADDRESSED ``fold_in(base_key,
+        epoch)`` (never chained off the previous rotation), and the call
+        is IDEMPOTENT per epoch: replaying a round after a checkpoint
+        resume re-fires the callback without clearing the cache twice.
+        Returns True when a rotation actually happened."""
+        if epoch < 0:
+            raise ValueError(f"epoch must be >= 0, got {epoch}")
+        if getattr(self, "_rotated_epoch", None) == int(epoch):
+            return False
+        self.rotate_key(jax.random.fold_in(base_key, int(epoch)))
+        self._rotated_epoch = int(epoch)
+        return True
+
     # -- reporting ---------------------------------------------------------
     def _empty_report(self) -> Dict:
         """Zeroed report with the FULL key set — idle ticks must not

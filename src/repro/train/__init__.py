@@ -2,14 +2,15 @@
 with shape-stable cohort tiers and bitwise mid-run resume) layered on the
 PR-1/2 masked vectorized engine.  See train/runtime.py for the
 architecture notes."""
+from repro.privacy.dp import PrivacyConfig
 from repro.train.participation import (ParticipationConfig, sample_cohort,
                                        sample_drops, sample_lags,
-                                       uid_scores)
+                                       sampling_rate, uid_scores)
 from repro.train.registry import ClientRecord, ClientRegistry
 from repro.train.rounds import RoundPlan, participation_tier, plan_round
 from repro.train.runtime import TrainConfig, TrainRuntime
 
 __all__ = ["ClientRecord", "ClientRegistry", "ParticipationConfig",
-           "RoundPlan", "TrainConfig", "TrainRuntime",
+           "PrivacyConfig", "RoundPlan", "TrainConfig", "TrainRuntime",
            "participation_tier", "plan_round", "sample_cohort",
-           "sample_drops", "sample_lags", "uid_scores"]
+           "sample_drops", "sample_lags", "sampling_rate", "uid_scores"]

@@ -120,6 +120,26 @@ def sample_cohort(cfg: ParticipationConfig, base_key, round_idx: int,
     return sorted(chosen)
 
 
+def sampling_rate(cfg: ParticipationConfig, n_active: int) -> float:
+    """The per-round cohort sampling rate q the privacy accountant
+    charges (privacy/accountant.py — amplification by subsampling):
+    ``bernoulli`` → p, ``fixed`` → min(cohort_k/n, 1) (the fixed-size-
+    without-replacement rate, charged under the Poisson bound as
+    standard, conservative practice), ``full`` → 1.0.  ``min_cohort``
+    fill-ins can only RAISE the realized rate above q; the accountant
+    composes over rounds with the WINDOW rate
+    1 - (1-q)^rounds_per_window (a member that joins any round of the
+    window contributes to that window's single DP release), which the
+    runtime computes from this."""
+    if n_active <= 0:
+        return 0.0
+    if cfg.policy == "full":
+        return 1.0
+    if cfg.policy == "bernoulli":
+        return float(cfg.p)
+    return min(float(cfg.cohort_k) / float(n_active), 1.0)
+
+
 def sample_drops(cfg: ParticipationConfig, base_key, round_idx: int,
                  cohort: Sequence[int], n_batches: int) -> Dict[int, int]:
     """Mid-round dropouts: ``{uid: batch slot it vanishes from}``.  A

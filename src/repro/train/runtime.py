@@ -75,7 +75,42 @@ serve/runtime.py's, and the mirror image of its queue→engine loop):
   (upload outstanding) sits out cohort sampling until it lands, and
   ``drain()`` flushes the queue at run end.  Delivery order is
   deterministic (due round, compute round, uid) and the queue
-  checkpoints/restores bitwise (state_dict v2).
+  checkpoints/restores bitwise (state_dict v2).  A client that LEAVES
+  discards its outstanding payloads at departure — an orphaned upload
+  must never reach the record after a rejoin (pinned by
+  tests/test_train_runtime.py).
+* **Privacy (DP-FedAvg + secagg) — what the server sees.**  With
+  ``TrainConfig(privacy=PrivacyConfig(clip, noise_multiplier, delta,
+  secagg))`` enabled, the cross-cohort aggregation boundary
+  (``fedavg_every`` — required > 0) switches from
+  ``fedavg.average_cohort`` to privacy/dp.py's ``dp_average_cohort``:
+  each contributing member's window UPDATE (its net minus the broadcast
+  reference ``_dp_ref``) is clipped to ``clip`` in global L2 and summed
+  at weight 1 (unweighted — sample-count weights would leak and break
+  the C-sensitivity bound); Gaussian noise with std
+  ``noise_multiplier·clip`` is added to the SUM (addressed draw:
+  ``fold_in(base, TAG_DP, round, uid=0)``, per-leaf fold-ins below);
+  the noised mean becomes the new broadcast reference every member
+  adopts.  CLIPPING BINDS on the per-member window delta — never on raw
+  nets, never per-layer.  With ``secagg`` on, member uploads travel as
+  pairwise-masked fixed-point words (privacy/secagg.py) and the server
+  provably sees ONLY the sum: masks cancel bitwise in the exact integer
+  ring, so secagg on/off is bitwise-identical at the aggregate, and a
+  member that left after training is recovered as a SecAgg dropout
+  (its pair masks reconstructed and removed).  THE ACCOUNTANT
+  (privacy/accountant.py) counts one subsampled-Gaussian release per
+  APPLIED DP aggregation at the window-composed sampling rate
+  q_window = 1-(1-q)^fedavg_every (q from participation.sampling_rate);
+  cumulative ε is in every round report (``dp_epsilon``, monotone
+  non-decreasing) and in checkpoint format v3 (v1/v2 still restore,
+  with fresh privacy state).  Each applied release bumps ``dp_epoch``
+  and fires ``on_dp_epoch`` — serve/runtime.py's ``rotate_for_epoch``
+  ties payload-cache key rotation to exactly this boundary.  The
+  identity ladder is STRUCTURAL: a disabled PrivacyConfig routes
+  through the legacy ``average_cohort`` path untouched, so
+  ``clip=inf, noise=0, secagg=off`` is bitwise-equal to the
+  pre-privacy runtime (pinned by tests/test_privacy.py and the CI
+  smoke).
 
 Reproducibility contract (sync vs async): SYNC mode is bitwise — for a
 given base key and registry history every quantity (params, opt,
@@ -112,10 +147,12 @@ from repro.core.fedavg import average_cohort, average_stale
 from repro.core.schedules import DiffusionSchedule
 from repro.core.splitting import CutPoint
 from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.privacy.accountant import RdpAccountant
+from repro.privacy.dp import TAG_DP, PrivacyConfig, dp_average_cohort
 from repro.train.participation import (TAG_INIT, TAG_PART, TAG_ROUND,
                                        ParticipationConfig, sample_cohort,
                                        sample_drops, sample_lags,
-                                       uid_scores)
+                                       sampling_rate, uid_scores)
 from repro.train.registry import ClientRegistry
 from repro.train.rounds import plan_round
 
@@ -146,6 +183,7 @@ class TrainConfig:
     lr: float = 1e-3
     schedule: str = "linear"
     participation: ParticipationConfig = ParticipationConfig()
+    privacy: PrivacyConfig = PrivacyConfig()  # neutral default: disabled
     fedavg_every: int = 0                   # 0 = off
     ema_decay: float = 0.0                  # 0 = off
     tier_cap: Optional[int] = None          # cap on the pow2 cohort tier
@@ -188,6 +226,26 @@ class TrainRuntime:
         # {uid, params, opt, compute_round, due_round, n_real} — ordered
         # deterministically at delivery, checkpointed in state_dict v2
         self._pending: List[Dict] = []
+        # -- privacy state (see the DP/secagg design note above) --------
+        self.dp_epoch = 0                    # applied DP releases so far
+        self.on_dp_epoch = None              # callback(epoch) per release
+        self._dp_clip_frac = 0.0             # last release's clip fraction
+        if config.privacy.enabled:
+            if not config.fedavg_every:
+                raise ValueError(
+                    "privacy is enforced at the cross-cohort aggregation "
+                    "boundary: PrivacyConfig enabled requires "
+                    "fedavg_every > 0")
+            self._accountant = RdpAccountant(
+                config.privacy.noise_multiplier, config.privacy.delta)
+            # the broadcast reference deltas are clipped against —
+            # addressed init (TAG_DP slot 0), updated to each release's
+            # noised mean, checkpointed in format v3
+            self._dp_ref = init_one(
+                jax.random.fold_in(jax.random.fold_in(key, TAG_DP), 0))
+        else:
+            self._accountant = None
+            self._dp_ref = None
         self.server_params = init_one(
             jax.random.fold_in(jax.random.fold_in(key, TAG_INIT), 0))
         self.server_opt = init_opt_state(self.server_params)
@@ -224,7 +282,15 @@ class TrainRuntime:
         return uid
 
     def leave(self, uid: int) -> None:
+        """Deactivate a client.  Any outstanding straggler payload of its
+        is DISCARDED here, not merely skipped at delivery: a uid that
+        leaves and later rejoins must never receive (or be corrupted by)
+        an upload computed before it left — the orphan would otherwise
+        sit in the queue and pass the ``active`` check after the rejoin.
+        Pinned by tests/test_train_runtime.py."""
         self.registry.leave(uid)
+        self._pending = [p for p in self._pending
+                         if int(p["uid"]) != int(uid)]
 
     def rejoin(self, uid: int) -> None:
         self.registry.rejoin(uid)
@@ -251,7 +317,19 @@ class TrainRuntime:
             "fedavg_applied": False, "seen_total": 0, "wall_s": 0.0,
             "stragglers": 0, "stale_merges": 0, "barrier_stall_s": 0.0,
             "pending_payloads": len(self._pending),   # gauge, not delta
+            # privacy gauges (0.0/0 schema constants while disabled)
+            "dp_epsilon": 0.0, "dp_epoch": 0, "dp_clip_frac": 0.0,
         }
+
+    def _dp_report(self) -> Dict:
+        """Per-round privacy gauges: cumulative ε at the configured δ
+        (monotone non-decreasing — the accountant only accumulates),
+        the DP epoch counter, and the last release's clip fraction."""
+        if self._accountant is None:
+            return {"dp_epsilon": 0.0, "dp_epoch": 0, "dp_clip_frac": 0.0}
+        return {"dp_epsilon": float(self._accountant.epsilon()),
+                "dp_epoch": int(self.dp_epoch),
+                "dp_clip_frac": float(self._dp_clip_frac)}
 
     # -- async delivery ----------------------------------------------------
     def _deliver(self, payload: Dict, delivery_round: int) -> bool:
@@ -350,6 +428,7 @@ class TrainRuntime:
             report["fedavg_applied"] = self._maybe_fedavg()
             self._update_ema()
             self.round += 1
+            report.update(self._dp_report())
             report["pending_payloads"] = len(self._pending)
             report["wall_s"] = time.perf_counter() - t0
             return report
@@ -413,6 +492,7 @@ class TrainRuntime:
         report["fedavg_applied"] = self._maybe_fedavg()
         self._update_ema()
         self.round += 1
+        report.update(self._dp_report())
         report.update({
             "tier": plan.tier, "padded_client_slots": pad,
             "real_samples": plan.real_samples,
@@ -460,10 +540,53 @@ class TrainRuntime:
         # receives — departure freezes its net bitwise until rejoin (the
         # registry contract), so membership is gated on active here
         members = [r.window_member and r.active for r in recs]
+        if cfg.privacy.enabled:
+            return self._dp_fedavg(recs, members)
+        # legacy (non-private) path — kept verbatim: the identity ladder
+        # is structural, a disabled PrivacyConfig must run these exact
+        # operations (pinned by tests/test_privacy.py and the CI smoke)
         new = average_cohort([r.params for r in recs],
                              [r.window_seen for r in recs], members)
         applied = any(m and r.window_seen > 0
                       for m, r in zip(members, recs))
+        for r, p in zip(recs, new):
+            r.params = p
+            r.window_seen = 0
+            r.window_member = False
+        return applied
+
+    def _dp_fedavg(self, recs, members) -> bool:
+        """The DP aggregation release (privacy/dp.dp_average_cohort) at
+        the fedavg boundary: clip member window deltas against the
+        broadcast reference, secagg-sum, noise, broadcast the new
+        reference; charge the accountant ONCE per applied release at the
+        window-composed sampling rate; bump the DP epoch."""
+        cfg = self.config
+        # a mask-agreement party that trained this window but departed
+        # before uploading is a SecAgg DROPOUT — its pair masks are
+        # reconstructed and removed by the recovery path
+        dropped = [int(r.uid) for r in recs
+                   if r.window_member and not r.active]
+        new, new_ref, stats = dp_average_cohort(
+            [r.params for r in recs], [r.window_seen for r in recs],
+            members, self._dp_ref, [r.uid for r in recs],
+            clip=cfg.privacy.clip,
+            noise_multiplier=cfg.privacy.noise_multiplier,
+            base_key=self._key, round_idx=self.round,
+            secagg=cfg.privacy.secagg, dropped_uids=dropped)
+        applied = bool(stats["applied"])
+        if applied:
+            self._dp_ref = new_ref
+            self._dp_clip_frac = float(stats["clip_frac"])
+            q = sampling_rate(cfg.participation,
+                              len(self.registry.active_uids()))
+            # one release covers the whole window: a member joining ANY
+            # of its fedavg_every rounds contributes to this release
+            q_window = 1.0 - (1.0 - q) ** max(int(cfg.fedavg_every), 1)
+            self._accountant.charge(q_window)
+            self.dp_epoch += 1
+            if self.on_dp_epoch is not None:
+                self.on_dp_epoch(self.dp_epoch)
         for r, p in zip(recs, new):
             r.params = p
             r.window_seen = 0
@@ -511,10 +634,17 @@ class TrainRuntime:
                 "joined_round": int(rec.joined_round),
                 "active": bool(rec.active),
             }
+        privacy = None
+        if self._accountant is not None:
+            privacy = {"dp_ref": self._dp_ref,
+                       "dp_epoch": int(self.dp_epoch),
+                       "accountant": self._accountant.state_dict()}
         return {
-            # v2 adds the async pending-payload queue; v1 checkpoints
-            # (no queue) still restore — see ``restore``
-            "version": 2,
+            # v3 adds the privacy state (broadcast DP reference, epoch
+            # counter, accountant); v2 added the async pending-payload
+            # queue; v1/v2 checkpoints still restore — see ``restore``
+            "version": 3,
+            "privacy": privacy,
             "round": int(self.round),
             "total_steps": int(self.total_steps),
             "base_key": _key_pack(self._key),
@@ -543,11 +673,25 @@ class TrainRuntime:
         Data is not in the checkpoint: call ``attach_data(uid, x, y)``
         for every client that should keep training."""
         state = ckpt.load(path)
-        if state.get("version") not in (1, 2):
+        if state.get("version") not in (1, 2, 3):
             raise ValueError(f"unknown checkpoint version "
                              f"{state.get('version')!r}")
         rt = cls(config, init_one, apply_fn, _key_unpack(state["base_key"]),
                  mesh=mesh)
+        priv = state.get("privacy")
+        if priv is not None:
+            if not config.privacy.enabled:
+                raise ValueError(
+                    "checkpoint carries DP state (format v3) but the "
+                    "config's PrivacyConfig is disabled — resuming a DP "
+                    "run without its privacy config would silently stop "
+                    "clipping/noising mid-stream")
+            rt._dp_ref = priv["dp_ref"]
+            rt.dp_epoch = int(priv["dp_epoch"])
+            rt._accountant = RdpAccountant.from_state(priv["accountant"])
+        # (v1/v2, or v3 saved with privacy disabled: the fresh privacy
+        # state from __init__ stands — a pre-privacy run resumes with an
+        # uncharged accountant, exactly what it has spent)
         rt.round = int(state["round"])
         rt.total_steps = int(state["total_steps"])
         rt.server_params = state["server_params"]

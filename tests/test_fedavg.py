@@ -54,6 +54,43 @@ def test_average_weights_bad_weights():
         average_weights([a, a], weights=[1.0, -1.0])
     with pytest.raises(ValueError, match="non-negative"):
         average_weights([a, a], weights=[0.0, 0.0])
+    with pytest.raises(ValueError, match="at least one"):
+        average_weights([])
+
+
+def test_average_weights_rejects_heterogeneous_dtypes():
+    """Regression (PR 9): heterogeneous-dtype client trees used to be
+    silently cast to client 0's leaf dtype — a precision change nobody
+    asked for.  Now a clear upfront error names the offending leaf."""
+    a = {"w": jnp.array([1.0, 2.0], jnp.float32)}
+    b = {"w": jnp.array([3.0, 4.0], jnp.bfloat16)}
+    with pytest.raises(ValueError, match="dtype mismatch.*client 1"):
+        average_weights([a, b])
+    # agreeing non-f32 dtypes are fine (fp32 accumulate, dtype restored)
+    c = {"w": jnp.array([3.0, 4.0], jnp.bfloat16)}
+    out = average_weights([b, c])
+    assert out["w"].dtype == jnp.bfloat16
+
+
+def test_bf16_round_trip_through_aggregation():
+    """Mixed-precision nets keep their storage dtype through every
+    aggregation face: average_cohort and average_stale accumulate in
+    fp32 and restore each leaf's dtype."""
+    mk = lambda v: {"w": jnp.full((3,), v, jnp.bfloat16),
+                    "s": jnp.float32(v)}
+    cohort = average_cohort([mk(1.0), mk(3.0)], seen=[2, 2],
+                            members=[True, True])
+    for out in cohort:
+        assert out["w"].dtype == jnp.bfloat16
+        assert out["s"].dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(out["w"], np.float32),
+                                   [2.0] * 3, atol=1e-2)
+    stale = average_stale(mk(1.0), mk(3.0), staleness=0, alpha=0.5,
+                          decay=0.5)
+    assert stale["w"].dtype == jnp.bfloat16
+    assert stale["s"].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(stale["w"], np.float32),
+                               [2.0] * 3, atol=1e-2)
 
 
 def test_average_cohort_weighted_and_absent_noop():
@@ -162,6 +199,25 @@ def test_fedavg_round_trains_and_syncs(key):
         assert float(cp["a"]) == float(st.global_params["a"])
     # comms accounting: 2 * |θ| * k per round
     assert m["comm_bytes_total"] == 10 * 2 * params_nbytes(st.global_params) * 2
+
+
+def test_fedavg_round_comm_counts_contributors_only(key):
+    """Regression (PR 9): a zero-batch client uploads nothing and is not
+    charged 2x|θ| — comm accounting prices contributors only."""
+    st = fedavg_setup(key, init_one, 3)
+
+    def fake_step(params, opt, x0, y, k):
+        return params, opt, 0.0
+
+    x = jnp.ones((4, 4, 4, 3))
+    y = jnp.zeros((4, 4))
+    per_model = params_nbytes(st.global_params)
+    # client 2 contributes no batch this round
+    m = fedavg_round(st, fake_step, [[(x, y)], [(x, y)], []], key)
+    assert m["comm_bytes_total"] == 2 * per_model * 2
+    # next round everyone contributes: 3 more clients' worth
+    m = fedavg_round(st, fake_step, [[(x, y)], [(x, y)], [(x, y)]], key)
+    assert m["comm_bytes_total"] == 2 * per_model * (2 + 3)
 
 
 def test_fedavg_sample_runs(key):

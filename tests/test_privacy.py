@@ -1,0 +1,427 @@
+"""Privacy subsystem tests (repro.privacy + its train/serve wiring).
+
+The contract under test (privacy/ module docstrings + train/runtime.py
+design notes):
+
+  * IDENTITY LADDER — a neutral PrivacyConfig (clip=inf, sigma=0,
+    secagg off) routes the runtime through the legacy aggregation path
+    untouched: bitwise equal to the pre-privacy runtime, zero epsilon
+    spent;
+  * SERVER-SEES-ONLY-SUM — pairwise secagg masks cancel BITWISE at the
+    cohort sum (exact fixed-point ring), on/off is bitwise-identical at
+    the aggregate, dropout recovery is exact, and an individual masked
+    upload reveals nothing recognisable;
+  * ADDRESSED RANDOMNESS — DP noise and mask seeds are keyed by
+    (base key, tag, round, uid), with disjoint stream tags;
+  * ACCOUNTANT — epsilon is monotone non-decreasing, amplified by
+    subsampling, infinite at sigma=0, and round-trips through
+    checkpoint state bitwise; the sigma-from-epsilon bisection lands at
+    or under its target;
+  * ONE AUDITED MECHANISM — protocol.make_payload's payload-DP path is
+    bitwise-equal to the pre-refactor inline clip+noise block;
+  * CHECKPOINT v3 — a DP run resumes bitwise with accountant state
+    intact; v2 checkpoints still restore.
+"""
+import dataclasses
+import math
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import checkpoint as ckpt
+from repro.core import protocol
+from repro.core.schedules import DiffusionSchedule
+from repro.core.splitting import CutPoint
+from repro.privacy import accountant as acct
+from repro.privacy import dp, secagg
+from repro.privacy.dp import PrivacyConfig
+from repro.train import TrainRuntime
+from repro.train.participation import (TAG_DATA, TAG_DROP, TAG_INIT,
+                                       TAG_LAG, TAG_PART, TAG_ROUND)
+
+from tests.test_train_runtime import (make_runtime, tiny_apply,
+                                      tiny_config, tiny_data, tiny_init,
+                                      trees_equal)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tree_of(seed, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": scale * jax.random.normal(k, (3, 4)),
+            "b": scale * jax.random.normal(jax.random.fold_in(k, 1), ())}
+
+
+# ---------------------------------------------------------------------------
+# accountant
+# ---------------------------------------------------------------------------
+
+
+def test_epsilon_monotone_and_positive():
+    a = acct.RdpAccountant(noise_multiplier=1.0, delta=1e-5)
+    assert a.epsilon() == 0.0                  # nothing charged yet
+    prev = 0.0
+    for _ in range(8):
+        a.charge(q=0.5)
+        e = a.epsilon()
+        assert math.isfinite(e) and e > 0.0
+        assert e >= prev                       # RDP only accumulates
+        prev = e
+
+
+def test_gaussian_q1_known_value():
+    # one full-batch release at sigma=1, delta=1e-5: the classic
+    # Gaussian-mechanism epsilon is ~5.3 over the integer-order grid
+    e = acct.epsilon_for(1.0, 1e-5, releases=1, q=1.0)
+    assert 4.0 < e < 7.0
+
+
+def test_subsampling_amplification():
+    full = acct.epsilon_for(1.0, 1e-5, releases=10, q=1.0)
+    sub = acct.epsilon_for(1.0, 1e-5, releases=10, q=0.1)
+    assert sub < full                          # amplification is a WIN
+    assert acct.epsilon_for(1.0, 1e-5, releases=10, q=0.0) == 0.0
+
+
+def test_sigma_zero_spends_infinity():
+    assert acct.epsilon_for(0.0, 1e-5, releases=1, q=1.0) == math.inf
+
+
+def test_noise_multiplier_bisection():
+    for target, releases, q in ((1.0, 4, 1.0), (8.0, 3, 0.6)):
+        sigma = acct.noise_multiplier_for_epsilon(target, 1e-5, releases, q)
+        spent = acct.epsilon_for(sigma, 1e-5, releases, q)
+        assert spent <= target + 1e-6          # never overspends
+        assert spent > 0.5 * target            # and not wastefully loose
+    assert acct.noise_multiplier_for_epsilon(math.inf, 1e-5, 4, 1.0) == 0.0
+
+
+def test_accountant_state_round_trip_bitwise():
+    a = acct.RdpAccountant(0.9, 1e-6)
+    a.charge(0.3, releases=5)
+    b = acct.RdpAccountant.from_state(a.state_dict())
+    assert np.array_equal(a._rdp, b._rdp)
+    assert a.steps == b.steps and a.orders == b.orders
+    assert a.epsilon() == b.epsilon()
+
+
+# ---------------------------------------------------------------------------
+# dp primitives
+# ---------------------------------------------------------------------------
+
+
+def test_privacy_config_validation():
+    assert not PrivacyConfig().enabled         # neutral default
+    assert PrivacyConfig(clip=1.0).enabled
+    assert PrivacyConfig(secagg=True).enabled
+    with pytest.raises(ValueError):
+        PrivacyConfig(clip=0.0)
+    with pytest.raises(ValueError):
+        PrivacyConfig(noise_multiplier=-1.0)
+    with pytest.raises(ValueError):             # noise needs a finite clip
+        PrivacyConfig(noise_multiplier=0.5)
+    with pytest.raises(ValueError):
+        PrivacyConfig(clip=1.0, delta=0.0)
+
+
+def test_clip_by_global_norm():
+    t = tree_of(0, scale=10.0)
+    clipped, norm = dp.clip_by_global_norm(t, 1.0)
+    assert float(norm) > 1.0
+    assert float(dp.global_l2_norm(clipped)) <= 1.0 + 1e-5
+    # clip=inf is an IDENTITY return, not an arithmetic *1.0
+    same, _ = dp.clip_by_global_norm(t, math.inf)
+    assert same is t
+
+
+def test_noise_is_addressed_not_chained():
+    t = tree_of(1)
+    k5 = dp.dp_noise_key(KEY, 5)
+    n5 = dp.gaussian_noise_like(k5, t, 1.0)
+    n5_again = dp.gaussian_noise_like(dp.dp_noise_key(KEY, 5), t, 1.0)
+    n6 = dp.gaussian_noise_like(dp.dp_noise_key(KEY, 6), t, 1.0)
+    assert trees_equal(n5, n5_again)           # replayable from address
+    assert not trees_equal(n5, n6)             # rounds draw independently
+    zero = dp.gaussian_noise_like(k5, t, 0.0)
+    assert all(not np.asarray(l).any() for l in jax.tree.leaves(zero))
+
+
+def test_stream_tags_disjoint():
+    tags = [TAG_INIT, TAG_ROUND, TAG_PART, TAG_DROP, TAG_DATA, TAG_LAG,
+            dp.TAG_DP, secagg.TAG_SECAGG]
+    assert len(set(tags)) == len(tags)
+
+
+def test_dp_average_cohort_guards():
+    params = [tree_of(i) for i in range(3)]
+    ref = tree_of(9)
+    # no contributor (all seen 0): a complete no-op, nothing spent
+    out, new_ref, stats = dp.dp_average_cohort(
+        params, [0, 0, 0], [True, True, True], ref, [0, 1, 2],
+        clip=1.0, noise_multiplier=0.0, base_key=KEY, round_idx=0)
+    assert stats["applied"] == 0.0 and stats["n_contributors"] == 0
+    assert new_ref is ref
+    assert all(o is p for o, p in zip(out, params))
+    # absent client: untouched identity; zero-seen member still receives
+    out, new_ref, stats = dp.dp_average_cohort(
+        params, [4, 0, 4], [True, True, False], ref, [0, 1, 2],
+        clip=math.inf, noise_multiplier=0.0, base_key=KEY, round_idx=0)
+    assert stats["applied"] == 1.0 and stats["n_contributors"] == 1
+    assert out[2] is params[2]                 # absent: identity
+    assert trees_equal(out[0], out[1])         # members adopt the ref
+    assert trees_equal(out[0], new_ref)
+    # clip=inf, sigma=0, one contributor: new ref ~= the contributor
+    # (ref + (theta - ref), up to fixed-point transport quantization)
+    for a, b in zip(jax.tree.leaves(new_ref), jax.tree.leaves(params[0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2.0 ** -19)
+
+
+def test_dp_average_cohort_deterministic_and_noised():
+    params = [tree_of(i) for i in range(2)]
+    ref = tree_of(9)
+    run = lambda: dp.dp_average_cohort(
+        params, [4, 4], [True, True], ref, [0, 1],
+        clip=0.5, noise_multiplier=0.7, base_key=KEY, round_idx=3)
+    out_a, ref_a, stats_a = run()
+    out_b, ref_b, stats_b = run()
+    assert trees_equal(ref_a, ref_b)           # addressed noise replays
+    assert trees_equal(out_a[0], out_b[0])
+    assert stats_a == stats_b and stats_a["clip_frac"] > 0.0
+    # a different round draws different noise
+    _, ref_c, _ = dp.dp_average_cohort(
+        params, [4, 4], [True, True], ref, [0, 1],
+        clip=0.5, noise_multiplier=0.7, base_key=KEY, round_idx=4)
+    assert not trees_equal(ref_a, ref_c)
+
+
+# ---------------------------------------------------------------------------
+# secagg: server sees only the sum
+# ---------------------------------------------------------------------------
+
+
+def test_secagg_masks_cancel_bitwise():
+    uploads = {2: tree_of(0), 5: tree_of(1), 9: tree_of(2)}
+    cohort = [2, 5, 9]
+    on = secagg.secagg_sum(uploads, cohort, KEY, 7, masked=True)
+    off = secagg.secagg_sum(uploads, cohort, KEY, 7, masked=False)
+    assert trees_equal(on, off)                # masks cancel EXACTLY
+
+
+def test_secagg_dropout_recovery_bitwise():
+    uploads = {2: tree_of(0), 5: tree_of(1), 9: tree_of(2)}
+    cohort = [2, 5, 9]
+    survivors = {u: t for u, t in uploads.items() if u != 5}
+    rec = secagg.secagg_sum(survivors, cohort, KEY, 7, masked=True)
+    plain = secagg.secagg_sum(survivors, [2, 9], KEY, 7, masked=False)
+    assert trees_equal(rec, plain)             # pair masks removed exactly
+
+
+def test_secagg_individual_upload_is_masked():
+    t = tree_of(0)
+    plain = secagg.quantize(t)
+    masked = secagg.masked_upload(t, KEY, 7, 2, [2, 5, 9])
+    for p, m in zip(plain, masked):
+        assert not np.array_equal(p, m)
+        # uniform-on-the-ring: masked words span far beyond any
+        # fixed-point encoding of training-scale values
+        assert np.asarray(m, np.uint64).max() > np.uint64(1) << np.uint64(40)
+
+
+def test_secagg_quantization_error_bound():
+    t = tree_of(3)
+    out = secagg.dequantize(secagg.quantize(t), t)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2.0 ** -(secagg.SCALE_BITS + 1)
+                                   + 1e-9)
+
+
+def test_secagg_rejects_unknown_uploader():
+    with pytest.raises(ValueError, match="not in the mask-agreement"):
+        secagg.secagg_sum({3: tree_of(0)}, [1, 2], KEY, 0)
+    with pytest.raises(ValueError, match="at least one"):
+        secagg.secagg_sum({}, [1, 2], KEY, 0)
+
+
+# ---------------------------------------------------------------------------
+# one audited payload mechanism (the protocol refactor)
+# ---------------------------------------------------------------------------
+
+
+def test_privatize_payload_bitwise_vs_inline_block():
+    """protocol.make_payload's DP path must be bitwise-equal to the
+    pre-PR-9 inline formula for the same key."""
+    k = jax.random.fold_in(KEY, 11)
+    x = jax.random.normal(jax.random.fold_in(KEY, 12), (6, 4, 4, 3))
+    sigma, clip = 0.06, dp.DP_CLIP
+    got = dp.privatize_payload(x, k, sigma, clip)
+    B = x.shape[0]
+    flat = x.reshape(B, -1)
+    norm = jnp.linalg.norm(flat.astype(jnp.float32), axis=1, keepdims=True)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-9))
+    clipped = (flat * scale).reshape(x.shape)
+    noise = protocol.rowwise_normal(k, x.shape)
+    want = (clipped + sigma * clip * noise).astype(x.dtype)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_make_payload_dp_path_still_noises():
+    sched = DiffusionSchedule.linear(60)
+    cut = CutPoint(60, 20)
+    x0, y = tiny_data(0, 6)
+    base = protocol.make_payload(x0, y, KEY, sched, cut)
+    noised = protocol.make_payload(x0, y, KEY, sched, cut,
+                                   dp_sigma=0.06, dp_clip=dp.DP_CLIP)
+    assert not np.array_equal(np.asarray(base.x_ts), np.asarray(noised.x_ts))
+    assert np.array_equal(np.asarray(base.eps_s), np.asarray(noised.eps_s))
+
+
+# ---------------------------------------------------------------------------
+# runtime integration
+# ---------------------------------------------------------------------------
+
+LADDER = dict(policy="bernoulli", p=0.7, drop_p=0.2)
+SIZES = (10, 7, 9)
+
+
+def _run(rounds=4, **cfg_kw):
+    from repro.train.participation import ParticipationConfig
+    cfg_kw.setdefault("participation", ParticipationConfig(**LADDER))
+    cfg_kw.setdefault("fedavg_every", 2)
+    rt = make_runtime(KEY, SIZES, **cfg_kw)
+    reps = rt.run(rounds)
+    return rt, reps
+
+
+def _assert_runtime_bitwise(a, b):
+    assert trees_equal(a.server_params, b.server_params)
+    assert trees_equal(a.server_opt, b.server_opt)
+    assert a.round == b.round and a.dp_epoch == b.dp_epoch
+    assert trees_equal(a._dp_ref, b._dp_ref)
+    for u in a.registry.uids():
+        ra, rb = a.registry.get(u), b.registry.get(u)
+        assert trees_equal(ra.params, rb.params), f"client {u}"
+        assert trees_equal(ra.opt, rb.opt), f"client {u}"
+        assert (ra.seen, ra.window_seen) == (rb.seen, rb.window_seen)
+    if a._accountant is not None:
+        assert np.array_equal(a._accountant._rdp, b._accountant._rdp)
+        assert a._accountant.steps == b._accountant.steps
+
+
+def test_identity_ladder_bitwise():
+    """clip=inf, sigma=0, secagg=off (the neutral PrivacyConfig) must be
+    bitwise-equal to the runtime with no privacy config at all — the
+    disabled subsystem routes through the legacy path untouched."""
+    base, base_reps = _run()
+    neutral, neutral_reps = _run(privacy=PrivacyConfig())
+    _assert_runtime_bitwise(base, neutral)
+    assert neutral._accountant is None and neutral._dp_ref is None
+    assert all(r["dp_epsilon"] == 0.0 and r["dp_epoch"] == 0
+               for r in neutral_reps)
+
+
+def test_privacy_requires_fedavg_boundary():
+    with pytest.raises(ValueError, match="fedavg_every"):
+        make_runtime(KEY, SIZES, privacy=PrivacyConfig(clip=1.0))
+
+
+def test_dp_run_charges_and_reports_monotone_epsilon():
+    rt, reps = _run(privacy=PrivacyConfig(clip=0.5, noise_multiplier=0.8))
+    assert rt.dp_epoch >= 1
+    eps = [r["dp_epsilon"] for r in reps]
+    assert all(math.isfinite(e) for e in eps)
+    assert all(b >= a for a, b in zip(eps, eps[1:]))
+    assert eps[-1] > 0.0
+    # and the DP trajectory actually differs from the non-private one
+    base, _ = _run()
+    assert not trees_equal(
+        base.registry.get(0).params, rt.registry.get(0).params)
+
+
+def test_secagg_on_off_bitwise_at_runtime():
+    cfg = dict(clip=0.5, noise_multiplier=0.8)
+    off, _ = _run(privacy=PrivacyConfig(**cfg, secagg=False))
+    on, _ = _run(privacy=PrivacyConfig(**cfg, secagg=True))
+    _assert_runtime_bitwise(off, on)
+
+
+def test_dp_epoch_fires_callback():
+    rt = make_runtime(KEY, SIZES, fedavg_every=2,
+                      privacy=PrivacyConfig(clip=0.5, noise_multiplier=0.8))
+    fired = []
+    rt.on_dp_epoch = fired.append
+    rt.run(4)
+    assert fired == list(range(1, rt.dp_epoch + 1))
+
+
+def test_checkpoint_v3_resumes_bitwise_with_accountant():
+    privacy = PrivacyConfig(clip=0.5, noise_multiplier=0.8, secagg=True)
+    full, _ = _run(rounds=4, privacy=privacy)
+    half, _ = _run(rounds=2, privacy=privacy)
+    path = os.path.join(tempfile.mkdtemp(), "v3.msgpack")
+    half.save(path)
+    state = ckpt.load(path)
+    assert state["version"] == 3 and state["privacy"] is not None
+    from repro.train.participation import ParticipationConfig
+    cfg = tiny_config(participation=ParticipationConfig(**LADDER),
+                      fedavg_every=2, privacy=privacy)
+    resumed = TrainRuntime.restore(cfg, tiny_init, tiny_apply, path)
+    for i, n in enumerate(SIZES):
+        resumed.attach_data(i, *tiny_data(i, n))
+    resumed.run(2)
+    _assert_runtime_bitwise(full, resumed)
+
+
+def test_v2_checkpoint_still_restores():
+    """A pre-privacy (v2) checkpoint restores into a fresh-privacy
+    runtime; a v3 checkpoint WITH privacy state refuses a disabled
+    config instead of silently dropping the DP stream."""
+    rt, _ = _run()                              # neutral: saves privacy=None
+    sd = rt.state_dict()
+    assert sd["privacy"] is None
+    sd["version"] = 2
+    del sd["privacy"]
+    path = os.path.join(tempfile.mkdtemp(), "v2.msgpack")
+    ckpt.save(path, sd)
+    from repro.train.participation import ParticipationConfig
+    cfg = tiny_config(participation=ParticipationConfig(**LADDER),
+                      fedavg_every=2)
+    restored = TrainRuntime.restore(cfg, tiny_init, tiny_apply, path)
+    assert restored.round == rt.round
+    assert restored._accountant is None and restored.dp_epoch == 0
+    assert trees_equal(restored.server_params, rt.server_params)
+
+    dp_rt, _ = _run(privacy=PrivacyConfig(clip=0.5, noise_multiplier=0.8))
+    path3 = os.path.join(tempfile.mkdtemp(), "v3.msgpack")
+    dp_rt.save(path3)
+    with pytest.raises(ValueError, match="PrivacyConfig is disabled"):
+        TrainRuntime.restore(cfg, tiny_init, tiny_apply, path3)
+
+
+def test_departed_member_recovered_as_secagg_dropout():
+    """A client that trains inside a fedavg window and leaves before the
+    boundary is a SecAgg dropout: the release still applies, recovered
+    bitwise-identically to the maskless aggregation of the same
+    survivors."""
+    from repro.train.participation import ParticipationConfig
+    runs = {}
+    for sa in (False, True):
+        rt = make_runtime(KEY, SIZES, fedavg_every=2,
+                          participation=ParticipationConfig(policy="full"),
+                          privacy=PrivacyConfig(clip=0.5,
+                                                noise_multiplier=0.8,
+                                                secagg=sa))
+        rt.run_round()                          # window opens: all train
+        rt.leave(2)                             # departs mid-window
+        frozen = jax.tree.map(jnp.copy, rt.registry.get(2).params)
+        rt.run_round()                          # boundary: DP release
+        runs[sa] = rt
+        assert rt.dp_epoch == 1
+        # the departed record is frozen: neither contributed nor received
+        assert trees_equal(rt.registry.get(2).params, frozen)
+    _assert_runtime_bitwise(runs[False], runs[True])

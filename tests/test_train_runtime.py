@@ -600,6 +600,41 @@ def test_async_busy_client_sits_out(key):
     assert total > 0                      # uploads eventually land
 
 
+def test_async_leave_discards_orphaned_payload(key):
+    """Regression (PR 9): a uid that leaves with a stale upload in
+    flight and later REJOINS must not receive the orphaned payload —
+    ``leave`` discards the uid's pending entries at departure, so the
+    rejoined client's frozen net stays bitwise-untouched until it
+    trains again."""
+    part = ParticipationConfig(policy="full", lag_p=1.0, lag_max=2)
+    rt = make_runtime(key, sizes=[8, 8], async_mode=True,
+                      participation=part)
+    rt.run_round()
+    assert {int(p["uid"]) for p in rt._pending} == {0, 1}
+    frozen = jax.tree.map(jnp.copy, rt.registry.get(0).params)
+    rt.leave(0)
+    # the orphan is dropped at departure, not parked until delivery
+    assert {int(p["uid"]) for p in rt._pending} == {1}
+    rt.rejoin(0)                               # rejoin BEFORE the due round
+    # the rejoined record is the frozen departed net, bitwise — rejoin
+    # reactivates, it does not reinitialise or deliver anything
+    assert trees_equal(rt.registry.get(0).params, frozen)
+    # run well past the orphan's would-be due round (computed round 0,
+    # lag <= 2): any payload uid 0 ever holds in flight from here on was
+    # computed AFTER the rejoin — the orphan never reappears
+    enqueued, merged = 2, 0
+    for _ in range(4):
+        rep = rt.run_round()
+        enqueued += rep["stragglers"]
+        merged += rep["stale_merges"]
+        assert all(int(p["compute_round"]) >= 1
+                   for p in rt._pending if int(p["uid"]) == 0)
+    merged += rt.drain()
+    # conservation: every upload lands exactly once EXCEPT the orphan,
+    # which was dropped at leave() — neither delivered nor duplicated
+    assert merged == enqueued - 1
+
+
 def test_async_resume_bitwise_with_pending(key, tmp_path):
     """State-dict v2 carries the pending queue: interrupt with uploads
     in flight, restore, finish, drain — bitwise equal to the
