@@ -1,15 +1,50 @@
-"""Shared benchmark plumbing: timing, CSV emission, result persistence."""
+"""Shared benchmark plumbing: timing, CSV emission, result persistence.
+
+Besides the human-readable CSV (``emit``), suites feed a machine-readable
+collector: ``benchmarks.run --json`` brackets every suite with
+``begin_suite``/``end_suite`` so each ``emit`` row and each ``claim``
+verdict lands in a schema-stable document (see run.py:RESULTS_SCHEMA).
+``claim(name, ok, detail)`` is the asserting flavour — it records the
+verdict for the JSON artifact AND raises on failure, so converting a bare
+``assert`` to a claim never weakens a benchmark gate.
+"""
 from __future__ import annotations
 
 import json
 import os
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 
 RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "experiments", "bench")
+
+_ACTIVE: Optional[dict] = None      # suite record under collection
+
+
+def begin_suite(name: str) -> None:
+    """Start collecting rows/claims for one suite (benchmarks.run --json)."""
+    global _ACTIVE
+    _ACTIVE = {"name": name, "rows": [], "claims": [], "wall_s": None}
+
+
+def end_suite(wall_s: float) -> Optional[dict]:
+    """Finish the active suite record and return it (None if never begun)."""
+    global _ACTIVE
+    rec, _ACTIVE = _ACTIVE, None
+    if rec is not None:
+        rec["wall_s"] = wall_s
+    return rec
+
+
+def claim(name: str, ok: bool, detail: str = "") -> None:
+    """Record an asserted benchmark claim; raise if it does not hold."""
+    if _ACTIVE is not None:
+        _ACTIVE["claims"].append(
+            {"name": name, "ok": bool(ok), "detail": detail})
+    if not ok:
+        raise AssertionError(f"benchmark claim failed: {name} ({detail})")
 
 
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
@@ -26,6 +61,10 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    if _ACTIVE is not None:
+        _ACTIVE["rows"].append(
+            {"name": name, "us_per_call": float(us_per_call),
+             "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
 
 

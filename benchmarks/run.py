@@ -1,8 +1,14 @@
 """Benchmark harness entrypoint — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME] \
+        [--json experiments/bench/BENCH_<tag>.json]
 
 Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+``--json`` additionally writes a schema-stable machine-readable results
+document (see RESULTS_SCHEMA below): every emitted row plus every
+asserted ``common.claim`` verdict, grouped per suite with wall time —
+scripts/ci.sh tier-1 drops ``experiments/bench/BENCH_smoke.json`` from
+it so the perf trajectory is populated on every green run.
 Suites:
   collab_round         sequential Alg.-1 loop vs vectorized round engine
   collab_sample        per-request Alg.-2 sampling vs batched sampling engine
@@ -68,24 +74,63 @@ def print_roofline_summary():
     print(f"roofline/summary,0.0,pairs={len(ok)};dominants={doms}")
 
 
+RESULTS_SCHEMA = 1
+# --json document shape (schema-stable; consumed by BENCH_*.json tooling):
+#   {"schema": 1, "generated_by": "benchmarks.run",
+#    "config": {"quick": bool, "only": str|null},
+#    "suites": [{"name": str, "wall_s": float,
+#                "rows":   [{"name", "us_per_call", "derived"}, ...],
+#                "claims": [{"name", "ok", "detail"}, ...]}, ...],
+#    "total_wall_s": float}
+# Written even when a suite raises (partial doc, failed claim recorded),
+# so a red CI run still leaves a machine-readable trail.
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the schema-stable results document")
     args = ap.parse_args()
+
+    doc = {"schema": RESULTS_SCHEMA, "generated_by": "benchmarks.run",
+           "config": {"quick": bool(args.quick), "only": args.only},
+           "suites": [], "total_wall_s": None}
+
+    def write_json():
+        if args.json is None:
+            return
+        os.makedirs(os.path.dirname(os.path.abspath(args.json)),
+                    exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    from benchmarks import common
 
     print("name,us_per_call,derived")
     t0 = time.time()
     import importlib
-    for name in SUITES:
-        if args.only and args.only != name:
-            continue
-        mod = importlib.import_module(f"benchmarks.{name}")
-        ts = time.time()
-        mod.main(quick=args.quick)
-        print(f"{name}/wall,{(time.time() - ts) * 1e6:.0f},")
-    if args.only in (None, "roofline"):
-        print_roofline_summary()
+    try:
+        for name in SUITES:
+            if args.only and args.only != name:
+                continue
+            mod = importlib.import_module(f"benchmarks.{name}")
+            ts = time.time()
+            common.begin_suite(name)
+            try:
+                mod.main(quick=args.quick)
+            finally:
+                rec = common.end_suite(time.time() - ts)
+                if rec is not None:
+                    doc["suites"].append(rec)
+            print(f"{name}/wall,{(time.time() - ts) * 1e6:.0f},")
+        if args.only in (None, "roofline"):
+            print_roofline_summary()
+    finally:
+        doc["total_wall_s"] = time.time() - t0
+        write_json()
     print(f"run/total_wall,{(time.time() - t0) * 1e6:.0f},")
 
 

@@ -45,7 +45,22 @@
 #                              pairwise masks cancel exactly at the
 #                              cohort sum), and the reported epsilon is
 #                              finite and monotone non-decreasing
-#                              (RDP accountant)
+#                              (RDP accountant), AND an observability
+#                              pass (PR 10) in both smokes: an
+#                              obs-enabled replica (--obs-jsonl/
+#                              --trace-out) is bitwise == the plain run
+#                              with identical trace counts, its JSONL
+#                              stream round-trips (one metrics frame per
+#                              report/round), and the Perfetto trace
+#                              decomposes waves/rounds into their stage
+#                              child spans.
+#                              Tier-1 also drops a machine-readable
+#                              benchmark artifact at
+#                              experiments/bench/BENCH_smoke.json
+#                              (benchmarks.run --json; quick
+#                              collab_sample suite) so the perf
+#                              trajectory is populated on every green
+#                              run.
 #   scripts/ci.sh slow       - only the long system/sampler/U-Net tests
 #   scripts/ci.sh <pytest args...>  - passed through unchanged
 set -euo pipefail
@@ -56,7 +71,10 @@ case "${1:-}" in
          PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
            python -m repro.launch.collab_serve --smoke
          PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-           python -m repro.launch.collab_train --smoke;;
+           python -m repro.launch.collab_train --smoke
+         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+           python -m benchmarks.run --quick --only collab_sample \
+             --json experiments/bench/BENCH_smoke.json;;
   slow)  shift; run -m "slow" "$@";;
   *)     run "$@";;
 esac

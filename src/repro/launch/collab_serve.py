@@ -40,12 +40,21 @@ a continuous-admission pass (PR 7): ``policy="continuous"`` output is
 bitwise equal to depth-bucketed output for the same arrival order, the
 steady pass traces zero and adds ZERO new signatures beyond depth's
 menu, and SLO accounting tracks every deadline-carrying request
-(``--slo-s`` sets a default deadline outside the smoke).
+(``--slo-s`` sets a default deadline outside the smoke), and an
+observability pass (obs tentpole): a fully-traced replica
+(JSONL + Perfetto sinks) is bitwise-equal to the untraced run with zero
+extra jit signatures, its JSONL stream round-trips, and its wave spans
+decompose into plan/cache_probe/server_scan/client_scan/straggle_stall
+children.  Outside the smoke, ``--obs-jsonl``/``--trace-out``/
+``--profile-waves`` turn the sinks on for real runs (see repro.obs).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import os
+import tempfile
 from typing import List
 
 import jax
@@ -56,6 +65,7 @@ from repro.configs.ddpm_unet import SMALL
 from repro.core.sample_plan import SampleRequest
 from repro.core.schedules import DiffusionSchedule
 from repro.core.unet import init_unet, unet_apply
+from repro.obs import ObsConfig
 from repro.serve import ServeConfig, ServeRuntime
 
 
@@ -100,8 +110,19 @@ def synth_queue(rng: np.random.Generator, *, clients: int, cuts: List[int],
     return reqs
 
 
+def obs_from_args(args):
+    """ObsConfig from the CLI sink flags, or None when all are off (the
+    structurally-inert default)."""
+    cfg = ObsConfig(jsonl_path=getattr(args, "obs_jsonl", None),
+                    trace_path=getattr(args, "trace_out", None),
+                    profile_waves=getattr(args, "profile_waves", 0) or 0,
+                    profile_dir=getattr(args, "profile_dir", None))
+    return cfg if cfg.active else None
+
+
 def make_runtime(args, sp, cp, apply_fn, sched, key, *, policy=None,
-                 cache=None, pipeline=None, straggle_s=None) -> ServeRuntime:
+                 cache=None, pipeline=None, straggle_s=None,
+                 obs=None) -> ServeRuntime:
     cfg = ServeConfig(
         T=args.T, image_shape=(args.image_size, args.image_size, 3),
         max_wave=args.max_wave,
@@ -111,7 +132,7 @@ def make_runtime(args, sp, cp, apply_fn, sched, key, *, policy=None,
         cache_max_bytes=args.cache_bytes,
         pipeline=(not args.sequential) if pipeline is None else pipeline,
         straggle_s=args.straggle_s if straggle_s is None else straggle_s)
-    return ServeRuntime(cfg, sp, cp, apply_fn, sched, key)
+    return ServeRuntime(cfg, sp, cp, apply_fn, sched, key, obs=obs)
 
 
 def print_report(tag: str, report: dict):
@@ -237,10 +258,64 @@ def smoke(args, queue, sp, cp, apply_fn, sched, key) -> dict:
     assert c_steady["latency_p99_s"] > 0.0, c_steady
     assert len(c_steady["per_request"]) == c_steady["requests"]
 
+    # observability pass (obs tentpole): full tracing + sinks must be a
+    # PURE OBSERVER — an obs-enabled replica of the pipelined straggle
+    # runtime produces bitwise-identical samples, identical cache/call
+    # accounting, and ZERO extra jit signatures, while emitting a
+    # round-trippable JSONL stream and a Perfetto trace whose wave spans
+    # decompose into plan/cache_probe/server_scan/client_scan/
+    # straggle_stall children
+    with tempfile.TemporaryDirectory() as td:
+        jsonl = os.path.join(td, "serve.jsonl")
+        trace = os.path.join(td, "trace.json")
+        obs_rt = make_runtime(
+            args, sp, cp, apply_fn, sched, key,
+            policy="depth", cache=True, pipeline=True, straggle_s=stall,
+            obs=ObsConfig(jsonl_path=jsonl, trace_path=trace))
+        obs_outs, obs_reps = run_passes(obs_rt, queue, n_passes)
+        obs_rt.obs.close()
+        for p in range(n_passes):
+            for a, b in zip(obs_outs[p], pipe_outs[p]):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            for k_ in ("cache_hits", "cache_misses", "requests_from_cache",
+                       "server_calls_physical", "client_calls_physical",
+                       "engine_traces", "signatures_per_bucket"):
+                assert obs_reps[p][k_] == pipe_reps[p][k_], (p, k_)
+        assert obs_rt.traces == pipe.traces, \
+            (obs_rt.traces, pipe.traces)      # zero new jit signatures
+        # JSONL: schema-versioned, one object per line, round-trips
+        records = [json.loads(l) for l in open(jsonl)]
+        assert records and all(r["schema"] == 1 for r in records)
+        kinds = {r["kind"] for r in records}
+        assert {"meta", "metrics", "span"} <= kinds, kinds
+        assert all(json.loads(json.dumps(r)) == r for r in records)
+        n_frames = sum(1 for r in records if r["kind"] == "metrics")
+        assert n_frames == n_passes, (n_frames, n_passes)
+        # Perfetto/Chrome trace: wave spans with the pinned decomposition
+        events = json.load(open(trace))["traceEvents"]
+        waves = [e for e in events if e["name"] == "wave"]
+        assert waves, events
+        by_parent = {}
+        for e in events:
+            by_parent.setdefault(e["args"].get("parent"), set()) \
+                .add(e["name"])
+        kids = by_parent.get(waves[0]["args"]["sid"], set())
+        assert {"plan", "server_scan", "client_scan",
+                "straggle_stall"} <= kids, kids
+        assert any(e["name"] == "cache_probe" for e in events)
+        # every ticket links to its wave's span id
+        wave_sids = {w["args"]["sid"] for w in waves}
+        rows = [row for r in obs_reps for row in r["per_request"]]
+        assert rows and all(row["span_id"] in wave_sids for row in rows)
+    print("smoke/obs: tracing is a pure observer (bitwise outputs, equal "
+          f"accounting, {obs_rt.traces} traces both modes, {n_frames} "
+          "JSONL frames, Perfetto wave decomposition verified)")
+
     print("smoke: OK (cache hits, bitwise warm==cold==fifo, 1 signature "
           "per bucket in steady state, >=30% fewer physical server calls, "
           "pipelined==sequential bitwise under straggle, "
-          "continuous==depth bitwise with zero new signatures)")
+          "continuous==depth bitwise with zero new signatures, "
+          "obs on==off bitwise)")
     return steady
 
 
@@ -292,6 +367,17 @@ def main(argv=None):
     ap.add_argument("--straggle-s", type=float, default=0.0,
                     help="host-side stall in seconds before each wave "
                          "(straggler injection; pipelining hides it)")
+    ap.add_argument("--obs-jsonl", default=None, metavar="PATH",
+                    help="stream schema-versioned metrics+span records "
+                         "to this JSONL file (safe to tail -f)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto/Chrome trace of the wave "
+                         "spans here at exit (load in ui.perfetto.dev)")
+    ap.add_argument("--profile-waves", type=int, default=0, metavar="N",
+                    help="run jax.profiler around the first N waves")
+    ap.add_argument("--profile-dir", default=None,
+                    help="jax.profiler output directory "
+                         "(with --profile-waves)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="CI preset: assert the serve-subsystem contract "
@@ -339,8 +425,10 @@ def main(argv=None):
     if args.smoke:
         return smoke(args, queue, sp, cp, apply_fn, sched, key)
 
-    rt = make_runtime(args, sp, cp, apply_fn, sched, key)
+    rt = make_runtime(args, sp, cp, apply_fn, sched, key,
+                      obs=obs_from_args(args))
     _, reports = run_passes(rt, queue, args.passes, slo_s=args.slo_s)
+    rt.obs.close()
     for i, rep in enumerate(reports):
         print_report(f"serve/pass{i + 1}", rep)
     if args.compare:

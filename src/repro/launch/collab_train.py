@@ -53,11 +53,17 @@ BITWISE equal to the baseline run (the identity ladder), a DP run with
 secagg ON is bitwise equal to the same DP run with secagg OFF (pairwise
 masks cancel exactly in the fixed-point cohort sum), and the reported
 cumulative ε is finite, strictly positive after the first release, and
-monotone non-decreasing across round reports.
+monotone non-decreasing across round reports, and (f) the observability
+pass — an obs-enabled replica (``--obs-jsonl``/``--trace-out``) finishes
+BITWISE equal to the plain run with the same trace count (spans and the
+JSONL sink are pure observers), its JSONL stream round-trips with one
+metrics frame per round, and the Perfetto trace decomposes every round
+into cohort_sample / plan / round_dispatch / fedavg child spans.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import math
 import os
 import tempfile
@@ -68,9 +74,20 @@ import numpy as np
 
 from repro.core.collab import CollabConfig, build_denoiser
 from repro.data.synthetic import SyntheticConfig, make_client_datasets
+from repro.obs import ObsConfig
 from repro.sharding.specs import make_client_mesh
 from repro.train import (ParticipationConfig, PrivacyConfig, TrainConfig,
                          TrainRuntime, participation_tier)
+
+
+def obs_from_args(args):
+    """ObsConfig from the CLI sink flags, or None when all are off (the
+    structurally-inert default)."""
+    cfg = ObsConfig(jsonl_path=getattr(args, "obs_jsonl", None),
+                    trace_path=getattr(args, "trace_out", None),
+                    profile_waves=getattr(args, "profile_rounds", 0) or 0,
+                    profile_dir=getattr(args, "profile_dir", None))
+    return cfg if cfg.active else None
 
 
 def build_model(args, key):
@@ -120,9 +137,10 @@ def make_mesh(args):
     return make_client_mesh(participation_tier(args.clients))
 
 
-def fresh_runtime(args, key, init_one, apply_fn, data) -> TrainRuntime:
+def fresh_runtime(args, key, init_one, apply_fn, data,
+                  obs=None) -> TrainRuntime:
     rt = TrainRuntime(make_train_config(args), init_one, apply_fn, key,
-                      mesh=make_mesh(args))
+                      mesh=make_mesh(args), obs=obs)
     for (x, y) in data:
         rt.register_client(x, y)
     return rt
@@ -302,6 +320,42 @@ def smoke(args) -> dict:
     assert all(b >= a for a, b in zip(eps, eps[1:])), eps
     assert dp_off.dp_epoch > 0 and eps[-1] > 0.0, (dp_off.dp_epoch, eps)
 
+    # (f): the obs pass (observability tentpole).  Full tracing + sinks
+    # must be a PURE OBSERVER: an obs-enabled replica of the baseline
+    # run ends in BITWISE-identical full state (params, opt, registry,
+    # RNG, cursor) with zero extra jit signatures, while streaming a
+    # round-trippable JSONL frame per round and a Perfetto trace whose
+    # round spans decompose into cohort_sample/plan/round_dispatch/
+    # fedavg children.
+    with tempfile.TemporaryDirectory() as td:
+        jsonl = os.path.join(td, "train.jsonl")
+        trace = os.path.join(td, "trace.json")
+        obs_rt = fresh_runtime(args, key, init_one, apply_fn, data,
+                               obs=ObsConfig(jsonl_path=jsonl,
+                                             trace_path=trace))
+        obs_rt.run(args.rounds)
+        obs_rt.obs.close()
+        assert_runtimes_bitwise(obs_rt, full)
+        assert obs_rt.traces == full.traces, (obs_rt.traces, full.traces)
+        records = [json.loads(l) for l in open(jsonl)]
+        assert records and all(r["schema"] == 1 for r in records)
+        assert all(json.loads(json.dumps(r)) == r for r in records)
+        n_frames = sum(1 for r in records if r["kind"] == "metrics")
+        assert n_frames == args.rounds, (n_frames, args.rounds)
+        events = json.load(open(trace))["traceEvents"]
+        round_evs = [e for e in events if e["name"] == "round"]
+        assert len(round_evs) == args.rounds, round_evs
+        by_parent = {}
+        for e in events:
+            by_parent.setdefault(e["args"].get("parent"), set()) \
+                .add(e["name"])
+        want = {"cohort_sample", "plan", "round_dispatch", "fedavg"}
+        assert any(want <= by_parent.get(e["args"]["sid"], set())
+                   for e in round_evs), by_parent
+    print(f"smoke/obs: tracing is a pure observer (bitwise full state, "
+          f"{obs_rt.traces} traces both modes, {n_frames} JSONL frames, "
+          "Perfetto round decomposition verified)")
+
     print(f"smoke: OK ({subset_rounds} strict-subset rounds, "
           f"1 signature per tier over {rt.traces} tiers, "
           f"bitwise resume-at-round-{mid} == uninterrupted; "
@@ -390,6 +444,17 @@ def main(argv=None):
     ap.add_argument("--checkpoint-every", type=int, default=1)
     ap.add_argument("--resume", action="store_true",
                     help="restore --checkpoint (if present) and continue")
+    ap.add_argument("--obs-jsonl", default=None, metavar="PATH",
+                    help="stream schema-versioned metrics+span records "
+                         "to this JSONL file (safe to tail -f)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto/Chrome trace of the round "
+                         "spans here at exit (load in ui.perfetto.dev)")
+    ap.add_argument("--profile-rounds", type=int, default=0, metavar="N",
+                    help="run jax.profiler around the first N rounds")
+    ap.add_argument("--profile-dir", default=None,
+                    help="jax.profiler output directory "
+                         "(with --profile-rounds)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="CI preset: assert the train-runtime contract "
@@ -420,7 +485,8 @@ def main(argv=None):
     cfg = make_train_config(args)
     if args.resume and args.checkpoint and os.path.exists(args.checkpoint):
         rt = TrainRuntime.restore(cfg, init_one, apply_fn, args.checkpoint,
-                                  mesh=make_mesh(args))
+                                  mesh=make_mesh(args),
+                                  obs=obs_from_args(args))
         for uid, (x, y) in enumerate(data):
             if uid in rt.registry:
                 rt.attach_data(uid, x, y)
@@ -432,7 +498,8 @@ def main(argv=None):
             rt.attach_data(args.clients, xj, yj)
         print(f"resumed {args.checkpoint} at round {rt.round}")
     else:
-        rt = fresh_runtime(args, key, init_one, apply_fn, data)
+        rt = fresh_runtime(args, key, init_one, apply_fn, data,
+                           obs=obs_from_args(args))
     print(f"CollaFuse train runtime: k={args.clients} T={args.T} "
           f"t_cut={args.t_cut} denoiser={args.denoiser} "
           f"policy={args.policy}(p={args.p}, drop_p={args.drop_p}) "
@@ -455,6 +522,7 @@ def main(argv=None):
     if args.checkpoint:
         rt.save(args.checkpoint)
         print("checkpoint ->", args.checkpoint)
+    rt.obs.close()
     return rt
 
 

@@ -95,6 +95,29 @@ class PrefixCache:
         self.max_entries = max_entries
         self._entries: "OrderedDict[Hashable, _Entry]" = OrderedDict()
         self.stats = CacheStats()
+        self._c = None               # registry counter mirrors (obs)
+        self._base = {}              # counter totals at last clear()
+
+    def bind_instruments(self, registry) -> None:
+        """Mirror the epoch stats into a metrics registry
+        (repro.obs.metrics.MetricsRegistry): monotone ``cache_*``
+        Counters bumped at the same sites as the stats fields, plus
+        callback Gauges ``cache_entries``/``cache_bytes`` reading live
+        occupancy.  Counters are LIFETIME totals while ``stats`` is
+        per-epoch; a report frame never spans a ``clear()`` (the runtime
+        refuses key rotation mid-frame), so frame deltas of the two
+        agree exactly.  ``verify()`` checks the mirror."""
+        self._c = {f: registry.counter(f"cache_{f}") for f in
+                   ("hits", "misses", "insertions", "evictions",
+                    "rejected")}
+        self._base = {f: c.value for f, c in self._c.items()}
+        registry.gauge("cache_entries", fn=lambda: len(self))
+        registry.gauge("cache_bytes",
+                       fn=lambda: self.stats.bytes_in_use)
+
+    def _mark(self, field: str, n: int = 1) -> None:
+        if self._c is not None:
+            self._c[field].inc(n)
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -111,9 +134,11 @@ class PrefixCache:
         e = self._entries.get(key)
         if e is None:
             self.stats.misses += 1
+            self._mark("misses")
             return None
         self._entries.move_to_end(key)
         self.stats.hits += 1
+        self._mark("hits")
         self.stats.server_calls_saved += e.steps
         return e.handoff
 
@@ -122,6 +147,7 @@ class PrefixCache:
         Re-inserting an existing key refreshes value and recency."""
         if steps <= 0:
             self.stats.rejected += 1
+            self._mark("rejected")
             return False
         nbytes = int(handoff.size * handoff.dtype.itemsize)
         if nbytes > self.max_bytes or self.max_entries == 0:
@@ -129,6 +155,7 @@ class PrefixCache:
             # upfront instead of admitting, flushing LRU neighbors, and
             # polluting insertions/evictions/peak_bytes on the way out
             self.stats.rejected += 1
+            self._mark("rejected")
             return False
         old = self._entries.pop(key, None)
         if old is not None:
@@ -136,6 +163,7 @@ class PrefixCache:
         self._entries[key] = _Entry(handoff, int(steps), nbytes)
         self.stats.bytes_in_use += nbytes
         self.stats.insertions += 1
+        self._mark("insertions")
         self.stats.peak_bytes = max(self.stats.peak_bytes,
                                     self.stats.bytes_in_use)
         self._evict()
@@ -149,6 +177,7 @@ class PrefixCache:
             _, e = self._entries.popitem(last=False)   # LRU end
             self.stats.bytes_in_use -= e.nbytes
             self.stats.evictions += 1
+            self._mark("evictions")
 
     def clear(self):
         """Start a new cache EPOCH: drop every entry and reset the epoch
@@ -168,3 +197,51 @@ class PrefixCache:
         self.stats = CacheStats(
             clears=self.stats.clears + 1,
             cleared_entries=self.stats.cleared_entries + dropped)
+        if self._c is not None:
+            # registry counters are lifetime-monotone; re-baseline so the
+            # counter-vs-epoch-stats mirror (verify) stays checkable
+            self._base = {f: c.value for f, c in self._c.items()}
+
+    def verify(self) -> bool:
+        """Debug-mode integrity check: recount the derived state from
+        the entries themselves and cross-check every invariant the
+        incremental bookkeeping maintains.  O(n) — call it from tests
+        and debug sessions, not the hot path.  Returns True; raises
+        AssertionError naming the first violated invariant.
+
+        Checked: ``bytes_in_use`` equals the sum of resident entry
+        sizes; occupancy respects ``max_bytes``/``max_entries``; every
+        resident entry has positive steps and admissible size;
+        ``peak_bytes`` dominates ``bytes_in_use``; all stats fields are
+        non-negative; and, when ``bind_instruments`` mirrored the stats
+        into a registry, each monotone counter's movement since the
+        epoch baseline equals its epoch stats field."""
+        s = self.stats
+        recount = sum(e.nbytes for e in self._entries.values())
+        assert s.bytes_in_use == recount, \
+            f"bytes_in_use {s.bytes_in_use} != recounted {recount}"
+        assert recount <= self.max_bytes, \
+            f"resident {recount} over max_bytes {self.max_bytes}"
+        if self.max_entries is not None:
+            assert len(self._entries) <= self.max_entries, \
+                f"{len(self._entries)} entries over max {self.max_entries}"
+        for k, e in self._entries.items():
+            assert e.steps > 0, f"resident zero-step entry {k!r}"
+            assert 0 <= e.nbytes <= self.max_bytes, \
+                f"entry {k!r} size {e.nbytes} inadmissible"
+        assert s.peak_bytes >= s.bytes_in_use, \
+            f"peak_bytes {s.peak_bytes} < bytes_in_use {s.bytes_in_use}"
+        for f in ("hits", "misses", "insertions", "evictions", "rejected",
+                  "bytes_in_use", "peak_bytes", "server_calls_saved",
+                  "clears", "cleared_entries"):
+            assert getattr(s, f) >= 0, f"negative stats field {f}"
+        # every resident entry was inserted THIS epoch (clear() empties)
+        assert s.insertions >= len(self._entries), \
+            "more resident entries than epoch insertions"
+        if self._c is not None:
+            for f, c in self._c.items():
+                moved = c.value - self._base[f]
+                assert moved == getattr(s, f), \
+                    (f"registry mirror cache_{f} moved {moved} since the "
+                     f"epoch baseline but stats.{f} == {getattr(s, f)}")
+        return True

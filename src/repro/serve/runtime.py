@@ -107,12 +107,35 @@ core/collab.py's vectorized-round notes):
   otherwise), and it is an overestimate only — the gauge never reports
   a request faster than it was.
 
+* **Observability (obs tentpole).**  Reports are DERIVED VIEWS over the
+  shared metrics registry (repro.obs.metrics): every accumulator the
+  old ``_Frame.acc`` dict and ``CacheStats`` deltas hand-maintained is
+  now a typed Counter (frame = snapshot/diff), latency percentiles run
+  through frame-windowed Histograms with the exact pre-obs float64
+  ``np.percentile`` arithmetic, ``cache_entries``/``cache_bytes`` are
+  callback Gauges, and the jit trace counter is the shared
+  ``RecompileGuard``.  The delta-vs-gauge taxonomy this module's
+  ``_empty_report`` used to document in prose is ENFORCED: every report
+  key is classified in the registry (``_SERVE_REPORT_SCHEMA``) and
+  tests/test_obs.py fails on an unclassified or shape-drifting key.
+  With an active ObsConfig, each wave opens a span decomposed into
+  straggle_stall / plan / cache_probe / server_scan / client_scan
+  children; the wave span closes at OBSERVED completion (the same
+  ready-probe gauge as ticket latency, carrying ``device_wait_s``) and
+  is attributed to the report frame it RETIRES in, exactly like the
+  ticket percentiles.  The obs contract: disabled (default) is
+  structurally inert — NullTracer singleton, zero span allocations, no
+  sink IO, reports and samples bitwise-identical to the pre-obs
+  runtime; enabled never perturbs outputs — samples bitwise-identical
+  to the disabled run with ZERO new jit signatures (pinned by
+  tests/test_obs.py and the collab_serve --smoke obs pass).
+
 Reproducibility contract: the serve path is SYNCHRONOUS and bitwise —
 every mode of this runtime (pipelined or sequential, any scheduler
 policy incl. continuous admission, cache on or off, SLOs tracked or
-not) produces bitwise-identical samples for the same base key and
-arrival order; the async/staleness relaxation lives only in
-train/runtime.py's aggregation, never here.
+not, observability on or off) produces bitwise-identical samples for
+the same base key and arrival order; the async/staleness relaxation
+lives only in train/runtime.py's aggregation, never here.
 
 Remaining open (ROADMAP): a pmap/multi-host request axis,
 host-offloaded cache tiers, deeper in-flight windows than the
@@ -134,8 +157,34 @@ from repro.core.sample_plan import (GroupKey, SamplePlan, SampleRequest,
                                     plan_requests, stable_group_seed)
 from repro.core.sampler import check_engine_plan, make_sample_engine
 from repro.core.schedules import DiffusionSchedule
+from repro.obs import DELTA, GAUGE, ObsConfig, RecompileGuard, Telemetry
+from repro.obs.metrics import Histogram
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import WaveBucket, WaveScheduler
+
+# Delta-vs-gauge classification of every serve report key (the taxonomy
+# _empty_report documents, now enforced by the registry + conformance
+# test).  DELTA keys describe the report frame only (summing frames is
+# meaningful); GAUGE keys are absolute resident state at report time.
+_SERVE_REPORT_SCHEMA = {
+    "requests": DELTA, "waves": DELTA, "buckets": DELTA, "wall_s": DELTA,
+    "req_per_s": DELTA, "samples_per_s": DELTA,
+    "latency_p50_s": DELTA, "latency_p95_s": DELTA, "latency_p99_s": DELTA,
+    "admit_wait_p50_s": DELTA, "admit_wait_p95_s": DELTA,
+    "slo_tracked": DELTA, "slo_misses": DELTA, "slo_miss_rate": DELTA,
+    "per_request": DELTA,
+    "server_calls_physical": DELTA, "server_calls_logical": DELTA,
+    "client_calls_physical": DELTA, "client_calls_logical": DELTA,
+    "padded_model_calls": DELTA,
+    "server_calls_saved_by_dedup": DELTA,
+    "server_calls_saved_by_cache": DELTA,
+    "requests_from_cache": DELTA, "engine_traces": DELTA,
+    "signatures_per_bucket": DELTA, "max_signatures_per_bucket": DELTA,
+    "cache_hits": DELTA, "cache_misses": DELTA, "cache_hit_rate": DELTA,
+    "cache_insertions": DELTA, "cache_evictions": DELTA,
+    "cache_rejected": DELTA,
+    "cache_entries": GAUGE, "cache_bytes": GAUGE,
+}
 
 
 def _key_fingerprint(key) -> bytes:
@@ -190,6 +239,7 @@ class RequestTicket:
     t_dispatch: float = -1.0
     t_retire: float = -1.0
     output: Optional[jnp.ndarray] = None
+    span_id: Optional[int] = None      # its wave's span (None: obs off)
 
     @property
     def latency_s(self) -> float:
@@ -216,32 +266,26 @@ class RequestTicket:
                 "retire_s": rel(self.t_retire),
                 "latency_s": self.latency_s,
                 "admit_wait_s": self.admit_wait_s,
-                "slo_s": self.slo_s, "slo_miss": self.slo_miss}
+                "slo_s": self.slo_s, "slo_miss": self.slo_miss,
+                "span_id": self.span_id}
 
 
 class _Frame:
-    """One reporting interval's accumulators.  process() opens and closes
-    a frame per call; poll-driven serving opens one with start_report()
-    and closes it with finish_report() whenever a report is wanted —
-    tickets retired during the frame are the frame's population (their
-    enqueue may predate it; latency stays honest because timestamps are
-    absolute)."""
+    """One reporting interval: a registry SNAPSHOT plus the frame's
+    retired-ticket population and signature-set detail.  process() opens
+    and closes a frame per call; poll-driven serving opens one with
+    start_report() and closes it with finish_report() whenever a report
+    is wanted — tickets retired during the frame are the frame's
+    population (their enqueue may predate it; latency stays honest
+    because timestamps are absolute).  Every numeric delta the old
+    hand-maintained accumulators tracked is now a counter movement
+    between this snapshot and report time."""
 
-    def __init__(self, cache_stats, traces: int):
-        self.t0 = time.perf_counter()
-        self.acc = {"server_calls_physical": 0, "server_calls_logical": 0,
-                    "client_calls_physical": 0, "client_calls_logical": 0,
-                    "padded_model_calls": 0}
-        self.dedup_saved = 0
-        self.cache_saved = 0
-        self.from_cache = 0
-        self.waves = 0
-        self.n_samples = 0
+    def __init__(self, registry, clock):
+        self.t0 = clock()
+        self.snap = registry.snapshot()
         self.sigs: Dict[str, set] = {}
         self.retired: List[RequestTicket] = []
-        self.cache0 = dataclasses.replace(cache_stats) \
-            if cache_stats is not None else None
-        self.traces0 = traces
 
 
 class ServeRuntime:
@@ -251,7 +295,8 @@ class ServeRuntime:
     persistence IS the subsystem)."""
 
     def __init__(self, config: ServeConfig, server_params, client_params,
-                 apply_fn, sched: DiffusionSchedule, key):
+                 apply_fn, sched: DiffusionSchedule, key,
+                 obs=None):
         if sched.T != config.T:
             raise ValueError(f"schedule T {sched.T} != config T {config.T}")
         self.config = config
@@ -261,18 +306,36 @@ class ServeRuntime:
         self.sched = sched
         self.scheduler = WaveScheduler(config.max_wave, config.policy,
                                        stride=config.server_stride)
+        # -- observability: registry (always live — it IS the report
+        # mechanism), tracer + sinks (only when an ObsConfig is active)
+        self._obs = obs if isinstance(obs, Telemetry) \
+            else Telemetry(obs if isinstance(obs, ObsConfig) else None)
+        self._clock = self._obs.clock
+        self.registry = self._obs.registry
+        self.registry.declare_all(_SERVE_REPORT_SCHEMA)
+        self._c = {name: self.registry.counter(name) for name in (
+            "waves", "n_samples", "requests_retired",
+            "server_calls_physical", "server_calls_logical",
+            "client_calls_physical", "client_calls_logical",
+            "padded_model_calls", "server_calls_saved_by_dedup",
+            "server_calls_saved_by_cache", "requests_from_cache")}
+        self._hist_latency = self.registry.histogram("latency_s")
+        self._hist_wait = self.registry.histogram("admit_wait_s")
         self.cache = PrefixCache(config.cache_max_bytes,
                                  config.cache_max_entries) \
             if config.cache else None
+        if self.cache is not None:
+            self.cache.bind_instruments(self.registry)
+        self.scheduler.bind_instruments(self.registry)
         self._key = key
         self._key_fp = _key_fingerprint(key)
         self._next_rid = 0
-        self.traces = 0            # engine re-traces == XLA compiles
         # continuous-admission state: per-bucket pending tickets and the
-        # (shared) double-buffered in-flight window
+        # (shared) double-buffered in-flight window (each entry carries
+        # its wave span — None while obs is disabled)
         self._pending: "OrderedDict[WaveBucket, Deque[RequestTicket]]" = \
             OrderedDict()
-        self._inflight: "Deque[Tuple[jnp.ndarray, Tuple[RequestTicket, ...]]]" \
+        self._inflight: "Deque[Tuple[jnp.ndarray, Tuple[RequestTicket, ...], object]]" \
             = deque()
         self._frame: Optional[_Frame] = None
 
@@ -281,21 +344,30 @@ class ServeRuntime:
             use_pallas=config.use_pallas, interpret=config.interpret,
             jit=False, server_ddim=config.server_stride > 1, split=True)
 
-        # stage bodies run only when jit (re-)traces — a new table
-        # signature — making these Python counters the compile guard the
-        # smoke asserts on (cache hits on compiled signatures skip them).
-        # Cold traffic now traces TWO stages per signature; steady-state
-        # still traces zero.
-        def counted_server(sp, k, tables):
-            self.traces += 1
-            return raw_server(sp, k, tables)
+        # the shared RecompileGuard (obs/metrics.py): stage bodies run
+        # only when jit (re-)traces — a new table signature — so the
+        # guard's counter is the compile guard the smoke asserts on
+        # (cache hits on compiled signatures skip it).  Cold traffic
+        # traces TWO stages per signature; steady-state traces zero.
+        self._guard = RecompileGuard(self.registry.counter("engine_traces"))
+        self._server_stage = jax.jit(self._guard.wrap(raw_server))
+        self._client_stage = jax.jit(self._guard.wrap(raw_client))
+        self._obs.meta(runtime="serve", policy=config.policy,
+                       max_wave=config.max_wave, T=config.T,
+                       cache=config.cache, pipeline=config.pipeline)
 
-        def counted_client(cp, k, tables, handoff, inject):
-            self.traces += 1
-            return raw_client(cp, k, tables, handoff, inject)
+    @property
+    def traces(self) -> int:
+        """Lifetime engine re-trace (XLA compile) count — the shared
+        RecompileGuard's counter."""
+        return self._guard.count
 
-        self._server_stage = jax.jit(counted_server)
-        self._client_stage = jax.jit(counted_client)
+    @property
+    def obs(self) -> Telemetry:
+        """The runtime's telemetry bundle (registry + tracer + sinks).
+        Long-lived drivers call ``obs.close()`` at shutdown to flush the
+        JSONL stream / Perfetto trace / profiler session."""
+        return self._obs
 
     # -- stable identities -------------------------------------------------
     # Server-noise seeds are sample_plan.stable_group_seed — a digest of
@@ -399,30 +471,34 @@ class ServeRuntime:
         """Open a fresh accounting frame.  process() does this per call;
         poll-driven serving calls it explicitly (submit/poll open one
         lazily if none is open)."""
-        self._frame = _Frame(self.cache.stats if self.cache is not None
-                             else None, self.traces)
+        self._frame = _Frame(self.registry, self._clock)
 
     def finish_report(self) -> Dict:
-        """Close the open frame and return its report.  Legal while
-        requests are still pending/in flight (a long-lived service
-        reports periodically): the frame covers what RETIRED during it;
-        in-flight work lands in the next frame."""
+        """Close the open frame and return its report — a DERIVED VIEW
+        over the metrics registry: counter deltas against the frame's
+        snapshot, percentile windows over the frame's histogram
+        observations, gauge reads at close.  Legal while requests are
+        still pending/in flight (a long-lived service reports
+        periodically): the frame covers what RETIRED during it; in-flight
+        work lands in the next frame."""
         f, self._frame = self._frame, None
         if f is None:
             raise RuntimeError("finish_report without start_report")
-        wall = time.perf_counter() - f.t0
+        reg = self.registry
+        d = lambda name: reg.delta(name, f.snap)
+        wall = self._clock() - f.t0
         done = f.retired
-        lat = np.asarray([t.latency_s for t in done], np.float64)
-        wait = np.asarray([t.admit_wait_s for t in done], np.float64)
-        pct = lambda a, q: float(np.percentile(a, q)) if a.size else 0.0
+        lat = reg.window("latency_s", f.snap)
+        wait = reg.window("admit_wait_s", f.snap)
+        pct = Histogram.percentile
         tracked = [t for t in done if t.slo_s is not None]
         misses = sum(1 for t in tracked if t.slo_miss)
         report = self._empty_report()
         report.update({
-            "requests": len(done), "waves": f.waves,
+            "requests": len(done), "waves": d("waves"),
             "buckets": len(f.sigs), "wall_s": wall,
             "req_per_s": len(done) / wall if wall > 0 else 0.0,
-            "samples_per_s": f.n_samples / wall if wall > 0 else 0.0,
+            "samples_per_s": d("n_samples") / wall if wall > 0 else 0.0,
             "latency_p50_s": pct(lat, 50),
             "latency_p95_s": pct(lat, 95),
             "latency_p99_s": pct(lat, 99),
@@ -431,29 +507,37 @@ class ServeRuntime:
             "slo_tracked": len(tracked), "slo_misses": misses,
             "slo_miss_rate": misses / len(tracked) if tracked else 0.0,
             "per_request": [t.as_row(f.t0) for t in done],
-            **f.acc,
-            "server_calls_saved_by_dedup": f.dedup_saved,
-            "server_calls_saved_by_cache": f.cache_saved,
-            "requests_from_cache": f.from_cache,
-            "engine_traces": self.traces - f.traces0,
+            "server_calls_physical": d("server_calls_physical"),
+            "server_calls_logical": d("server_calls_logical"),
+            "client_calls_physical": d("client_calls_physical"),
+            "client_calls_logical": d("client_calls_logical"),
+            "padded_model_calls": d("padded_model_calls"),
+            "server_calls_saved_by_dedup": d("server_calls_saved_by_dedup"),
+            "server_calls_saved_by_cache": d("server_calls_saved_by_cache"),
+            "requests_from_cache": d("requests_from_cache"),
+            "engine_traces": d("engine_traces"),
             "signatures_per_bucket": {b: len(s)
                                       for b, s in f.sigs.items()},
             "max_signatures_per_bucket": max(
                 (len(s) for s in f.sigs.values()), default=0),
         })
         if self.cache is not None:
-            s, c0 = self.cache.stats, f.cache0
-            d_hits, d_miss = s.hits - c0.hits, s.misses - c0.misses
+            d_hits, d_miss = d("cache_hits"), d("cache_misses")
             report.update({
                 "cache_hits": d_hits, "cache_misses": d_miss,
                 "cache_hit_rate": d_hits / (d_hits + d_miss)
                 if d_hits + d_miss else 0.0,
-                "cache_insertions": s.insertions - c0.insertions,
-                "cache_evictions": s.evictions - c0.evictions,
-                "cache_rejected": s.rejected - c0.rejected,
-                "cache_entries": len(self.cache),
-                "cache_bytes": s.bytes_in_use,
+                "cache_insertions": d("cache_insertions"),
+                "cache_evictions": d("cache_evictions"),
+                "cache_rejected": d("cache_rejected"),
+                "cache_entries": reg.read_gauge("cache_entries"),
+                "cache_bytes": reg.read_gauge("cache_bytes"),
             })
+        self._obs.frame_closed(f.snap, extra={
+            "wall_s": wall, "requests": len(done),
+            "latency_p50_s": report["latency_p50_s"],
+            "latency_p95_s": report["latency_p95_s"],
+            "latency_p99_s": report["latency_p99_s"]})
         return report
 
     # -- wave execution (shared by process and poll) -----------------------
@@ -465,10 +549,10 @@ class ServeRuntime:
         stall plus the next dispatch.  Sleep releases the GIL, so in
         pipeline mode the accelerator keeps chewing the in-flight waves
         underneath it."""
-        deadline = time.perf_counter() + seconds
+        deadline = self._clock() + seconds
         while True:
             self._reap()
-            rem = deadline - time.perf_counter()
+            rem = deadline - self._clock()
             if rem <= 0.0:
                 return
             time.sleep(min(rem, 0.001))
@@ -488,73 +572,107 @@ class ServeRuntime:
             return False
         if not block and not _is_ready(self._inflight[0][0]):
             return False
-        out, tickets = self._inflight.popleft()
-        jax.block_until_ready(out)
-        now = time.perf_counter()
+        out, tickets, wspan = self._inflight.popleft()
+        tr = self._obs.tracer
+        t0w = self._clock()
+        with tr.span("retire", parent=wspan, n_requests=len(tickets)):
+            jax.block_until_ready(out)
+        now = self._clock()
         for j, t in enumerate(tickets):
             t.t_retire = now
             t.output = out[j]
+            self._hist_latency.observe(t.latency_s)
+            self._hist_wait.observe(t.admit_wait_s)
+        self._c["requests_retired"].inc(len(tickets))
         self._frame.retired.extend(tickets)
+        tr.end(wspan, device_wait_s=now - t0w)
         return True
 
     def _dispatch(self, label: str, tickets: List[RequestTicket]) -> None:
         """Plan and dispatch one wave of tickets (all one bucket for
         depth/continuous; one B for fifo).  Stamps admit before planning
         and dispatch after the engine stages are launched; appends the
-        un-materialized output to the in-flight window."""
+        un-materialized output (plus its wave span) to the in-flight
+        window.  With obs enabled the wave span opens here and closes at
+        OBSERVED completion in ``_retire``; its children decompose the
+        host-side work (straggle_stall / plan / cache_probe /
+        server_scan / client_scan)."""
         cfg = self.config
+        tr = self._obs.tracer
+        wspan = tr.start("wave", bucket=label,
+                         wave=self._c["waves"].value,
+                         n_requests=len(tickets),
+                         rids=[t.rid for t in tickets])
+        self._obs.step()
         if cfg.straggle_s > 0.0:
-            self._stall(cfg.straggle_s)
-        now = time.perf_counter()
+            with tr.span("straggle_stall", parent=wspan,
+                         seconds=cfg.straggle_s):
+                self._stall(cfg.straggle_s)
+        now = self._clock()
+        sid = None if wspan is None else wspan.sid
         for t in tickets:
             t.t_admit = now
+            t.span_id = sid
         use_cache = self.cache is not None
-        plan = plan_requests(
-            [t.request for t in tickets], cfg.T, adjusted=cfg.adjusted,
-            n_clients=self.n_clients,
-            server_stride=cfg.server_stride,
-            group_seed_fn=stable_group_seed,
-            # arrival ids grow forever; mask to int31 for the tables
-            # (a seed epoch repeats only after ~2.1e9 requests)
-            request_seeds=[t.rid & 0x7FFFFFFF for t in tickets],
-            lookup_fn=self._lookup if use_cache else None,
-            image_shape=cfg.image_shape if use_cache else None)
-        check_engine_plan(cfg.server_stride > 1, plan)
-        padded = pad_plan(
-            plan,
-            n_groups=self.scheduler.group_tier(plan.n_groups),
-            n_requests=self.scheduler.max_wave,
-            n_inject=self.scheduler.inject_tier(plan.n_hits)
-            if plan.inject is not None else None)
-        handoff = self._server_stage(self.server_params, self._key,
-                                     padded.tables)
-        if use_cache:
-            for g in range(plan.n_groups):
-                # zero-step (ICM) prefixes are uncacheable by design;
-                # don't churn the rejected counter every wave.  The
-                # inserted handoff row may still be an un-materialized
-                # future — size/dtype come from the aval, and a later
-                # wave's hit just chains on the device computation —
-                # so this fill point matches the sequential loop's
-                # exactly and cache behavior stays bitwise identical.
-                if plan.group_steps[g] > 0:
-                    self.cache.insert(
-                        self._cache_key(plan.group_keys[g]),
-                        handoff[g], plan.group_steps[g])
-        out = self._client_stage(self.client_params, self._key,
-                                 padded.tables, handoff, padded.inject)
-        self._inflight.append((out, tuple(tickets)))
-        f = self._frame
+        lookup = self._lookup
+        if use_cache and tr.enabled:
+            # span-per-probe wrapper, installed ONLY when tracing — the
+            # disabled path hands plan_requests the raw bound method
+            def lookup(gk, _raw=self._lookup, _tr=tr, _w=wspan):
+                with _tr.span("cache_probe", parent=_w):
+                    return _raw(gk)
+        with tr.span("plan", parent=wspan, bucket=label):
+            plan = plan_requests(
+                [t.request for t in tickets], cfg.T, adjusted=cfg.adjusted,
+                n_clients=self.n_clients,
+                server_stride=cfg.server_stride,
+                group_seed_fn=stable_group_seed,
+                # arrival ids grow forever; mask to int31 for the tables
+                # (a seed epoch repeats only after ~2.1e9 requests)
+                request_seeds=[t.rid & 0x7FFFFFFF for t in tickets],
+                lookup_fn=lookup if use_cache else None,
+                image_shape=cfg.image_shape if use_cache else None)
+            check_engine_plan(cfg.server_stride > 1, plan)
+            padded = pad_plan(
+                plan,
+                n_groups=self.scheduler.group_tier(plan.n_groups),
+                n_requests=self.scheduler.max_wave,
+                n_inject=self.scheduler.inject_tier(plan.n_hits)
+                if plan.inject is not None else None)
+        with tr.span("server_scan", parent=wspan, n_groups=plan.n_groups):
+            handoff = self._server_stage(self.server_params, self._key,
+                                         padded.tables)
+            if use_cache:
+                for g in range(plan.n_groups):
+                    # zero-step (ICM) prefixes are uncacheable by design;
+                    # don't churn the rejected counter every wave.  The
+                    # inserted handoff row may still be an un-materialized
+                    # future — size/dtype come from the aval, and a later
+                    # wave's hit just chains on the device computation —
+                    # so this fill point matches the sequential loop's
+                    # exactly and cache behavior stays bitwise identical.
+                    if plan.group_steps[g] > 0:
+                        self.cache.insert(
+                            self._cache_key(plan.group_keys[g]),
+                            handoff[g], plan.group_steps[g])
+        with tr.span("client_scan", parent=wspan, n_hits=plan.n_hits):
+            out = self._client_stage(self.client_params, self._key,
+                                     padded.tables, handoff, padded.inject)
+        self._inflight.append((out, tuple(tickets), wspan))
+        c = self._c
         for k_, v in call_accounting(padded).items():
-            f.acc[k_] += v
-        f.dedup_saved += plan.server_steps_saved
-        f.cache_saved += plan.server_steps_saved_by_cache
+            c[k_].inc(v)
+        c["server_calls_saved_by_dedup"].inc(plan.server_steps_saved)
+        c["server_calls_saved_by_cache"].inc(
+            plan.server_steps_saved_by_cache)
         rg = np.asarray(plan.tables.request_group)
-        f.from_cache += int((rg >= plan.n_groups).sum())
-        f.sigs.setdefault(label, set()).add(plan_signature(padded))
-        f.waves += 1
-        f.n_samples += sum(int(t.request.y.shape[0]) for t in tickets)
-        td = time.perf_counter()
+        c["requests_from_cache"].inc(int((rg >= plan.n_groups).sum()))
+        self._frame.sigs.setdefault(label, set()).add(
+            plan_signature(padded))
+        c["waves"].inc()
+        c["n_samples"].inc(
+            sum(int(t.request.y.shape[0]) for t in tickets))
+        td = self._clock()
         for t in tickets:
             t.t_dispatch = td
 
@@ -563,7 +681,7 @@ class ServeRuntime:
         t = RequestTicket(
             rid=self._next_rid, request=r,
             slo_s=r.slo_s if r.slo_s is not None else slo_s,
-            t_enqueue=time.perf_counter() if enqueue_t is None
+            t_enqueue=self._clock() if enqueue_t is None
             else enqueue_t)
         self._next_rid += 1
         return t

@@ -115,6 +115,18 @@ class WaveScheduler:
         self.max_wave = max_wave
         self.policy = policy
         self.stride = stride
+        self._c = None               # admission instruments (obs)
+
+    def bind_instruments(self, registry) -> None:
+        """Admission telemetry (repro.obs.metrics.MetricsRegistry):
+        ``admitted_waves``/``admitted_requests`` count what ``admit``
+        forms, and ``partial_waves`` how many dispatched below
+        ``max_wave`` — the padding-slack signal the continuous policy's
+        latency-vs-throughput trade rides on.  Counters only; admission
+        DECISIONS never read them (telemetry must not steer waves)."""
+        self._c = {name: registry.counter(name) for name in
+                   ("admitted_waves", "admitted_requests",
+                    "partial_waves")}
 
     def bucket_of(self, r: SampleRequest) -> WaveBucket:
         """The compiled-shape family ``r`` belongs to.  fifo keys every
@@ -182,6 +194,11 @@ class WaveScheduler:
         b, q = min(live, key=lambda bq: bq[1][0].rid)
         take = tuple(q.popleft()
                      for _ in range(min(len(q), self.max_wave)))
+        if self._c is not None:
+            self._c["admitted_waves"].inc()
+            self._c["admitted_requests"].inc(len(take))
+            if len(take) < self.max_wave:
+                self._c["partial_waves"].inc()
         return b, take
 
     def group_tier(self, n_scan_groups: int) -> int:

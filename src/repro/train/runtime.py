@@ -112,6 +112,24 @@ serve/runtime.py's, and the mirror image of its queue→engine loop):
   pre-privacy runtime (pinned by tests/test_privacy.py and the CI
   smoke).
 
+* **Observability (obs tentpole).**  Round reports are DERIVED VIEWS
+  over the shared metrics registry (repro.obs): every report key is
+  classified delta-vs-gauge in ``_TRAIN_REPORT_SCHEMA`` (enforced by
+  tests/test_obs.py's conformance test), live runtime state (cursor,
+  roster, pending queue, privacy ledger) is exposed through callback
+  gauges, per-round counters mirror into monotone registry Counters,
+  and the jit trace counter is the shared ``RecompileGuard``.  With an
+  active ObsConfig each round is one report FRAME and one "round" span
+  decomposed into cohort_sample / plan / round_dispatch /
+  barrier_stall / fedavg children (plus a "checkpoint" span in
+  ``run``), streamed to the JSONL/Perfetto sinks.  The obs contract is
+  the serve runtime's exactly: disabled (default) is structurally
+  inert — NullTracer singleton, zero span allocations, no sink IO,
+  reports and params bitwise-identical to the pre-obs runtime; enabled
+  never perturbs training — params/opt/cohorts bitwise-identical with
+  ZERO new jit signatures (pinned by the collab_train --smoke obs
+  pass).
+
 Reproducibility contract (sync vs async): SYNC mode is bitwise — for a
 given base key and registry history every quantity (params, opt,
 cohorts, losses) is reproducible to the bit, straggler injection or
@@ -146,6 +164,7 @@ from repro.core.collab import make_vectorized_round, stack_clients, \
 from repro.core.fedavg import average_cohort, average_stale
 from repro.core.schedules import DiffusionSchedule
 from repro.core.splitting import CutPoint
+from repro.obs import DELTA, GAUGE, ObsConfig, RecompileGuard, Telemetry
 from repro.optim.adamw import AdamWConfig, init_opt_state
 from repro.privacy.accountant import RdpAccountant
 from repro.privacy.dp import TAG_DP, PrivacyConfig, dp_average_cohort
@@ -155,6 +174,25 @@ from repro.train.participation import (TAG_INIT, TAG_PART, TAG_ROUND,
                                        sampling_rate, uid_scores)
 from repro.train.registry import ClientRegistry
 from repro.train.rounds import plan_round
+
+# Delta-vs-gauge classification of every train report key (enforced by
+# the registry + the conformance test in tests/test_obs.py).  DELTA keys
+# describe THIS round only; GAUGE keys are absolute runtime state at
+# report time (cursor, roster, privacy ledger) and must never be summed
+# across rounds.
+_TRAIN_REPORT_SCHEMA = {
+    "round": GAUGE, "n_registered": GAUGE, "n_active": GAUGE,
+    "cohort": DELTA, "cohort_size": DELTA, "strict_subset": DELTA,
+    "tier": DELTA, "padded_client_slots": DELTA,
+    "real_samples": DELTA, "padded_cells": DELTA, "pad_waste_frac": DELTA,
+    "mid_round_drops": DELTA, "engine_traces": DELTA,
+    "signatures_per_tier": GAUGE, "max_signatures_per_tier": GAUGE,
+    "client_loss": DELTA, "server_loss": DELTA,
+    "fedavg_applied": DELTA, "seen_total": GAUGE, "wall_s": DELTA,
+    "stragglers": DELTA, "stale_merges": DELTA, "barrier_stall_s": DELTA,
+    "pending_payloads": GAUGE,
+    "dp_epsilon": GAUGE, "dp_epoch": GAUGE, "dp_clip_frac": GAUGE,
+}
 
 
 def _key_pack(key) -> Dict[str, Any]:
@@ -209,7 +247,7 @@ class TrainRuntime:
     subsystem)."""
 
     def __init__(self, config: TrainConfig, init_one, apply_fn, key,
-                 mesh=None):
+                 mesh=None, obs=None):
         self.config = config
         self.sched = config.sched()
         self.cut = config.cut()
@@ -218,9 +256,33 @@ class TrainRuntime:
         self._key = key
         self.mesh = mesh
         self.registry = ClientRegistry()
+        # -- observability: metrics registry (always live — reports and
+        # sinks derive from it), tracer + sinks (only when active).  The
+        # round report keys are classified delta-vs-gauge up front; the
+        # runtime's live state is exposed through callback gauges so a
+        # JSONL frame always carries the current cursor/roster/ledger.
+        self._obs = obs if isinstance(obs, Telemetry) \
+            else Telemetry(obs if isinstance(obs, ObsConfig) else None)
+        self._clock = self._obs.clock
+        self.metrics = self._obs.registry
+        self.metrics.declare_all(_TRAIN_REPORT_SCHEMA)
+        self._c = {name: self.metrics.counter(name) for name in (
+            "rounds", "real_samples", "padded_cells", "mid_round_drops",
+            "stragglers", "stale_merges")}
+        self.metrics.gauge("round", fn=lambda: self.round)
+        self.metrics.gauge("n_registered", fn=lambda: len(self.registry))
+        self.metrics.gauge("n_active",
+                           fn=lambda: len(self.registry.active_uids()))
+        self.metrics.gauge("pending_payloads",
+                           fn=lambda: len(self._pending))
+        self.metrics.gauge("seen_total", fn=lambda: sum(
+            r.seen for r in self.registry.records()))
+        self.metrics.gauge("dp_epoch", fn=lambda: self.dp_epoch)
+        self.metrics.gauge("dp_epsilon", fn=lambda: (
+            0.0 if self._accountant is None
+            else float(self._accountant.epsilon())))
         self.round = 0                       # cohort cursor
         self.total_steps = 0                 # real (client, batch) cells
-        self.traces = 0                      # engine re-traces == compiles
         self._sigs: Dict[int, set] = {}      # tier -> signatures seen
         # outstanding straggler uploads (async mode): each entry is
         # {uid, params, opt, compute_round, due_round, n_real} — ordered
@@ -256,14 +318,29 @@ class TrainRuntime:
                                     AdamWConfig(lr=config.lr), masked=True,
                                     identity_keyed=True, jit=False)
 
-        def counted(cp, copt, sp, sopt, xs, ys, mask, uids, rkey):
-            # body runs only when jit (re-)traces — a new (tier, nb, B)
-            # signature — making this python counter the compile guard
-            # the CI smoke asserts on (steady cohort churn: zero)
-            self.traces += 1
-            return raw(cp, copt, sp, sopt, xs, ys, mask, uids, rkey)
+        # the shared RecompileGuard (obs/metrics.py): its body runs only
+        # when jit (re-)traces — a new (tier, nb, B) signature — so the
+        # counter is the compile guard the CI smoke asserts on (steady
+        # cohort churn: zero)
+        self._guard = RecompileGuard(self.metrics.counter("engine_traces"))
+        self._engine = jax.jit(self._guard.wrap(raw))
+        self._obs.meta(runtime="train", T=config.T, t_cut=config.t_cut,
+                       fedavg_every=config.fedavg_every,
+                       async_mode=config.async_mode,
+                       privacy=config.privacy.enabled)
 
-        self._engine = jax.jit(counted)
+    @property
+    def traces(self) -> int:
+        """Lifetime engine re-trace (XLA compile) count — the shared
+        RecompileGuard's counter."""
+        return self._guard.count
+
+    @property
+    def obs(self) -> Telemetry:
+        """The runtime's telemetry bundle (registry + tracer + sinks).
+        Long-lived drivers call ``obs.close()`` at shutdown to flush the
+        JSONL stream / Perfetto trace / profiler session."""
+        return self._obs
 
     # -- control plane -----------------------------------------------------
     def register_client(self, x=None, y=None, uid: Optional[int] = None
@@ -388,69 +465,93 @@ class TrainRuntime:
         enqueue instead, async mode) → aggregate → report.  Advances the
         cohort cursor even when the round is empty (no active client, no
         data), so the round→randomness mapping never depends on data
-        availability."""
-        t0 = time.perf_counter()
+        availability.
+
+        With obs enabled each round is one report FRAME over the metrics
+        registry and one "round" span decomposed into cohort_sample /
+        plan / round_dispatch / barrier_stall / fedavg children (the
+        checkpoint span lives in ``run``); disabled, the NullTracer
+        makes all of it structurally inert."""
+        t0 = self._clock()
         cfg = self.config
-        stale_merges = self._deliver_due() if self._pending else 0
-        active = self.registry.active_uids()
-        busy = {int(p["uid"]) for p in self._pending}
-        if busy:
-            # a client whose upload is still in flight sits the round out
-            # — it can't also train (its net is wherever its upload is)
-            active = [u for u in active if u not in busy]
-        cohort = sample_cohort(cfg.participation, self._key, self.round,
-                               active)
-        if cfg.tier_cap is not None and len(cohort) > cfg.tier_cap:
-            # the cap bounds the compiled cohort axis, so it must bound
-            # the cohort itself: keep the tier_cap members with the
-            # smallest participation scores (same addressed draw the
-            # sampler used — deterministic, identity-keyed, fair across
-            # rounds), overflow members sit this round out
-            scores = uid_scores(self._key, TAG_PART, self.round, cohort)
-            order = np.lexsort((np.asarray(cohort), scores))
-            cohort = sorted(int(cohort[i]) for i in order[:cfg.tier_cap])
-        drops = sample_drops(cfg.participation, self._key, self.round,
-                             cohort, cfg.batches_per_round)
-        lags = sample_lags(cfg.participation, self._key, self.round,
-                           cohort)
+        tr = self._obs.tracer
+        snap = self.metrics.snapshot()
+        rspan = tr.start("round", round=self.round)
+        self._obs.step()
+        with tr.span("cohort_sample", parent=rspan):
+            stale_merges = self._deliver_due() if self._pending else 0
+            active = self.registry.active_uids()
+            busy = {int(p["uid"]) for p in self._pending}
+            if busy:
+                # a client whose upload is still in flight sits the round
+                # out — it can't also train (its net is wherever its
+                # upload is)
+                active = [u for u in active if u not in busy]
+            cohort = sample_cohort(cfg.participation, self._key,
+                                   self.round, active)
+            if cfg.tier_cap is not None and len(cohort) > cfg.tier_cap:
+                # the cap bounds the compiled cohort axis, so it must
+                # bound the cohort itself: keep the tier_cap members with
+                # the smallest participation scores (same addressed draw
+                # the sampler used — deterministic, identity-keyed, fair
+                # across rounds), overflow members sit this round out
+                scores = uid_scores(self._key, TAG_PART, self.round,
+                                    cohort)
+                order = np.lexsort((np.asarray(cohort), scores))
+                cohort = sorted(int(cohort[i])
+                                for i in order[:cfg.tier_cap])
+            drops = sample_drops(cfg.participation, self._key, self.round,
+                                 cohort, cfg.batches_per_round)
+            lags = sample_lags(cfg.participation, self._key, self.round,
+                               cohort)
         report = self._empty_report()
-        plan = plan_round(
-            self.registry, cohort, self.round, self._key,
-            n_batches=cfg.batches_per_round, batch_size=cfg.batch_size,
-            image_shape=cfg.image_shape, n_classes=cfg.n_classes,
-            tier_cap=cfg.tier_cap, drops=drops)
+        with tr.span("plan", parent=rspan, cohort_size=len(cohort)):
+            plan = plan_round(
+                self.registry, cohort, self.round, self._key,
+                n_batches=cfg.batches_per_round, batch_size=cfg.batch_size,
+                image_shape=cfg.image_shape, n_classes=cfg.n_classes,
+                tier_cap=cfg.tier_cap, drops=drops)
         report.update({"cohort": list(cohort), "cohort_size": len(cohort),
                        "strict_subset": len(cohort) < len(active),
                        "mid_round_drops": len(drops),
                        "stragglers": len(lags),
                        "stale_merges": stale_merges})
+        self._c["mid_round_drops"].inc(len(drops))
+        self._c["stragglers"].inc(len(lags))
+        self._c["stale_merges"].inc(stale_merges)
         if plan is None:
-            report["fedavg_applied"] = self._maybe_fedavg()
+            with tr.span("fedavg", parent=rspan):
+                report["fedavg_applied"] = self._maybe_fedavg()
             self._update_ema()
             self.round += 1
+            self._c["rounds"].inc()
             report.update(self._dp_report())
             report["pending_payloads"] = len(self._pending)
-            report["wall_s"] = time.perf_counter() - t0
+            report["wall_s"] = self._clock() - t0
+            tr.end(rspan, empty=True)
+            self._obs.frame_closed(snap, extra={
+                "round": self.round - 1, "wall_s": report["wall_s"]})
             return report
 
-        traces0 = self.traces
-        members = [self.registry.get(u) for u in plan.cohort]
-        pad = plan.tier - len(members)
-        cp = stack_clients([m.params for m in members] +
-                           [members[0].params] * pad)
-        co = stack_clients([m.opt for m in members] +
-                           [members[0].opt] * pad)
-        xs, ys, mask, uids = plan.xs, plan.ys, plan.mask, plan.uids
-        if self.mesh is not None:
-            from repro.sharding.specs import shard_cohort_round
-            xs, ys, mask, uids = shard_cohort_round(self.mesh, xs, ys,
-                                                    mask, uids)
-        rkey = jax.random.fold_in(
-            jax.random.fold_in(self._key, TAG_ROUND), self.round)
-        cp, co, self.server_params, self.server_opt, metrics = self._engine(
-            cp, co, self.server_params, self.server_opt, xs, ys, mask,
-            uids, rkey)
-        jax.block_until_ready(self.server_params)
+        with tr.span("round_dispatch", parent=rspan, tier=plan.tier,
+                     cohort_size=len(plan.cohort)):
+            members = [self.registry.get(u) for u in plan.cohort]
+            pad = plan.tier - len(members)
+            cp = stack_clients([m.params for m in members] +
+                               [members[0].params] * pad)
+            co = stack_clients([m.opt for m in members] +
+                               [members[0].opt] * pad)
+            xs, ys, mask, uids = plan.xs, plan.ys, plan.mask, plan.uids
+            if self.mesh is not None:
+                from repro.sharding.specs import shard_cohort_round
+                xs, ys, mask, uids = shard_cohort_round(self.mesh, xs, ys,
+                                                        mask, uids)
+            rkey = jax.random.fold_in(
+                jax.random.fold_in(self._key, TAG_ROUND), self.round)
+            cp, co, self.server_params, self.server_opt, metrics = \
+                self._engine(cp, co, self.server_params, self.server_opt,
+                             xs, ys, mask, uids, rkey)
+            jax.block_until_ready(self.server_params)
         self._sigs.setdefault(plan.tier, set()).add(plan.signature())
 
         stall = 0.0
@@ -460,7 +561,9 @@ class TrainRuntime:
             # round) — then applies every payload as if nobody lagged
             stall = cfg.lag_s * max(lags.values())
             if stall > 0.0:
-                time.sleep(stall)
+                with tr.span("barrier_stall", parent=rspan,
+                             seconds=stall):
+                    time.sleep(stall)
 
         # scatter ONLY the real cohort slots back; pad slots are discarded
         # (the engine left them bitwise-untouched anyway).  In async mode
@@ -487,18 +590,22 @@ class TrainRuntime:
             rec.window_member = True
         cells = mask_np.any(axis=2)                 # (nb, tier)
         self.total_steps += int(cells.sum())
+        self._c["real_samples"].inc(plan.real_samples)
+        self._c["padded_cells"].inc(plan.padded_cells)
 
         report.update(self._losses(metrics, mask_np))
-        report["fedavg_applied"] = self._maybe_fedavg()
+        with tr.span("fedavg", parent=rspan):
+            report["fedavg_applied"] = self._maybe_fedavg()
         self._update_ema()
         self.round += 1
+        self._c["rounds"].inc()
         report.update(self._dp_report())
         report.update({
             "tier": plan.tier, "padded_client_slots": pad,
             "real_samples": plan.real_samples,
             "padded_cells": plan.padded_cells,
             "pad_waste_frac": plan.padded_cells / plan.mask.size,
-            "engine_traces": self.traces - traces0,
+            "engine_traces": self.metrics.delta("engine_traces", snap),
             "signatures_per_tier": {t: len(s)
                                     for t, s in sorted(self._sigs.items())},
             "max_signatures_per_tier": max(len(s)
@@ -506,8 +613,11 @@ class TrainRuntime:
             "seen_total": sum(r.seen for r in self.registry.records()),
             "barrier_stall_s": stall,
             "pending_payloads": len(self._pending),
-            "wall_s": time.perf_counter() - t0,
+            "wall_s": self._clock() - t0,
         })
+        tr.end(rspan, tier=plan.tier)
+        self._obs.frame_closed(snap, extra={
+            "round": self.round - 1, "wall_s": report["wall_s"]})
         return report
 
     def run(self, n_rounds: int, checkpoint_path: Optional[str] = None,
@@ -518,14 +628,17 @@ class TrainRuntime:
         mid-run interruption recoverable."""
         reports = []
         saved_at = -1
+        tr = self._obs.tracer
         for i in range(n_rounds):
             reports.append(self.run_round())
             if checkpoint_path and checkpoint_every > 0 and \
                     (i + 1) % checkpoint_every == 0:
-                self.save(checkpoint_path)
+                with tr.span("checkpoint", round=self.round):
+                    self.save(checkpoint_path)
                 saved_at = i
         if checkpoint_path and saved_at != n_rounds - 1:
-            self.save(checkpoint_path)
+            with tr.span("checkpoint", round=self.round):
+                self.save(checkpoint_path)
         return reports
 
     # -- aggregation -------------------------------------------------------
@@ -666,7 +779,7 @@ class TrainRuntime:
 
     @classmethod
     def restore(cls, config: TrainConfig, init_one, apply_fn, path: str,
-                mesh=None) -> "TrainRuntime":
+                mesh=None, obs=None) -> "TrainRuntime":
         """Rebuild a runtime from a checkpoint: params, opt states,
         registry, cohort cursor, and RNG all resume where they stopped —
         continuing from here is bitwise-equal to never having stopped.
@@ -677,7 +790,7 @@ class TrainRuntime:
             raise ValueError(f"unknown checkpoint version "
                              f"{state.get('version')!r}")
         rt = cls(config, init_one, apply_fn, _key_unpack(state["base_key"]),
-                 mesh=mesh)
+                 mesh=mesh, obs=obs)
         priv = state.get("privacy")
         if priv is not None:
             if not config.privacy.enabled:

@@ -4,6 +4,7 @@ byte and entry bounds, telemetry, and key isolation."""
 import numpy as np
 import pytest
 
+from _hypothesis_compat import hypothesis, st
 from repro.serve.prefix_cache import PrefixCache
 
 
@@ -157,3 +158,128 @@ def test_validation():
         PrefixCache(max_bytes=-1)
     with pytest.raises(ValueError):
         PrefixCache(max_entries=-1)
+
+
+# ---------------------------------------------------------------------------
+# verify(): the O(n) debug integrity check (PR 10)
+# ---------------------------------------------------------------------------
+
+
+def test_verify_clean_cache_passes():
+    c = PrefixCache(max_bytes=256, max_entries=3)
+    assert c.verify()                        # empty cache is consistent
+    c.insert("a", _h(1.0), 3)
+    c.lookup("a")
+    c.lookup("miss")
+    c.insert("big", _h(2.0, n=128), 5)       # 512 B: rejected upfront
+    c.insert("b", _h(3.0), 1)
+    assert c.verify()
+    c.clear()
+    assert c.verify()                        # fresh epoch is consistent
+    c.insert("c", _h(4.0), 2)
+    assert c.verify()
+
+
+def test_verify_catches_corruption():
+    c = PrefixCache(max_bytes=256)
+    c.insert("a", _h(1.0), 3)
+    c.stats.bytes_in_use += 1                # break the byte bookkeeping
+    with pytest.raises(AssertionError, match="bytes_in_use"):
+        c.verify()
+    c.stats.bytes_in_use -= 1
+    assert c.verify()
+    c.stats.peak_bytes = -5                  # break the peak invariant
+    with pytest.raises(AssertionError):
+        c.verify()
+
+
+def test_verify_checks_registry_mirror():
+    from repro.obs import MetricsRegistry
+    reg = MetricsRegistry()
+    c = PrefixCache(max_bytes=256)
+    c.bind_instruments(reg)
+    c.insert("a", _h(1.0), 3)
+    c.lookup("a")
+    c.lookup("miss")
+    assert c.verify()
+    assert reg.counter("cache_hits").value == 1
+    assert reg.read_gauge("cache_entries") == 1
+    assert reg.read_gauge("cache_bytes") == c.stats.bytes_in_use
+    # a counter bumped outside the cache's own mark sites desyncs the
+    # mirror — exactly what verify must catch
+    reg.counter("cache_misses").inc()
+    with pytest.raises(AssertionError, match="mirror"):
+        c.verify()
+
+
+def test_verify_mirror_survives_clear_rebaseline():
+    from repro.obs import MetricsRegistry
+    reg = MetricsRegistry()
+    c = PrefixCache(max_bytes=256)
+    c.bind_instruments(reg)
+    c.insert("a", _h(1.0), 3)
+    c.clear()                                # re-baselines the counters
+    assert c.verify()
+    c.insert("b", _h(2.0), 1)
+    c.lookup("b")
+    assert c.verify()
+    # lifetime counters kept counting across the epoch boundary
+    assert reg.counter("cache_insertions").value == 2
+
+
+# ---------------------------------------------------------------------------
+# Property test: verify() holds under arbitrary op sequences (PR 10)
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    max_bytes=st.sampled_from([0, 32, 64, 320, 1 << 20]),
+    max_entries=st.sampled_from([-1, 0, 1, 3]),     # -1 => unbounded
+    mirrored=st.sampled_from([False, True]),
+)
+def test_property_invariants_hold_under_random_ops(seed, max_bytes,
+                                                   max_entries, mirrored):
+    """Drive a cache through a random insert/lookup/clear sequence and
+    run the full O(n) integrity check after EVERY op: the incremental
+    bookkeeping (bytes, LRU bounds, epoch stats, registry mirror) must
+    agree with a from-scratch recount at all times, for all bound
+    combinations including the degenerate zero-capacity ones."""
+    rng = np.random.default_rng(seed)
+    c = PrefixCache(max_bytes=max_bytes,
+                    max_entries=None if max_entries < 0 else max_entries)
+    if mirrored:
+        from repro.obs import MetricsRegistry
+        c.bind_instruments(MetricsRegistry())
+    keys = [f"k{i}" for i in range(6)]
+    inserted = {}                            # key -> value fill
+    for _ in range(60):
+        op = rng.choice(("insert", "lookup", "clear"),
+                        p=(0.55, 0.35, 0.10))
+        if op == "insert":
+            key = keys[rng.integers(len(keys))]
+            fill = float(rng.integers(100))
+            n = int(rng.choice((4, 8, 16, 64)))   # 16..256 bytes
+            steps = int(rng.integers(0, 4))       # 0 => rejected
+            admitted = c.insert(key, _h(fill, n=n), steps)
+            if admitted:
+                inserted[key] = fill
+            elif key in c:                   # rejected refresh: old stays
+                pass
+            else:
+                inserted.pop(key, None)
+        elif op == "lookup":
+            key = keys[rng.integers(len(keys))]
+            got = c.lookup(key)
+            if got is not None:              # hits are bitwise-exact
+                np.testing.assert_array_equal(
+                    got, np.full(got.shape, inserted[key], np.float32))
+        else:
+            c.clear()
+            inserted.clear()
+        assert c.verify()
+    # terminal cross-checks of the derived occupancy
+    assert c.stats.bytes_in_use <= max(max_bytes, 0)
+    if max_entries >= 0:
+        assert len(c) <= max_entries

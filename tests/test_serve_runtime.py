@@ -644,3 +644,63 @@ def test_rotate_for_epoch_idempotent_and_addressed():
     _assert_same(outs_e1, outs_ref)
     with pytest.raises(ValueError):
         rt.rotate_for_epoch(-1, base)
+
+
+# ---------------------------------------------------------------------------
+# Observability: mid-flight report frames + retire-frame span attribution
+# ---------------------------------------------------------------------------
+
+
+def test_finish_report_with_waves_in_flight_and_span_attribution():
+    """finish_report() is legal while waves are still in flight: the
+    frame covers what RETIRED during it (the dispatch shows up as a wave
+    delta, the requests do not), the in-flight work lands in the NEXT
+    frame, and the wave span — opened in frame N, closed at observed
+    completion in frame N+1 — is attributed to its retire frame, exactly
+    like the ticket latency percentiles (PR-7 audit)."""
+    from repro.obs import ObsConfig
+    cfg = ServeConfig(T=T, image_shape=IMG, max_wave=4,
+                      policy="continuous", pipeline=True)
+    rt = ServeRuntime(cfg, SP, CP, apply_fn, SCHED,
+                      jax.random.PRNGKey(0), obs=ObsConfig(enabled=True))
+
+    # frame 0: one wave submitted, drained, and reported normally
+    rt.submit([_req(0, 4, 0), _req(1, 4, 1)])
+    rt.drain()
+    rep0 = rt.finish_report()
+    assert rep0["requests"] == 2 and rep0["waves"] == 1
+
+    # frame 1: dispatch a wave but close the frame BEFORE it retires
+    tickets_b = rt.submit([_req(2, 4, 0)])
+    bucket, take = rt.scheduler.admit(rt._pending)
+    rt._dispatch(bucket.label(), list(take))
+    assert rt._inflight                      # genuinely still in flight
+    rep1 = rt.finish_report()
+    assert rep1["waves"] == 1                # the dispatch is frame-1 work
+    assert rep1["requests"] == 0             # but nothing retired in it
+    assert rep1["latency_p50_s"] == 0.0      # empty percentile window
+
+    # frame 2: the wave retires here and is reported here
+    rt.drain()
+    rep2 = rt.finish_report()
+    assert rep2["requests"] == 1 and rep2["waves"] == 0
+    assert tickets_b[0].output is not None
+
+    spans = rt.obs.spans()
+    waves = [s for s in spans if s.name == "wave"]
+    assert len(waves) == 2
+    # tickets link to their wave's span id
+    assert tickets_b[0].span_id == waves[1].sid
+    assert {r["span_id"] for r in rep0["per_request"]} == {waves[0].sid}
+    # retire-frame attribution across the frame boundary
+    assert waves[0].frame == 0               # opened + retired in frame 0
+    assert waves[1].frame == 2               # opened frame 1, retired 2
+    # the host-side children of wave B closed inside frame 1; only the
+    # retire probe crossed into frame 2 with the wave span itself
+    kids = {s.name: s for s in spans if s.parent == waves[1].sid}
+    assert {"plan", "server_scan", "client_scan",
+            "retire"} <= set(kids)
+    assert kids["plan"].frame == 1
+    assert kids["client_scan"].frame == 1
+    assert kids["retire"].frame == 2
+    assert waves[1].attrs["device_wait_s"] >= 0.0
